@@ -1,0 +1,92 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from
+benchmarks/results/dryrun.json.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--mesh single|multi]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun.json")
+
+IMPROVE_HINTS = {
+    ("t_memory", "train"): "larger microbatch seq-sharding / less remat traffic",
+    ("t_memory", "prefill"): "fuse attention pipeline; widen KV chunks",
+    ("t_memory", "decode"): "KV-cache quantisation / batch growth to raise intensity",
+    ("t_collective", "train"): "overlap FSDP all-gathers with layer compute; 2D-shard params",
+    ("t_collective", "decode"): "replicate small states; fewer psum hops",
+    ("t_collective", "prefill"): "shard sequence instead of heads to cut gathers",
+    ("t_compute", "train"): "already compute-bound: raise MXU occupancy (bf16 tiles)",
+    ("t_compute", "prefill"): "already compute-bound: skip masked-out causal blocks",
+    ("t_compute", "decode"): "already compute-bound (unusual for decode): check dims",
+}
+
+
+def load(variant="baseline"):
+    with open(RESULTS) as f:
+        data = json.load(f)
+    out = {}
+    for r in data:
+        if r.get("variant", "baseline") != variant:
+            continue
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def fmt_row(r):
+    if r["status"] == "skipped":
+        return None
+    t = r["roofline"]
+    mem = r["memory"]["peak_gb"]
+    fit = "Y" if mem <= 16.0 else "OVER"
+    dom = t["dominant"].replace("t_", "")
+    ratio = r.get("useful_flops_ratio")
+    ratio_s = f"{ratio:.2f}" if ratio else "-"
+    return (f"| {r['arch']} | {r['shape']} | {t['t_compute']:.3e} | "
+            f"{t['t_memory']:.3e} | {t['t_collective']:.3e} | {dom} | "
+            f"{t['roofline_fraction']*100:5.1f}% | {ratio_s} | "
+            f"{mem:7.2f} | {fit} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--variant", default="baseline")
+    args = ap.parse_args()
+    data = load(args.variant)
+    print(f"### Roofline table — {args.mesh}-pod mesh, variant={args.variant}")
+    print()
+    print("| arch | shape | t_compute (s) | t_memory (s) | t_collective (s) "
+          "| bound | roofline frac | 6ND/HLO | peak GB/chip | fits 16GB |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    skips = []
+    for (arch, shape, mesh), r in sorted(data.items()):
+        if mesh != args.mesh:
+            continue
+        row = fmt_row(r)
+        if row is None:
+            skips.append(f"* {arch} x {shape}: {r['reason']}")
+        elif r["status"] == "ok":
+            print(row)
+        else:
+            print(f"| {arch} | {shape} | ERROR: {r.get('error','')[:60]} |")
+    if skips:
+        print("\nSkipped cells (per DESIGN.md §shape-skip):")
+        for s in skips:
+            print(s)
+    print("\nDominant-term improvement hints:")
+    seen = set()
+    for (arch, shape, mesh), r in sorted(data.items()):
+        if mesh != args.mesh or r["status"] != "ok":
+            continue
+        key = (r["roofline"]["dominant"], r["kind"])
+        if key in seen:
+            continue
+        seen.add(key)
+        print(f"* {key[0]} x {key[1]}: {IMPROVE_HINTS.get(key, '-')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Serve a small model with batched requests through the production decode
+path (KV cache + greedy sampling + latency stats).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    serve.main(["--arch", "gemma2-2b", "--smoke", "--batch", "8",
+                "--prompt-len", "12", "--gen", "24", "--cache-len", "64"])

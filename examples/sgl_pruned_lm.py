@@ -1,0 +1,48 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with
+SGL-regularised structured sparsity (the paper's technique as a first-class
+training feature) and show group-level sparsity emerging.
+
+The model is a 12-layer gemma2-style decoder (~100M params); training uses
+the deterministic synthetic LM stream.  Every step applies the exact
+two-level SGL prox to the attention-head / FFN-channel weight groups; the
+printed stats show heads/channels switching off as the run progresses while
+the loss still decreases.
+
+    PYTHONPATH=src python examples/sgl_pruned_lm.py [--steps 200]
+"""
+import argparse
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs.base import get_config
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    # ~100M-param config of the gemma2 family
+    base = get_config("gemma2-2b")
+    cfg = dataclasses.replace(
+        base, name="gemma2-100m", num_layers=12, d_model=512, num_heads=8,
+        num_kv_heads=4, head_dim=64, d_ff=2048, vocab_size=32768,
+        window_size=256)
+    from repro.configs.base import register
+    register(cfg)
+
+    losses = train_mod.main([
+        "--arch", "gemma2-100m", "--steps", str(args.steps),
+        "--global-batch", "8", "--seq", "256", "--lr", "1e-3",
+        "--sgl-lambda", "3e-4", "--sgl-alpha", "1.0",
+        "--log-every", "25",
+    ])
+    assert losses[-1] < losses[0], "loss must decrease"
+    print("OK: loss decreased with SGL structured sparsity active")
+
+
+if __name__ == "__main__":
+    main()

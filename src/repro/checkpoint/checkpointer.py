@@ -1,0 +1,152 @@
+"""Numpy-tree checkpointer: atomic, async, step-indexed, elastic resume.
+
+Layout:  <dir>/step_<N>/
+           manifest.json      tree structure + shapes/dtypes + metadata
+           arrays.npz         flattened leaves (key = leaf index)
+A checkpoint directory is written under a temp name and os.rename'd into
+place (atomic on POSIX), so a crash mid-write can never produce a directory
+that loads.  ``AsyncCheckpointer`` snapshots the (host-local shards of the)
+state synchronously and writes on a worker thread — the train loop resumes
+immediately, matching production TPU checkpointing practice.
+
+Elastic resume: arrays are saved UNSHARDED (gathered); ``restore`` takes the
+target shardings, so a checkpoint written on one mesh restores onto any other
+mesh — data-parallel width can change between runs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+import time
+
+import numpy as np
+import jax
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str, step: int, tree, metadata=None) -> str:
+    leaves, treedef = _flatten(tree)
+    np_leaves = [np.asarray(l) for l in leaves]
+    final = os.path.join(path, f"step_{step:08d}")
+    tmp = final + f".tmp.{os.getpid()}.{int(time.time()*1e6)}"
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "n_leaves": len(np_leaves),
+        "shapes": [list(l.shape) for l in np_leaves],
+        "dtypes": [str(l.dtype) for l in np_leaves],
+        "metadata": metadata or {},
+        "time": time.time(),
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    np.savez(os.path.join(tmp, "arrays.npz"),
+             **{f"leaf_{i}": l for i, l in enumerate(np_leaves)})
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(path: str):
+    if not os.path.isdir(path):
+        return None
+    steps = []
+    for d in os.listdir(path):
+        if d.startswith("step_") and not d.endswith(".tmp") \
+                and os.path.exists(os.path.join(path, d, "manifest.json")):
+            try:
+                steps.append(int(d.split("_")[1].split(".")[0]))
+            except ValueError:
+                pass
+    return max(steps) if steps else None
+
+
+def restore(path: str, step: int, like_tree, shardings=None):
+    """Restore into the structure of ``like_tree``; if ``shardings`` given,
+    device_put each leaf with its sharding (elastic re-mesh)."""
+    d = os.path.join(path, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(d, "arrays.npz"))
+    leaves, treedef = _flatten(like_tree)
+    if manifest["n_leaves"] != len(leaves):
+        raise ValueError(
+            f"checkpoint has {manifest['n_leaves']} leaves, expected "
+            f"{len(leaves)} — structure changed?")
+    out = []
+    sh_leaves = None
+    if shardings is not None:
+        sh_leaves = jax.tree.flatten(
+            shardings, is_leaf=lambda x: hasattr(x, "devices") or
+            hasattr(x, "spec"))[0]
+    for i, ref in enumerate(leaves):
+        arr = data[f"leaf_{i}"]
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"leaf {i}: shape {arr.shape} != {ref.shape}")
+        if sh_leaves is not None:
+            out.append(jax.device_put(arr.astype(ref.dtype), sh_leaves[i]))
+        else:
+            out.append(jax.numpy.asarray(arr, ref.dtype))
+    return jax.tree.unflatten(treedef, out), manifest
+
+
+def retain(path: str, keep: int = 3):
+    """Delete all but the newest ``keep`` checkpoints."""
+    if not os.path.isdir(path):
+        return
+    steps = sorted(
+        int(d.split("_")[1]) for d in os.listdir(path)
+        if d.startswith("step_") and ".tmp" not in d)
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(path, f"step_{s:08d}"), ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Snapshot synchronously (device->host copy), write on a worker thread."""
+
+    def __init__(self, path: str, keep: int = 3):
+        self.path = path
+        self.keep = keep
+        self._q: queue.Queue = queue.Queue(maxsize=2)
+        self._err = None
+        self._t = threading.Thread(target=self._worker, daemon=True)
+        self._t.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, np_tree, metadata = item
+            try:
+                save(self.path, step, np_tree, metadata)
+                retain(self.path, self.keep)
+            except Exception as e:          # surfaced on next save/wait
+                self._err = e
+
+    def save(self, step: int, tree, metadata=None):
+        if self._err:
+            raise self._err
+        np_tree = jax.tree.map(lambda l: np.asarray(l), tree)
+        self._q.put((int(step), np_tree, metadata))
+
+    def wait(self):
+        self._q.join() if False else None
+        while not self._q.empty():
+            time.sleep(0.05)
+        if self._err:
+            raise self._err
+
+    def close(self):
+        self.wait()
+        self._q.put(None)
+        self._t.join(timeout=10)

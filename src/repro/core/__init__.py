@@ -1,0 +1,30 @@
+"""TLFre / DPC — the paper's contribution as a composable JAX library.
+
+Public surface:
+  GroupSpec            group bookkeeping (ragged + padded-dense views)
+  shrink, proj_binf    the decomposition operators (Lemma 3 / Remark 2)
+  lambda_max_sgl, lambda1_max, lambda2_max, lambda_max_nn
+  estimate_dual_ball, gap_safe_ball
+  tlfre_screen, dpc_screen
+  solve_sgl, solve_nn_lasso
+  sgl_path, nn_lasso_path
+"""
+from .groups import (GroupSpec, group_sum, group_norms, group_max_abs,
+                     pad_groups, broadcast_to_features)
+from .fenchel import (shrink, proj_binf, dual_decompose, sgl_dual_feasible,
+                      sgl_feasibility_margin, sgl_primal_objective,
+                      sgl_dual_objective)
+from .lambda_max import (lambda_max_sgl, lambda1_max, lambda2_max,
+                         group_shrink_roots, dual_scaling_sgl)
+from .estimation import DualBall, estimate_dual_ball, gap_safe_ball, normal_vector_sgl
+from .screening import ScreenResult, tlfre_screen, sup_shrink_norm, screen_stats
+from .dpc import (lambda_max_nn, dpc_screen, normal_vector_nn, dual_scaling_nn,
+                  nn_primal_objective, nn_dual_objective)
+from .prox import sgl_prox, nn_lasso_prox
+from .linalg import (spectral_norm, group_spectral_norms, column_norms,
+                     group_frobenius_norms)
+from .solver import SolveResult, solve_sgl, solve_nn_lasso
+from .path import (PathResult, sgl_path, nn_lasso_path, default_lambda_grid,
+                   rejection_ratios_sgl)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,57 @@
+"""DPC screening for nonnegative Lasso (paper Section 5).
+
+Dual feasible set is F = { theta : <x_i, theta> <= 1 } (Thm 19); the
+decomposition C_1 = B_inf + R_-^p (Remark 4) makes feasibility explicit.
+Theorem 20 gives lambda_max = max_i <x_i, y> (signed — not absolute value!),
+Theorem 21 the normal-cone dual ball, Theorem 22 the DPC rule:
+
+    <x_i, o> + r * ||x_i|| < 1   =>   beta_i* = 0.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .estimation import DualBall, estimate_dual_ball
+
+
+def lambda_max_nn(xty: jnp.ndarray):
+    """(lambda_max, argmax feature) — Theorem 20(iv)."""
+    return jnp.max(xty), jnp.argmax(xty)
+
+
+def nn_dual_feasible(xt_theta: jnp.ndarray, tol: float = 0.0):
+    return jnp.all(xt_theta <= 1.0 + tol)
+
+
+def nn_dual_objective(y, theta, lam):
+    d = y - lam * theta
+    return 0.5 * jnp.vdot(y, y) - 0.5 * jnp.vdot(d, d)
+
+
+def nn_primal_objective(X, y, beta, lam):
+    r = y - X @ beta
+    return 0.5 * jnp.vdot(r, r) + lam * jnp.sum(beta)   # beta >= 0 => l1 = sum
+
+
+def normal_vector_nn(X, y, lam_bar, lam_max, theta_bar, i_star) -> jnp.ndarray:
+    """n(lam_bar) of Theorem 21: x_* at lam_max, else y/lam_bar - theta_bar."""
+    at_max = jnp.asarray(lam_bar >= lam_max * (1.0 - 1e-12))
+    return jnp.where(at_max, X[:, i_star], y / lam_bar - theta_bar)
+
+
+def dpc_screen(X, ball: DualBall, col_norms, safety: float = 0.0):
+    """Theorem 22.  Returns feat_keep (p,) bool: False => certified zero."""
+    r = ball.radius * (1.0 + safety)
+    omega = X.T @ ball.center + r * col_norms
+    return omega >= 1.0
+
+
+def dual_scaling_nn(xt_rho: jnp.ndarray):
+    """Largest s in (0,1] with s * rho dual-feasible for (82)."""
+    m = jnp.max(xt_rho)
+    return jnp.where(m > 1.0, 1.0 / m, 1.0)
+
+
+def estimate_dual_ball_nn(y, lam, lam_bar, theta_bar, n_vec) -> DualBall:
+    """Theorem 21(ii) — same algebra as Theorem 12(ii)."""
+    return estimate_dual_ball(y, lam, lam_bar, theta_bar, n_vec)

@@ -1,0 +1,70 @@
+"""Dual-optimum estimation via normal cones (paper Theorem 12 / Theorem 21).
+
+Given the exact dual optimum ``theta_bar`` at a previous path point
+``lam_bar <= lam_max`` and a normal-cone direction ``n`` at it, the dual
+optimum at lam < lam_bar lies in the ball
+
+    || theta*(lam) - (theta_bar + v_perp/2) || <= ||v_perp|| / 2
+
+with v = y/lam - theta_bar and v_perp its component orthogonal to n.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .fenchel import shrink
+from .groups import GroupSpec, broadcast_to_features
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class DualBall:
+    """Ball certified to contain the dual optimum."""
+    center: jnp.ndarray   # (N,)
+    radius: jnp.ndarray   # scalar
+
+    def tree_flatten(self):
+        return (self.center, self.radius), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def normal_vector_sgl(X, y, spec: GroupSpec, lam_bar, lam_max, theta_bar,
+                      g_star) -> jnp.ndarray:
+    """n_alpha(lam_bar) of Theorem 12.
+
+    * lam_bar <  lam_max:  y/lam_bar - theta_bar     (Prop. 11(iii))
+    * lam_bar == lam_max:  X_* S_1(X_*^T y/lam_max)  (the active-group normal)
+    """
+    at_max = jnp.asarray(lam_bar >= lam_max * (1.0 - 1e-12))
+    n_interior = y / lam_bar - theta_bar
+    w = shrink(X.T @ (y / lam_max))
+    w_star = jnp.where(broadcast_to_features(spec, jnp.arange(spec.num_groups)
+                                             ) == g_star, w, 0.0)
+    n_boundary = X @ w_star
+    return jnp.where(at_max, n_boundary, n_interior)
+
+
+def estimate_dual_ball(y, lam, lam_bar, theta_bar, n_vec) -> DualBall:
+    """Theorem 12(ii) (identical algebra for Theorem 21)."""
+    v = y / lam - theta_bar
+    n2 = jnp.vdot(n_vec, n_vec)
+    coef = jnp.where(n2 > 0, jnp.vdot(v, n_vec) / jnp.where(n2 > 0, n2, 1.0), 0.0)
+    v_perp = v - coef * n_vec
+    return DualBall(center=theta_bar + 0.5 * v_perp,
+                    radius=0.5 * jnp.linalg.norm(v_perp))
+
+
+def gap_safe_ball(theta_feasible, primal_value, dual_value, lam) -> DualBall:
+    """Beyond-paper: Gap-Safe ball (Fercoq et al., 2015) reusing the same
+    Theorem-15 sup machinery.  The dual (13) is lam^2-strongly concave, so
+
+        ||theta* - theta|| <= sqrt(2 * gap) / lam .
+    """
+    gap = jnp.maximum(primal_value - dual_value, 0.0)
+    return DualBall(center=theta_feasible, radius=jnp.sqrt(2.0 * gap) / lam)

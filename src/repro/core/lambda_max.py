@@ -1,0 +1,99 @@
+"""Zero-solution parameter region (paper Theorem 8, Lemma 9, Corollary 10).
+
+``rho_g`` is the root of the piecewise-quadratic equation
+
+    || S_1( X_g^T y / rho ) ||^2  ==  (alpha * w_g)^2            (Lemma 9)
+
+with ``w_g = sqrt(n_g)`` in the paper (generalised to arbitrary weights here so
+reduced problems keep exactness).  With ``z`` = |X_g^T y| sorted descending and
+``rho`` in the segment ``(z_{k+1}, z_k]`` exactly the top-k entries are active:
+
+    (k - T) rho^2 - 2 ||z^(k)||_1 rho + ||z^(k)||^2 = 0,   T = (alpha w_g)^2.
+
+phi(rho) = ||S_1(c/rho)||^2 is continuous and strictly decreasing on
+(0, max|c|], phi(max|c|) = 0 and phi(0+) = +inf, so the root exists and is
+unique whenever c != 0.  All segments are solved vectorised and the unique
+in-segment root selected.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .fenchel import shrink
+from .groups import GroupSpec, pad_groups
+
+
+def _padded_segment_roots(z: jnp.ndarray, target_sq: jnp.ndarray) -> jnp.ndarray:
+    """Root of sum_i (z_i/rho - 1)_+^2 == target_sq per row.
+
+    z: (G, n_max) nonnegative (invalid slots zero), target_sq: (G,).
+    Returns rho >= 0; rho == 0 for all-zero rows (no constraint from them).
+    """
+    z = -jnp.sort(-z, axis=1)                       # descending, zeros last
+    cs1 = jnp.cumsum(z, axis=1)                     # ||z^(k)||_1
+    cs2 = jnp.cumsum(z * z, axis=1)                 # ||z^(k)||^2
+    n_max = z.shape[1]
+    k = jnp.arange(1, n_max + 1, dtype=z.dtype)     # (n_max,)
+
+    a = k[None, :] - target_sq[:, None]             # (G, n_max)
+    b = -2.0 * cs1
+    c = cs2
+    disc = jnp.maximum(b * b - 4.0 * a * c, 0.0)
+    sq = jnp.sqrt(disc)
+    tiny = jnp.asarray(1e-30, z.dtype)
+    safe_a = jnp.where(jnp.abs(a) > tiny, a, tiny)
+    r_plus = (-b + sq) / (2.0 * safe_a)
+    r_minus = (-b - sq) / (2.0 * safe_a)
+    # a -> 0 degenerates to the linear equation -2*cs1*rho + cs2 = 0.
+    r_lin = jnp.where(cs1 > 0, cs2 / (2.0 * cs1), 0.0)
+    lin = jnp.abs(a) <= 1e-9 * jnp.maximum(k[None, :], target_sq[:, None])
+
+    hi = z                                           # segment upper bound z_k
+    lo = jnp.concatenate([z[:, 1:], jnp.zeros_like(z[:, :1])], axis=1)  # z_{k+1}
+    span = jnp.maximum(hi[:, :1], 1.0)
+    eps = 1e-9 * span                                # tolerance ~ problem scale
+
+    def in_seg(r):
+        return (r >= lo - eps) & (r <= hi + eps) & (r > 0)
+
+    cand = jnp.where(lin & in_seg(r_lin), r_lin, 0.0)
+    cand = jnp.maximum(cand, jnp.where(~lin & in_seg(r_plus), r_plus, 0.0))
+    cand = jnp.maximum(cand, jnp.where(~lin & in_seg(r_minus), r_minus, 0.0))
+    return jnp.max(cand, axis=1)
+
+
+def group_shrink_roots(spec: GroupSpec, c: jnp.ndarray, alpha) -> jnp.ndarray:
+    """rho_g per group for c = X^T y (Lemma 9, weighted).  Shape (G,)."""
+    z = pad_groups(spec, jnp.abs(c))
+    target_sq = (alpha * spec.weights) ** 2
+    return _padded_segment_roots(z, target_sq)
+
+
+def lambda_max_sgl(spec: GroupSpec, xty: jnp.ndarray, alpha):
+    """(lambda_max^alpha, argmax group) for problem (3) (Theorem 8)."""
+    rho = group_shrink_roots(spec, xty, alpha)
+    return jnp.max(rho), jnp.argmax(rho)
+
+
+def lambda1_max(spec: GroupSpec, xty: jnp.ndarray, lam2):
+    """Corollary 10(i): lambda1_max(lambda2) = max_g ||S_{lam2}(X_g^T y)|| / w_g."""
+    from .groups import group_norms
+    return jnp.max(group_norms(spec, shrink(xty, lam2)) / spec.weights)
+
+
+def lambda2_max(xty: jnp.ndarray):
+    """Corollary 10(ii): lambda2_max = ||X^T y||_inf."""
+    return jnp.max(jnp.abs(xty))
+
+
+def dual_scaling_sgl(spec: GroupSpec, c: jnp.ndarray, alpha) -> jnp.ndarray:
+    """Largest s in (0, 1] such that s * rho is SGL-dual-feasible, where
+    c = X^T rho.  Uses the same piecewise-quadratic roots:  s_g = 1/rho_g.
+
+    Used to turn an arbitrary residual into a feasible dual point for duality
+    gaps (and for the beyond-paper Gap-Safe ball).
+    """
+    rho = group_shrink_roots(spec, c, alpha)
+    s = jnp.where(rho > 1.0, 1.0 / rho, 1.0)
+    return jnp.min(s)

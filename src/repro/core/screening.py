@@ -1,0 +1,115 @@
+"""TLFre: the two-layer screening rules (paper Theorems 15, 16, 17).
+
+Layer 1 (group):    s_g* < alpha*w_g                        => beta_g* = 0
+Layer 2 (feature):  |x_i^T o| + r*||x_i||_2 <= 1            => beta_i* = 0
+
+where ``o``/``r`` are the dual-ball center/radius from Theorem 12 (or the
+beyond-paper Gap-Safe ball) and s_g* is the closed-form sup of the nonconvex
+program sup{ ||S_1(xi)|| : ||xi - c_g|| <= r_g } of Theorem 15:
+
+    ||c||_inf >= 1 :  s* = ||S_1(c)|| + r
+    ||c||_inf <  1 :  s* = (||c||_inf + r - 1)_+
+
+(the boundary case ||c||_inf == 1 is the continuous limit of both branches).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .estimation import DualBall
+from .fenchel import shrink
+from .groups import (GroupSpec, broadcast_to_features, group_max_abs,
+                     group_norms)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class ScreenResult:
+    group_keep: jnp.ndarray    # (G,) bool — False => group certified zero (L1)
+    feat_keep: jnp.ndarray     # (p,) bool — False => feature certified zero (L1|L2)
+    s_sup: jnp.ndarray         # (G,) the Theorem-15 sup values
+    t_sup: jnp.ndarray         # (p,) the Theorem-16 sup values
+
+    def tree_flatten(self):
+        return (self.group_keep, self.feat_keep, self.s_sup, self.t_sup), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def sup_shrink_norm(c_shrink_norm, c_inf, r):
+    """Theorem 15 closed form, branch-free."""
+    return jnp.where(c_inf >= 1.0,
+                     c_shrink_norm + r,
+                     jnp.maximum(c_inf + r - 1.0, 0.0))
+
+
+def tlfre_screen(X, spec: GroupSpec, alpha, ball: DualBall,
+                 col_norms: jnp.ndarray, group_specnorms: jnp.ndarray,
+                 safety: float = 0.0) -> ScreenResult:
+    """Apply (L1) and (L2) given a dual ball.
+
+    col_norms: (p,) column l2 norms of X;  group_specnorms: (G,) ||X_g||_2
+    spectral norms.  ``safety`` inflates the ball radius multiplicatively (use
+    a few ULPs when running in float32; exactness tests use 0 under float64).
+    """
+    r = ball.radius * (1.0 + safety)
+    c = X.T @ ball.center                       # (p,)  — the screening GEMV
+    shr = shrink(c)
+    c_norm = group_norms(spec, shr)
+    c_inf = group_max_abs(spec, c)
+    s = sup_shrink_norm(c_norm, c_inf, r * group_specnorms)      # (G,)
+    group_keep = s >= alpha * spec.weights                       # (L1)
+
+    t = jnp.abs(c) + r * col_norms                               # (p,) Thm 16
+    feat_keep = t > 1.0                                          # (L2)
+    feat_keep = feat_keep & broadcast_to_features(spec, group_keep)
+    return ScreenResult(group_keep, feat_keep, s, t)
+
+
+def screen_stats(spec: GroupSpec, res: ScreenResult):
+    """(#groups discarded, #features discarded by L1, #extra features by L2)."""
+    g_drop = jnp.sum(~res.group_keep)
+    feats_in_dropped = jnp.sum(jnp.where(
+        ~broadcast_to_features(spec, res.group_keep), 1, 0))
+    l2_extra = jnp.sum((~res.feat_keep) &
+                       broadcast_to_features(spec, res.group_keep))
+    return g_drop, feats_in_dropped, l2_extra
+
+
+def tlfre_screen_grid(X, y, spec: GroupSpec, alpha, lambdas, lam_bar,
+                      theta_bar, n_vec, col_norms, group_specnorms,
+                      safety: float = 0.0):
+    """Beyond-paper: evaluate the TLFre rules for a WHOLE remaining lambda
+    grid at once (cross-validation / stability-selection workloads).
+
+    The paper screens one lambda at a time; the dominant cost is the
+    screening GEMV X^T o.  All grid points share theta_bar, so their ball
+    centers differ only along y and v_perp — stacking them turns L GEMVs
+    into ONE (L, N) x (N, p) GEMM, which is the MXU-shaped formulation.
+
+    Returns (group_keep (L, G), feat_keep (L, p), radii (L,)).
+    """
+    lambdas = jnp.asarray(lambdas)
+    v = y[None, :] / lambdas[:, None] - theta_bar[None, :]        # (L, N)
+    n2 = jnp.maximum(jnp.vdot(n_vec, n_vec), 1e-30)
+    coef = (v @ n_vec) / n2                                        # (L,)
+    v_perp = v - coef[:, None] * n_vec[None, :]
+    centers = theta_bar[None, :] + 0.5 * v_perp                   # (L, N)
+    radii = 0.5 * jnp.linalg.norm(v_perp, axis=1) * (1.0 + safety)
+
+    C = centers @ X                                                # (L, p)
+    shr = shrink(C)
+    c_norm = jax.vmap(lambda r: group_norms(spec, r))(shr)         # (L, G)
+    c_inf = jax.vmap(lambda r: group_max_abs(spec, r))(jnp.abs(C))
+    r_g = radii[:, None] * group_specnorms[None, :]
+    s = sup_shrink_norm(c_norm, c_inf, r_g)
+    group_keep = s >= alpha * spec.weights[None, :]
+
+    t = jnp.abs(C) + radii[:, None] * col_norms[None, :]
+    feat_keep = (t > 1.0) & group_keep[:, spec.group_ids]
+    return group_keep, feat_keep, radii

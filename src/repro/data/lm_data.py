@@ -1,0 +1,52 @@
+"""Deterministic synthetic LM data pipeline.
+
+Produces an infinite, seekable stream of (tokens, labels) batches: batch i is
+a pure function of (seed, i), so restarts resume EXACTLY (fault tolerance:
+the data pipeline is stateless given the step index — no iterator state in
+checkpoints) and elastic re-sharding just re-slices the same global batch.
+
+The token distribution is a Zipf-ish unigram mix with Markov bigram structure
+so cross-entropy has learnable signal (loss decreases measurably within a few
+hundred steps at 100M scale).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+class SyntheticLM:
+    def __init__(self, vocab_size: int, seq_len: int, global_batch: int,
+                 seed: int = 0):
+        self.vocab = vocab_size
+        self.seq = seq_len
+        self.batch = global_batch
+        self.seed = seed
+        rng = np.random.default_rng(seed)
+        # low-rank bigram logits give the stream learnable structure
+        r = 16
+        self._u = rng.standard_normal((vocab_size, r)).astype(np.float32)
+        self._v = rng.standard_normal((r, vocab_size)).astype(np.float32)
+
+    def batch_at(self, step: int):
+        """Global batch for ``step`` — pure function of (seed, step)."""
+        rng = np.random.default_rng((self.seed, step))
+        B, S, V = self.batch, self.seq, self.vocab
+        toks = np.empty((B, S + 1), np.int64)
+        toks[:, 0] = rng.integers(0, V, B)
+        # blockwise Markov sampling (vectorised over batch)
+        for t in range(S):
+            logits = self._u[toks[:, t]] @ self._v    # (B, V)
+            gumbel = rng.gumbel(size=logits.shape).astype(np.float32)
+            toks[:, t + 1] = np.argmax(logits / 2.0 + gumbel, axis=-1)
+        return {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+                "labels": jnp.asarray(toks[:, 1:], jnp.int32)}
+
+    def fast_batch_at(self, step: int):
+        """iid unigram batch (no Markov loop) — for throughput tests."""
+        rng = np.random.default_rng((self.seed, step))
+        B, S, V = self.batch, self.seq, self.vocab
+        z = rng.zipf(1.3, size=(B, S + 1)).clip(1, V) - 1
+        return {"tokens": jnp.asarray(z[:, :-1], jnp.int32),
+                "labels": jnp.asarray(z[:, 1:], jnp.int32)}

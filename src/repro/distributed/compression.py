@@ -1,0 +1,85 @@
+"""Int8 error-feedback gradient compression (DCN/pod-axis trick).
+
+At 2+ pods the gradient all-reduce crosses the data-center network, which is
+~10x slower than ICI.  Standard mitigation: quantise the cross-pod summand
+to int8 with a per-block scale and carry the quantisation error into the
+next step (error feedback keeps SGD/Adam unbiased in the long run —
+Karimireddy et al., 2019).
+
+Usage inside a train step (pure function of the carried error state):
+
+    comp, err = compress_tree(grads, err)        # int8 + scales
+    grads     = decompress_tree(comp)            # after the pod all-reduce
+
+The quantiser is blockwise (BLOCK values share one f32 scale) so the wire
+format is 1 byte/value + 4/BLOCK bytes of scale = ~4x smaller than f32.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+class Compressed(NamedTuple):
+    q: jnp.ndarray          # int8 payload, padded flat
+    scale: jnp.ndarray      # f32 per-block scales
+    n: int                  # original element count (static)
+    shape: tuple            # original shape (static)
+
+
+def _pad_len(n):
+    return -(-n // BLOCK) * BLOCK
+
+
+def compress(x: jnp.ndarray, err: jnp.ndarray | None = None):
+    """Quantise x + err (error feedback).  Returns (Compressed, new_err)."""
+    shape = x.shape
+    n = x.size
+    flat = x.reshape(-1).astype(jnp.float32)
+    if err is not None:
+        flat = flat + err.reshape(-1)
+    pad = _pad_len(n)
+    flat_p = jnp.pad(flat, (0, pad - n)).reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(flat_p), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(flat_p / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    new_err = (flat_p - deq).reshape(-1)[:n].reshape(shape)
+    return Compressed(q.reshape(-1), scale[:, 0], n, tuple(shape)), new_err
+
+
+def decompress(c: Compressed) -> jnp.ndarray:
+    deq = c.q.reshape(-1, BLOCK).astype(jnp.float32) * c.scale[:, None]
+    return deq.reshape(-1)[:c.n].reshape(c.shape)
+
+
+def compress_tree(tree, err_tree=None):
+    leaves, treedef = jax.tree.flatten(tree)
+    errs = (jax.tree.flatten(err_tree)[0] if err_tree is not None
+            else [None] * len(leaves))
+    out = [compress(l, e) for l, e in zip(leaves, errs)]
+    comp = treedef.unflatten([c for c, _ in out])
+    new_err = treedef.unflatten([e for _, e in out])
+    return comp, new_err
+
+
+def decompress_tree(comp_tree):
+    return jax.tree.map(decompress, comp_tree,
+                        is_leaf=lambda x: isinstance(x, Compressed))
+
+
+def init_error_tree(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def wire_bytes(tree) -> int:
+    """Bytes on the DCN for the compressed tree (vs 4x for f32)."""
+    total = 0
+    for l in jax.tree.leaves(tree):
+        n = l.size
+        total += _pad_len(n) + 4 * (_pad_len(n) // BLOCK)
+    return total

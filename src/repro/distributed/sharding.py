@@ -1,0 +1,131 @@
+"""Sharding rules: params (ZeRO-3 + TP), batches (DP), caches (DP/TP/SP).
+
+All rules degrade gracefully: a dim is sharded only when divisible by the
+candidate axis size, so the same code lowers on (16,16), (2,16,16) and a
+1-device CPU mesh.
+"""
+from __future__ import annotations
+
+from typing import Mapping
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..models import model as model_lib
+from ..models.attention import KVCache, MLACache
+from ..models.ssm import MambaCache
+from ..models.xlstm import MLSTMCache, SLSTMCache
+
+
+def mesh_shape_dict(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def dp_axes(mesh_shape: Mapping[str, int]):
+    return tuple(a for a in ("pod", "data") if a in mesh_shape)
+
+
+def _div(n, mesh_shape, axes) -> bool:
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = int(np.prod([mesh_shape.get(a, 1) for a in axes]))
+    return size > 1 and n % size == 0
+
+
+def batch_pspec(cfg, shape_name, mesh_shape, batch_size: int):
+    """Shardings for the input batch dict (structure-matched later)."""
+    dp = dp_axes(mesh_shape)
+    bdim = dp if _div(batch_size, mesh_shape, dp) else None
+    return {
+        "tokens": P(bdim, None),
+        "labels": P(bdim, None),
+        "patches": P(bdim, None, None),
+        "frames": P(bdim, None, None),
+    }
+
+
+def _kv_cache_pspec(mesh_shape, batch, seq, kv_heads):
+    dp = dp_axes(mesh_shape)
+    if _div(batch, mesh_shape, dp):
+        b, s = dp, None
+    elif _div(seq, mesh_shape, dp):
+        b, s = None, dp            # sequence-parallel cache (long-context)
+    else:
+        b = s = None
+    h = "model" if _div(kv_heads, mesh_shape, "model") else None
+    if h is None and s is None and _div(seq, mesh_shape, "model"):
+        s = "model"                # fall back: shard seq over model axis
+    return P(b, s, h, None)
+
+
+def cache_pspecs(cfg, batch: int, cache_len: int, mesh_shape):
+    """PartitionSpec tree matching model_lib.cache_shapes."""
+    dp = dp_axes(mesh_shape)
+    bdim = dp if _div(batch, mesh_shape, dp) else None
+    md = lambda n: "model" if _div(n, mesh_shape, "model") else None
+    d_in = cfg.ssm_expand * cfg.d_model
+    H_ssm = d_in // cfg.ssm_head_dim
+    H_x = cfg.num_heads
+    dh_x = 2 * cfg.d_model // max(H_x, 1)
+
+    def leaf_spec(leaf):
+        return P(*([None] * leaf.ndim))
+
+    def kind_spec(kind):
+        if kind in ("attn", "global", "dense_ffn_attn", "moe", "local",
+                    "shared"):
+            if cfg.mla and kind != "shared":
+                seq_ax = None
+                if bdim is None and _div(cache_len, mesh_shape, dp):
+                    seq_ax = dp
+                return MLACache(P(bdim, seq_ax, None), P(bdim, seq_ax, None))
+            seq = cfg.window_size if kind == "local" else cache_len
+            return KVCache(
+                _kv_cache_pspec(mesh_shape, batch, seq, cfg.num_kv_heads),
+                _kv_cache_pspec(mesh_shape, batch, seq, cfg.num_kv_heads))
+        if kind in ("mamba",):
+            conv_dim = d_in + 2 * cfg.ssm_state
+            return MambaCache(P(bdim, None, md(conv_dim)),
+                              P(bdim, md(H_ssm), None, None))
+        if kind == "mlstm":
+            return MLSTMCache(P(bdim, md(H_x), None, None),
+                              P(bdim, md(H_x), None),
+                              P(bdim, md(H_x)),
+                              P(bdim, None, md(2 * cfg.d_model)))
+        if kind == "slstm":
+            s = P(bdim, md(H_x), None)
+            return SLSTMCache(s, s, s, s)
+        raise ValueError(kind)
+
+    def pattern_entry(kind):
+        if kind == "mamba":
+            return {"mamba": kind_spec("mamba")}
+        if kind == "mamba+shared_attn":
+            return {"mamba": kind_spec("mamba"), "shared": kind_spec("shared")}
+        return kind_spec(kind)
+
+    if cfg.family == "encdec":
+        dec = {"self": kind_spec("shared")}
+        stacked = jax.tree.map(lambda s: P(None, *s), dec,
+                               is_leaf=lambda x: isinstance(x, P))
+        seq_ax = None
+        if bdim is None and _div(cache_len, mesh_shape, dp):
+            seq_ax = dp
+        return {"decoder": stacked,
+                "enc_out": P(bdim, seq_ax, None)}
+
+    period = {f"l{i}": pattern_entry(kind)
+              for i, kind in enumerate(cfg.block_pattern)}
+    stacked = jax.tree.map(lambda s: P(None, *s), period,
+                           is_leaf=lambda x: isinstance(x, P))
+    return {"blocks": stacked,
+            "prologue": [pattern_entry(kind) for kind in cfg.prologue]}
+
+
+def named(mesh, spec_tree):
+    from jax.sharding import NamedSharding
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

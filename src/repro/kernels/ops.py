@@ -1,0 +1,44 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On TPU the real kernels run; everywhere else (this CPU container) they run in
+``interpret=True`` mode, which executes the kernel body in Python/XLA for
+correctness validation.  ``force_interpret`` lets tests pin the mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .xtv import xtv_pallas
+from .screen_norms import screen_norms_pallas
+from .sgl_prox import sgl_prox_pallas
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def xtv(X, v, interpret: bool | None = None):
+    """out = X^T v, float32.  The screening GEMV."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return xtv_pallas(X, v, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def screen_norms(c_pad, mask, interpret: bool | None = None):
+    """(||S_1(c_g)||^2, ||c_g||_inf) fused, float32."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return screen_norms_pallas(c_pad, mask, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sgl_prox_padded(v_pad, mask, t_l1, t_group, interpret: bool | None = None):
+    """Fused SGL prox on the padded layout, float32."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return sgl_prox_pallas(v_pad, mask, t_l1, t_group, interpret=interpret)

@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: fused screening statistics.
+
+After the GEMV c = X^T o, TLFre needs per group g:
+    ||S_1(c_g)||^2   (Theorem 15 branch 1)
+    ||c_g||_inf      (Theorem 15 branch selection + branch 2)
+and per feature |c_i| (Theorem 16 — already available as |c|).
+
+A naive jnp implementation reads the p-length vector from HBM three times
+(shrink, square-reduce, max-reduce).  This kernel fuses all of it into ONE
+streaming pass over the padded (G, n_max) layout: each grid step loads a
+(BG, n_max) tile into VMEM, applies the mask, and writes the two (BG, 1)
+statistics.  n_max is padded to a multiple of 128 lanes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BG = 256
+
+
+def _screen_norms_kernel(c_ref, m_ref, s_ref, i_ref):
+    c = jnp.where(m_ref[...], c_ref[...].astype(jnp.float32), 0.0)
+    a = jnp.abs(c)
+    sh = jnp.maximum(a - 1.0, 0.0)
+    s_ref[...] = jnp.sum(sh * sh, axis=1, keepdims=True)
+    i_ref[...] = jnp.max(a, axis=1, keepdims=True)
+
+
+def screen_norms_pallas(c_pad: jnp.ndarray, mask: jnp.ndarray, *,
+                        block_g: int = DEFAULT_BG, interpret: bool = False):
+    """c_pad: (G, n_max), mask: (G, n_max) -> (snorm2 (G,), cinf (G,)) f32."""
+    G, n_max = c_pad.shape
+    Gp = -(-G // block_g) * block_g
+    nl = -(-n_max // 128) * 128
+    cp = jnp.pad(c_pad, ((0, Gp - G), (0, nl - n_max)))
+    mp = jnp.pad(mask, ((0, Gp - G), (0, nl - n_max)))
+
+    snorm2, cinf = pl.pallas_call(
+        _screen_norms_kernel,
+        grid=(Gp // block_g,),
+        in_specs=[
+            pl.BlockSpec((block_g, nl), lambda i: (i, 0)),
+            pl.BlockSpec((block_g, nl), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_g, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_g, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Gp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((Gp, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cp, mp)
+    return snorm2[:G, 0], cinf[:G, 0]

@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: fused two-level SGL prox (soft-threshold -> group scale).
+
+One FISTA iteration applies  prox_{t(lam1 Omega1 + lam2 Omega2)}  to a
+p-vector.  Unfused, that is 3 HBM passes (shrink; group-norm reduce; scale).
+Fused on the padded (G, n_max) layout it is a single VMEM-resident pass:
+
+    u     = S_{t_l1}(v)            elementwise
+    n_g   = ||u_g||_2              row reduce
+    out_g = (1 - t_group_g/n_g)_+ u_g   row broadcast
+
+Grid over G blocks; each step holds a (BG, n_max) tile + two (BG, 1) columns.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BG = 256
+
+
+def _sgl_prox_kernel(v_ref, m_ref, tg_ref, tl1_ref, o_ref):
+    t_l1 = tl1_ref[0, 0]
+    v = jnp.where(m_ref[...], v_ref[...].astype(jnp.float32), 0.0)
+    u = jnp.sign(v) * jnp.maximum(jnp.abs(v) - t_l1, 0.0)
+    norms = jnp.sqrt(jnp.sum(u * u, axis=1, keepdims=True))
+    tg = tg_ref[...].astype(jnp.float32)
+    scale = jnp.where(norms > tg,
+                      1.0 - tg / jnp.where(norms > 0, norms, 1.0), 0.0)
+    o_ref[...] = u * scale
+
+
+def sgl_prox_pallas(v_pad: jnp.ndarray, mask: jnp.ndarray, t_l1, t_group,
+                    *, block_g: int = DEFAULT_BG, interpret: bool = False
+                    ) -> jnp.ndarray:
+    """v_pad: (G, n_max), mask, t_l1 scalar, t_group: (G,) -> (G, n_max) f32."""
+    G, n_max = v_pad.shape
+    Gp = -(-G // block_g) * block_g
+    nl = -(-n_max // 128) * 128
+    vp = jnp.pad(v_pad, ((0, Gp - G), (0, nl - n_max)))
+    mp = jnp.pad(mask, ((0, Gp - G), (0, nl - n_max)))
+    tgp = jnp.pad(jnp.asarray(t_group, jnp.float32), (0, Gp - G))[:, None]
+    tl1 = jnp.asarray(t_l1, jnp.float32).reshape(1, 1)
+
+    out = pl.pallas_call(
+        _sgl_prox_kernel,
+        grid=(Gp // block_g,),
+        in_specs=[
+            pl.BlockSpec((block_g, nl), lambda i: (i, 0)),
+            pl.BlockSpec((block_g, nl), lambda i: (i, 0)),
+            pl.BlockSpec((block_g, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_g, nl), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Gp, nl), jnp.float32),
+        interpret=interpret,
+    )(vp, mp, tgp, tl1)
+    return out[:G, :n_max]

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: tiled GEMV  out = X^T v.
+
+This is the dominant FLOP cost of one screening pass (paper Theorem 17: the
+rule evaluation is ``X^T o`` plus O(p) elementwise work).  The GEMV is
+memory-bound (arithmetic intensity ~= 1 FLOP/byte of X), so the kernel is a
+single streaming pass over X with fp32 accumulation:
+
+  grid = (p / BP, N / BN); the p-axis is the outer (parallel) grid dim, the
+  N-axis the inner (sequential, accumulating) dim.  Each step loads an
+  (BN, BP) tile of X and a (BN, 1) sliver of v into VMEM and issues a
+  (1, BN) @ (BN, BP) MXU matmul into the fp32 out tile.
+
+Block defaults (BN=512, BP=512) hold a 512x512 bf16 tile = 512 KiB in VMEM —
+well under the ~16 MiB/core budget, leaving room for double buffering.
+Both dims are multiples of the (8, 128) TPU tiling and the 128-wide MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BN = 512
+DEFAULT_BP = 512
+
+
+def _xtv_kernel(x_ref, v_ref, o_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    v = v_ref[...]
+    # (1, BN) @ (BN, BP) -> (1, BP) on the MXU, fp32 accumulation.
+    o_ref[...] += jax.lax.dot_general(
+        v.T, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def xtv_pallas(X: jnp.ndarray, v: jnp.ndarray, *, block_n: int = DEFAULT_BN,
+               block_p: int = DEFAULT_BP, interpret: bool = False
+               ) -> jnp.ndarray:
+    """X: (N, p), v: (N,) -> (p,) float32.  Pads to block multiples."""
+    N, p = X.shape
+    Np = -(-N // block_n) * block_n
+    pp = -(-p // block_p) * block_p
+    Xp = jnp.pad(X, ((0, Np - N), (0, pp - p)))
+    vp = jnp.pad(v.astype(X.dtype), (0, Np - N))[:, None]
+
+    out = pl.pallas_call(
+        _xtv_kernel,
+        grid=(pp // block_p, Np // block_n),
+        in_specs=[
+            pl.BlockSpec((block_n, block_p), lambda i, j: (j, i)),
+            pl.BlockSpec((block_n, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_p), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, pp), jnp.float32),
+        interpret=interpret,
+    )(Xp, vp)
+    return out[0, :p]

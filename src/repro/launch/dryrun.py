@@ -1,0 +1,289 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay the first statements in this module — jax locks
+the device count at first initialisation, and the production meshes need 512
+host devices.  Never set this flag globally (smoke tests/benches expect 1).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod|--both]
+Results (memory_analysis, cost_analysis, collective inventory, roofline
+terms) are appended to benchmarks/results/dryrun.json.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import get_config
+from ..configs.all_archs import ALL_ARCHS
+from ..distributed import sharding as sh
+from ..models import model as model_lib
+from ..optim import adamw
+from . import hlo_analysis
+from .mesh import make_production_mesh
+from .steps import (SHAPES, input_specs, make_prefill_step, make_serve_step,
+                    make_train_step, shape_supported)
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "benchmarks", "results", "dryrun.json")
+
+
+def model_flops(cfg, shape_name) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE); decode counts D = new tokens."""
+    n_total = model_lib.param_count(cfg)
+    # active params: replace full expert count with experts/token
+    if cfg.num_experts:
+        from ..models import moe as moe_mod
+        from ..models.common import is_desc
+        descs = model_lib.param_descs(cfg)
+        leaves = jax.tree.leaves(descs, is_leaf=is_desc)
+        expert_leaves = [l for l in leaves
+                         if len(l.shape) >= 3 and l.shape[-3] == cfg.num_experts
+                         or (len(l.shape) >= 4 and l.shape[1] == cfg.num_experts)]
+        e_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(
+            descs, is_leaf=is_desc)
+            if cfg.num_experts in l.shape and len(l.shape) >= 3)
+        n_active = n_total - e_params + e_params * cfg.experts_per_token \
+            / cfg.num_experts
+    else:
+        n_active = n_total
+    S, B, kind = SHAPES[shape_name]
+    if kind == "train":
+        mult = 6.0
+        tokens = S * B
+    elif kind == "prefill":
+        mult = 2.0
+        tokens = S * B
+    else:
+        mult = 2.0
+        tokens = 1 * B
+    return mult * n_active * tokens
+
+
+# hillclimb variants (EXPERIMENTS.md §Perf): each maps to step-builder knobs
+VARIANTS = {
+    "baseline": {},
+    "mb8": dict(microbatch=8),
+    "mb8_sp": dict(microbatch=8, seq_shard=True),
+    "mb8_sp_bf16opt": dict(microbatch=8, seq_shard=True,
+                           moment_dtype="bfloat16"),
+    "bf16opt": dict(moment_dtype="bfloat16"),
+    "repl_decode": dict(replicate_params=True),
+    "repl_decode_bf16": dict(replicate_params=True, param_dtype="bfloat16"),
+    "tp_decode_bf16": dict(tp_only=True, param_dtype="bfloat16"),
+    "decode_bf16": dict(param_dtype="bfloat16"),
+    "remat_dots": dict(remat_override="dots"),
+    "remat_none": dict(remat_override="none"),
+    "mb4_sp": dict(microbatch=4, seq_shard=True),
+    "mb16_bf16opt": dict(microbatch=16, moment_dtype="bfloat16"),
+    "mb8_bf16opt": dict(microbatch=8, moment_dtype="bfloat16"),
+}
+
+
+def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool,
+                remat: str = "full", variant: str = "baseline",
+                extra_opts=None):
+    cfg = get_config(arch)
+    ok, why = shape_supported(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": why, "variant": variant}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_shape = sh.mesh_shape_dict(mesh)
+    n_chips = int(np.prod(list(mesh_shape.values())))
+    spec = input_specs(cfg, shape_name, mesh_shape)
+    opts = dict(VARIANTS.get(variant, {}))
+    opts.update(extra_opts or {})
+    if opts.get("remat_override"):
+        remat = opts["remat_override"]
+    if opts.get("tp_only"):
+        # serving sharding: params replicated across the data axes, TP-sharded
+        # over 'model' only — no FSDP all-gathers in the decode step
+        from repro.models.common import DEFAULT_RULES
+        rules = dict(DEFAULT_RULES)
+        rules["embed"] = ()
+        from repro.models.common import tree_specs
+        pspecs = tree_specs(model_lib.param_descs(cfg), mesh_shape, rules)
+    elif opts.get("replicate_params"):
+        # serving variant: replicate everything except the (vocab-sharded)
+        # embedding tables — small models pay less in HBM reads than in
+        # per-layer collectives
+        from jax.sharding import PartitionSpec as P
+        descs = model_lib.param_descs(cfg)
+        from repro.models.common import is_desc
+        full = model_lib.param_pspecs(cfg, mesh_shape)
+        pspecs = jax.tree.map(lambda d: P(*([None] * len(d.shape))), descs,
+                              is_leaf=is_desc)
+        for k in ("embed", "lm_head"):
+            if k in pspecs:
+                pspecs[k] = full[k]
+    else:
+        pspecs = model_lib.param_pspecs(cfg, mesh_shape)
+    param_dtype = jnp.bfloat16 if opts.get("param_dtype") == "bfloat16" \
+        else jnp.float32
+    params_abs = model_lib.abstract_params(cfg, param_dtype)
+    kind = spec["kind"]
+    moment_dtype = jnp.bfloat16 if opts.get("moment_dtype") == "bfloat16" \
+        else jnp.float32
+
+    nm = lambda tree: sh.named(mesh, tree)
+    t0 = time.time()
+    with mesh:
+        if kind == "train":
+            state_abs = adamw.abstract_state(params_abs, moment_dtype)
+            state_specs = adamw.state_pspecs(pspecs)
+            step = make_train_step(cfg, mesh=mesh, remat=remat,
+                                   microbatch=opts.get("microbatch", 1),
+                                   seq_shard=opts.get("seq_shard", False))
+            lowered = jax.jit(
+                step,
+                in_shardings=(nm(state_specs), nm(spec["arg_pspecs"][0])),
+                out_shardings=(nm(state_specs), None),
+                donate_argnums=(0,),
+            ).lower(state_abs, *spec["args"])
+        elif kind == "prefill":
+            step = make_prefill_step(cfg, mesh=mesh)
+            lowered = jax.jit(
+                step,
+                in_shardings=(nm(pspecs), nm(spec["arg_pspecs"][0])),
+            ).lower(params_abs, *spec["args"])
+        else:
+            step = make_serve_step(cfg, mesh=mesh)
+            caches, tokens, pos = spec["args"]
+            cspecs, tspec, pspec = spec["arg_pspecs"]
+            lowered = jax.jit(
+                step,
+                in_shardings=(nm(pspecs), nm(cspecs), nm(tspec), nm(pspec)),
+                out_shardings=(None, nm(cspecs)),
+                donate_argnums=(1,),
+            ).lower(params_abs, caches, tokens, pos)
+        t_lower = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    terms = hlo_analysis.analyze(compiled.as_text(), cost)
+
+    mf_global = model_flops(cfg, shape_name)
+    mf_per_chip = mf_global / n_chips
+    hlo_flops = terms["flops"]
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "variant": variant,
+        "status": "ok",
+        "n_chips": n_chips,
+        "kind": kind,
+        "remat": remat,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "params": model_lib.param_count(cfg),
+        "memory": {
+            "argument_gb": mem.argument_size_in_bytes / 1e9,
+            "output_gb": mem.output_size_in_bytes / 1e9,
+            "temp_gb": mem.temp_size_in_bytes / 1e9,
+            "alias_gb": mem.alias_size_in_bytes / 1e9,
+            "peak_gb": (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                        + mem.output_size_in_bytes
+                        - mem.alias_size_in_bytes) / 1e9,
+        },
+        "collectives": {"counts": terms["coll_counts"],
+                        "result_bytes": terms["coll_result_bytes"],
+                        "wire_bytes": terms["wire_bytes"]},
+        "roofline": terms,
+        "model_flops_per_chip": mf_per_chip,
+        "useful_flops_ratio": (mf_per_chip / hlo_flops) if hlo_flops else None,
+    }
+    return rec
+
+
+def append_result(rec, path=RESULTS):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    data = []
+    if os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
+    key = (rec["arch"], rec["shape"], rec["mesh"], rec.get("variant", "baseline"))
+    data = [r for r in data
+            if (r["arch"], r["shape"], r["mesh"], r.get("variant", "baseline"))
+            != key]
+    data.append(rec)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1)
+
+
+def have_result(arch, shape, mesh_name, variant="baseline", path=RESULTS):
+    if not os.path.exists(path):
+        return False
+    with open(path) as f:
+        data = json.load(f)
+    return any((r["arch"], r["shape"], r["mesh"],
+                r.get("variant", "baseline")) ==
+               (arch, shape, mesh_name, variant)
+               and r["status"] in ("ok", "skipped") for r in data)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both", action="store_true",
+                    help="run single-pod AND multi-pod meshes")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    archs = ALL_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both else [args.multi_pod]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "multi" if mp else "single"
+                if args.skip_done and have_result(arch, shape, mesh_name,
+                                                  args.variant):
+                    print(f"[skip-done] {arch} {shape} {mesh_name}")
+                    continue
+                tag = f"{arch:26s} {shape:12s} {mesh_name:6s}"
+                try:
+                    rec = dryrun_cell(arch, shape, multi_pod=mp,
+                                      remat=args.remat, variant=args.variant)
+                    append_result(rec)
+                    if rec["status"] == "skipped":
+                        print(f"{tag} SKIP  ({rec['reason']})")
+                    else:
+                        r = rec["roofline"]
+                        print(f"{tag} OK  compile={rec['compile_s']:6.1f}s "
+                              f"peak={rec['memory']['peak_gb']:7.2f}GB "
+                              f"tC={r['t_compute']:.3e} tM={r['t_memory']:.3e} "
+                              f"tN={r['t_collective']:.3e} dom={r['dominant']}")
+                except Exception as e:
+                    failures += 1
+                    traceback.print_exc()
+                    append_result({"arch": arch, "shape": shape,
+                                   "mesh": mesh_name, "variant": args.variant,
+                                   "status": "error", "error": str(e)[:500]})
+                    print(f"{tag} ERROR {type(e).__name__}: {str(e)[:200]}")
+    print(f"done; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

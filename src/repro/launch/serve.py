@@ -1,0 +1,75 @@
+"""Batched serving loop: prefill-free incremental decode with a KV/state
+cache, greedy sampling, request batching, per-step latency stats.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --smoke \
+      --batch 4 --prompt-len 16 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import get_config
+from ..models import model as model_lib
+from .mesh import make_local_mesh
+from .steps import make_serve_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--cache-len", type=int, default=128)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    mesh = make_local_mesh()
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    serve_step = jax.jit(make_serve_step(cfg, mesh=mesh,
+                                         compute_dtype=jnp.float32),
+                         donate_argnums=(1,))
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
+        jnp.int32)
+    caches = model_lib.init_cache(cfg, args.batch, args.cache_len,
+                                  jnp.float32)
+
+    # teacher-forced prefill via the decode path (exercises the cache)
+    tok = prompts[:, :1]
+    t0 = time.perf_counter()
+    for t in range(args.prompt_len - 1):
+        _, caches = serve_step(params, caches, prompts[:, t:t + 1],
+                               jnp.asarray(t))
+    out = []
+    lat = []
+    tok = prompts[:, -1:]
+    for t in range(args.prompt_len - 1, args.prompt_len - 1 + args.gen):
+        ts = time.perf_counter()
+        tok, caches = serve_step(params, caches, tok, jnp.asarray(t))
+        jax.block_until_ready(tok)
+        lat.append(time.perf_counter() - ts)
+        out.append(np.asarray(tok))
+    total = time.perf_counter() - t0
+    gen = np.concatenate(out, axis=1)
+    lat_ms = np.asarray(lat[1:]) * 1e3
+    print(f"generated {gen.shape} tokens; total {total:.2f}s; "
+          f"per-step p50={np.percentile(lat_ms, 50):.1f}ms "
+          f"p99={np.percentile(lat_ms, 99):.1f}ms; "
+          f"throughput {args.batch * args.gen / total:.1f} tok/s")
+    print("sample:", gen[0, :16].tolist())
+    return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,193 @@
+"""Step builders (train / prefill / decode) + input specs for every
+(architecture x assigned shape) cell.
+
+``input_specs(cfg, shape_name)`` returns (step_kind, abstract inputs,
+PartitionSpec tree) — ShapeDtypeStruct stand-ins only, no allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..distributed import sharding as sh
+from ..models import model as model_lib
+from ..optim import adamw
+
+SHAPES = {
+    # name: (seq_len, global_batch, step kind)
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+
+def shape_supported(cfg: ArchConfig, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return False, "pure full-attention arch: 500k decode skipped (DESIGN.md)"
+    if shape_name.startswith("decode") and not cfg.has_decoder:
+        return False, "encoder-only arch has no decode step"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, mesh=None, remat="full",
+                    compute_dtype=jnp.bfloat16, lr_kwargs=None,
+                    microbatch: int = 1, seq_shard: bool = False,
+                    cast_params: bool = True):
+    """microbatch > 1: gradient accumulation over a scan — peak activation
+    memory scales with the microbatch, not the global batch.
+    seq_shard: sequence-shard the inter-layer activations over 'model'
+    (sequence parallelism) — remat-saved layer boundaries shrink by |model|.
+    cast_params: cast >=2-D master weights to the compute dtype ON THEIR
+    ZeRO-3 SHARDS, so FSDP layer all-gathers move bf16, not f32 (halves
+    gather wire + gathered-weight HBM reads; norm vectors stay f32).
+    """
+    lr_kwargs = lr_kwargs or {}
+
+    def loss_fn(params, mb):
+        if cast_params and compute_dtype != jnp.float32:
+            params = jax.tree.map(
+                lambda a: a.astype(compute_dtype)
+                if (hasattr(a, "ndim") and a.ndim >= 2
+                    and a.dtype == jnp.float32) else a, params)
+        loss, metrics = model_lib.forward_train(
+            params, cfg, mb, mesh=mesh, remat=remat,
+            compute_dtype=compute_dtype, seq_shard=seq_shard)
+        return loss, metrics
+
+    def train_step(state: adamw.TrainState, batch):
+        if microbatch <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params, batch)
+        else:
+            mbs = jax.tree.map(
+                lambda a: a.reshape((microbatch, a.shape[0] // microbatch)
+                                    + a.shape[1:]), batch)
+
+            def acc_body(acc, mb):
+                g_acc, l_acc = acc
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state.params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype),
+                                     g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p_: jnp.zeros(p_.shape, jnp.float32),
+                              state.params)
+            (grads, loss), _ = jax.lax.scan(acc_body, (g0, jnp.zeros(())),
+                                            mbs)
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+            loss = loss / microbatch
+            metrics = {"ce": loss, "aux": jnp.zeros(())}
+        lr = adamw.cosine_schedule(state.step, **lr_kwargs)
+        new_state = adamw.adamw_update(state, grads, lr=lr)
+        metrics = dict(metrics, loss=loss, lr=lr)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, mesh=None, compute_dtype=jnp.bfloat16):
+    """Full-sequence forward -> last-position logits (compute-faithful
+    prefill; the cache write-out is a pure store of the same k/v tensors)."""
+
+    def prefill_step(params, batch):
+        if cfg.family == "encdec":
+            y, enc_out, _ = model_lib.encdec_forward(
+                params, cfg, batch["frames"].astype(compute_dtype),
+                batch["tokens"], mesh=mesh, remat="none")
+        else:
+            x = model_lib.assemble_inputs(params, cfg, batch, compute_dtype)
+            positions = jnp.arange(x.shape[1])
+            x, _, _ = model_lib.decoder_stack(params, x, positions, cfg,
+                                              mesh=mesh, remat="none")
+            y = model_lib.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return model_lib.logits_fn(params, cfg, y[:, -1:, :])
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, mesh=None, compute_dtype=jnp.bfloat16):
+    def serve_step(params, caches, tokens, pos):
+        logits, new_caches = model_lib.forward_decode(
+            params, cfg, caches, tokens, pos, mesh=mesh,
+            compute_dtype=compute_dtype)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], new_caches
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs per (arch, shape)
+# ---------------------------------------------------------------------------
+
+def _tok(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def input_specs(cfg: ArchConfig, shape_name: str, mesh_shape=None,
+                cache_dtype=jnp.bfloat16):
+    """Returns dict:
+      kind: 'train'|'prefill'|'decode'
+      args: tuple of abstract arrays (excluding params/state)
+      arg_pspecs: matching PartitionSpec tree
+    For train, args = (batch,); for decode, args = (caches, tokens, pos).
+    """
+    mesh_shape = mesh_shape or {}
+    S, B, kind = SHAPES[shape_name]
+    dp = sh.dp_axes(mesh_shape)
+    dp_total = int(np.prod([mesh_shape.get(a, 1) for a in dp])) if dp else 1
+    bdim = dp if (dp and B % dp_total == 0 and B >= dp_total) else None
+
+    if kind in ("train", "prefill"):
+        batch = {}
+        specs = {}
+        if cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                   jnp.bfloat16)
+            batch["tokens"] = _tok((B, S))
+            specs["frames"] = P(bdim, None, None)
+            specs["tokens"] = P(bdim, None)
+            if kind == "train":
+                batch["labels"] = _tok((B, S))
+                specs["labels"] = P(bdim, None)
+        elif cfg.frontend == "vision":
+            npatch = cfg.num_patches
+            batch["patches"] = jax.ShapeDtypeStruct((B, npatch, cfg.d_model),
+                                                    jnp.bfloat16)
+            batch["tokens"] = _tok((B, S - npatch))
+            specs["patches"] = P(bdim, None, None)
+            specs["tokens"] = P(bdim, None)
+            if kind == "train":
+                batch["labels"] = _tok((B, S - npatch))
+                specs["labels"] = P(bdim, None)
+        else:
+            batch["tokens"] = _tok((B, S))
+            specs["tokens"] = P(bdim, None)
+            if kind == "train":
+                batch["labels"] = _tok((B, S))
+                specs["labels"] = P(bdim, None)
+        return {"kind": kind, "args": (batch,), "arg_pspecs": (specs,),
+                "seq": S, "batch": B}
+
+    # decode
+    caches = model_lib.cache_shapes(cfg, B, S, cache_dtype)
+    cache_specs = sh.cache_pspecs(cfg, B, S, mesh_shape)
+    tokens = _tok((B, 1))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return {"kind": "decode",
+            "args": (caches, tokens, pos),
+            "arg_pspecs": (cache_specs, P(bdim, None), P()),
+            "seq": S, "batch": B}

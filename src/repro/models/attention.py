@@ -1,0 +1,324 @@
+"""Attention: GQA (with local windows, softcap, qk-norm) and MLA.
+
+Two execution strategies:
+  * ``einsum`` — materialises (B, H, S, S) scores; fine for short S / decode.
+  * ``blocked`` — flash-style online-softmax over KV chunks (lax.scan) with a
+    nothing-saveable checkpoint so the backward pass re-streams chunks instead
+    of keeping S^2 residuals.  Local layers only visit the chunks inside the
+    window band.
+The strategy is picked automatically from S (>= BLOCKED_THRESHOLD) unless
+forced via ``force_impl`` (hillclimbing hooks into this).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .common import ParamDesc, rms_norm, rope, softcap
+
+# hillclimb knob: blocked (flash-style) attention kicks in at this S.
+# EXPERIMENTS.md §Perf iteration 1 tried 2048: REFUTED — with XLA-native
+# lowering the per-chunk score tensors hit HBM anyway and the causal-skip
+# waste made both t_memory and the bound worse at S=4096; einsum scores are
+# cheaper below 8k.  (A Pallas flash kernel would change this; see §Perf.)
+BLOCKED_THRESHOLD = 8192
+Q_CHUNK = 512
+KV_CHUNK = 512
+
+NEG_INF = -0.7 * float(np.finfo(np.float32).max)
+
+
+# ---------------------------------------------------------------------------
+# parameter declarations
+# ---------------------------------------------------------------------------
+
+def gqa_descs(cfg):
+    d, H, KV, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    descs = {
+        "wq": ParamDesc((d, H, dh), ("embed", "heads", None)),
+        "wk": ParamDesc((d, KV, dh), ("embed", "kv_heads", None)),
+        "wv": ParamDesc((d, KV, dh), ("embed", "kv_heads", None)),
+        "wo": ParamDesc((H, dh, d), ("heads", None, "embed")),
+    }
+    if cfg.qk_norm:
+        descs["q_norm"] = ParamDesc((dh,), (None,), scale=0.0)
+        descs["k_norm"] = ParamDesc((dh,), (None,), scale=0.0)
+    return descs
+
+
+def mla_descs(cfg):
+    d, H = cfg.d_model, cfg.num_heads
+    nope, rp, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    descs = {
+        "wkv_a": ParamDesc((d, kvr + rp), ("embed", None)),
+        "kv_norm": ParamDesc((kvr,), (None,), scale=0.0),
+        "wk_b": ParamDesc((kvr, H, nope), (None, "heads", None)),
+        "wv_b": ParamDesc((kvr, H, vd), (None, "heads", None)),
+        "wo": ParamDesc((H, vd, d), ("heads", None, "embed")),
+    }
+    if qr > 0:
+        descs["wq_a"] = ParamDesc((d, qr), ("embed", None))
+        descs["q_norm"] = ParamDesc((qr,), (None,), scale=0.0)
+        descs["wq_b"] = ParamDesc((qr, H, nope + rp), (None, "heads", None))
+    else:
+        descs["wq"] = ParamDesc((d, H, nope + rp), ("embed", "heads", None))
+    return descs
+
+
+# ---------------------------------------------------------------------------
+# core softmax-attention over explicit q, k, v
+#   q: (B, Sq, H, dh)   k, v: (B, Skv, KV, dh)
+# ---------------------------------------------------------------------------
+
+def _band_mask(q_pos, k_pos, window: Optional[int]):
+    """causal (+ optional local window) mask: True = attend.
+
+    k_pos < 0 marks invalid (not-yet-written) cache slots.
+    """
+    m = (k_pos[None, :] <= q_pos[:, None]) & (k_pos[None, :] >= 0)
+    if window is not None:
+        m &= k_pos[None, :] > (q_pos[:, None] - window)
+    return m
+
+
+def _einsum_attention(q, k, v, q_pos, k_pos, window, scale, cap):
+    B, Sq, H, dh = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    qg = q.reshape(B, Sq, KV, rep, dh)
+    s = jnp.einsum("bqkrd,bskd->bkrqs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    if cap is not None:
+        s = softcap(s, cap)
+    mask = _band_mask(q_pos, k_pos, window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkrqs,bskd->bqkrd", p.astype(v.dtype), v)
+    return o.reshape(B, Sq, H, v.shape[-1])
+
+
+def _blocked_attention(q, k, v, q_pos, k_pos, window, scale, cap):
+    """Flash-style attention.  Grid: vmap over q chunks, scan over kv chunks.
+
+    For local layers, each q chunk only scans the ceil(window/KV_CHUNK)+1
+    kv chunks of its band (dynamic_slice into k/v), so FLOPs and memory are
+    O(S * window) instead of O(S^2).
+    """
+    B, Sq, H, dh = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    nq = Sq // Q_CHUNK
+
+    q = q.reshape(B, nq, Q_CHUNK, KV, rep, dh)
+    q_pos = q_pos.reshape(nq, Q_CHUNK)
+
+    if window is not None:
+        # static band width: chunks covering [q_start - window + 1, q_end]
+        n_band = min((window + Q_CHUNK - 1) // KV_CHUNK + 1, Skv // KV_CHUNK)
+    else:
+        n_band = Skv // KV_CHUNK
+
+    def one_q_chunk(qc, qp, qi):
+        # qc: (B, Q, KV, rep, dh); qp: (Q,)
+        if window is not None:
+            last_chunk = (qi * Q_CHUNK + Q_CHUNK - 1) // KV_CHUNK
+            first_chunk = jnp.maximum(last_chunk - (n_band - 1), 0)
+        else:
+            first_chunk = jnp.asarray(0)
+
+        def kv_step(carry, j):
+            acc, m_run, l_run = carry
+            cj = first_chunk + j
+            ks = jax.lax.dynamic_slice_in_dim(k, cj * KV_CHUNK, KV_CHUNK, 1)
+            vs = jax.lax.dynamic_slice_in_dim(v, cj * KV_CHUNK, KV_CHUNK, 1)
+            kp = jax.lax.dynamic_slice_in_dim(k_pos, cj * KV_CHUNK, KV_CHUNK, 0)
+            s = jnp.einsum("bqkrd,bskd->bkrqs", qc, ks,
+                           preferred_element_type=jnp.float32) * scale
+            if cap is not None:
+                s = softcap(s, cap)
+            mask = _band_mask(qp, kp, window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkrqs,bskd->bkrqd", p.astype(vs.dtype), vs
+            ).astype(jnp.float32)
+            return (acc, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, KV, rep, Q_CHUNK, v.shape[-1]), jnp.float32)
+        m0 = jnp.full((B, KV, rep, Q_CHUNK), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, rep, Q_CHUNK), jnp.float32)
+        (acc, m_run, l_run), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0), jnp.arange(n_band))
+        out = acc / jnp.maximum(l_run[..., None], 1e-30)
+        return out.transpose(0, 3, 1, 2, 4)        # (B, Q, KV, rep, dh)
+
+    one_q_chunk = jax.checkpoint(
+        one_q_chunk, policy=jax.checkpoint_policies.nothing_saveable)
+    out = jax.vmap(one_q_chunk, in_axes=(1, 0, 0), out_axes=1)(
+        q, q_pos, jnp.arange(nq))
+    return out.reshape(B, Sq, H, v.shape[-1]).astype(v.dtype)
+
+
+def sdpa(q, k, v, q_pos, k_pos, *, window=None, scale=None, cap=None,
+         force_impl: Optional[str] = None):
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    Sq, Skv = q.shape[1], k.shape[1]
+    impl = force_impl or ("blocked" if max(Sq, Skv) >= BLOCKED_THRESHOLD
+                          and Sq % Q_CHUNK == 0 and Skv % KV_CHUNK == 0
+                          else "einsum")
+    fn = _blocked_attention if impl == "blocked" else _einsum_attention
+    return fn(q, k, v, q_pos, k_pos, window, scale, cap)
+
+
+# ---------------------------------------------------------------------------
+# GQA layer (full / local) with optional KV cache
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray        # (B, S_cache, KV, dh) — ring buffer for local layers
+    v: jnp.ndarray
+
+
+def gqa_forward(p, x, positions, cfg, *, window=None, rope_theta=None,
+                cache: Optional[KVCache] = None, cache_pos=None,
+                force_impl=None):
+    """x: (B, S, d).  Training/prefill when cache is None; decode otherwise.
+
+    Decode contract: x is (B, 1, d), ``cache_pos`` is the absolute position,
+    cache k/v hold ``S_cache`` slots (ring-buffered when window < S_cache is
+    irrelevant — local layers allocate S_cache == window).
+    """
+    B, S, d = x.shape
+    H, KV, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    theta = rope_theta if rope_theta is not None else cfg.rope_theta
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, theta)
+    k = rope(k, positions, theta)
+
+    new_cache = None
+    if cache is None:
+        kk, vv = k, v
+        q_pos = k_pos = positions
+    else:
+        S_cache = cache.k.shape[1]
+        slot = cache_pos % S_cache          # ring slot (== cache_pos when full-length)
+        kk = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), slot, 1)
+        vv = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), slot, 1)
+        new_cache = KVCache(kk, vv)
+        # absolute positions of cache slots (ring-aware)
+        idx = jnp.arange(S_cache)
+        wraps = (cache_pos // S_cache)
+        k_pos = jnp.where(idx <= slot, wraps * S_cache + idx,
+                          (wraps - 1) * S_cache + idx)
+        q_pos = jnp.full((1,), cache_pos)
+
+    scale = dh ** -0.5
+    o = sdpa(q, kk, vv, q_pos, k_pos, window=window, scale=scale,
+             cap=cfg.attn_softcap, force_impl=force_impl)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    return out, new_cache
+
+
+def gqa_cache_shape(cfg, batch, cache_len, window=None, dtype=jnp.bfloat16):
+    S = min(cache_len, window) if window is not None else cache_len
+    shp = (batch, S, cfg.num_kv_heads, cfg.head_dim)
+    return KVCache(jax.ShapeDtypeStruct(shp, dtype),
+                   jax.ShapeDtypeStruct(shp, dtype))
+
+
+# ---------------------------------------------------------------------------
+# MLA layer — latent KV cache (kv_lora + rope dims per token)
+# ---------------------------------------------------------------------------
+
+class MLACache(NamedTuple):
+    ckv: jnp.ndarray       # (B, S, kv_lora_rank)
+    krope: jnp.ndarray     # (B, S, qk_rope_head_dim)
+
+
+def mla_forward(p, x, positions, cfg, *, cache: Optional[MLACache] = None,
+                cache_pos=None, force_impl=None):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    nope, rp, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+
+    if cfg.q_lora_rank > 0:
+        qa = rms_norm(x @ p["wq_a"].astype(x.dtype), p["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", qa, p["wq_b"].astype(x.dtype))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+
+    kv_a = x @ p["wkv_a"].astype(x.dtype)                  # (B,S,kvr+rp)
+    ckv = rms_norm(kv_a[..., :kvr], p["kv_norm"], cfg.norm_eps)
+    krope_tok = kv_a[..., kvr:][:, :, None, :]             # (B,S,1,rp)
+
+    if cache is None:
+        # naive (expanded) form for train/prefill: the softmax pipeline needs
+        # per-position K/V anyway
+        q_pos = k_pos = positions
+        ckv_all = ckv
+        krope_all = rope(krope_tok, positions, cfg.rope_theta)[:, :, 0, :]
+        q_rope = rope(q_rope, positions, cfg.rope_theta)
+        k_nope = jnp.einsum("bsr,rhk->bshk", ckv_all.astype(x.dtype),
+                            p["wk_b"].astype(x.dtype))
+        val = jnp.einsum("bsr,rhk->bshk", ckv_all.astype(x.dtype),
+                         p["wv_b"].astype(x.dtype))
+        krope_b = jnp.broadcast_to(krope_all[:, :, None, :].astype(x.dtype),
+                                   k_nope.shape[:3] + (rp,))
+        k = jnp.concatenate([k_nope, krope_b], axis=-1)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        scale = (nope + rp) ** -0.5
+        o = sdpa(qq, k, val, q_pos, k_pos, window=None, scale=scale,
+                 cap=cfg.attn_softcap, force_impl=force_impl)
+        out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+        return out, None
+
+    # ---- ABSORBED decode (EXPERIMENTS.md §Perf, beyond-paper): fold W_uk
+    # into the query and W_uv into the output so attention runs entirely in
+    # the latent space — the cache is never re-expanded to per-head K/V:
+    #   score_h(t) = <W_uk_h^T q_nope_h, c_t> + <q_rope_h, k_rope_t>
+    #   out_h      = W_uv_h (sum_t p_h(t) c_t)
+    krope_now = rope(krope_tok, positions, cfg.rope_theta)[:, :, 0, :]
+    ckv_all = jax.lax.dynamic_update_slice_in_dim(
+        cache.ckv, ckv.astype(cache.ckv.dtype), cache_pos, 1)
+    krope_all = jax.lax.dynamic_update_slice_in_dim(
+        cache.krope, krope_now.astype(cache.krope.dtype), cache_pos, 1)
+    new_cache = MLACache(ckv_all, krope_all)
+    k_pos = jnp.arange(ckv_all.shape[1])
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    scale = (nope + rp) ** -0.5
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["wk_b"].astype(x.dtype))
+    s_lat = jnp.einsum("bshr,btr->bhst", q_lat, ckv_all.astype(x.dtype))
+    s_rope = jnp.einsum("bshk,btk->bhst", q_rope, krope_all.astype(x.dtype))
+    s = (s_lat + s_rope).astype(jnp.float32) * scale       # (B,H,1,S)
+    if cfg.attn_softcap:
+        s = softcap(s, cfg.attn_softcap)
+    mask = (k_pos <= cache_pos)[None, None, None, :]
+    s = jnp.where(mask, s, NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhst,btr->bshr", prob, ckv_all.astype(x.dtype))
+    out = jnp.einsum("bshr,rhv,hvd->bsd", o_lat, p["wv_b"].astype(x.dtype),
+                     p["wo"].astype(x.dtype))
+    return out, new_cache
+
+
+def mla_cache_shape(cfg, batch, cache_len, dtype=jnp.bfloat16):
+    return MLACache(
+        jax.ShapeDtypeStruct((batch, cache_len, cfg.kv_lora_rank), dtype),
+        jax.ShapeDtypeStruct((batch, cache_len, cfg.qk_rope_head_dim), dtype))

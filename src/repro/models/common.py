@@ -1,0 +1,167 @@
+"""Shared model plumbing: parameter descriptors, norms, rope, activations.
+
+Parameters are plain nested dicts.  Every leaf is declared once as a
+``ParamDesc`` (shape + logical axes + init scale); three views derive from the
+same declaration so they can never diverge:
+
+  * materialised arrays (CPU smoke tests / real training),
+  * ShapeDtypeStructs (dry-run lowering, no allocation),
+  * PartitionSpecs (logical axes -> mesh axes, with divisibility fallback).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDesc:
+    shape: tuple
+    axes: tuple              # logical axis name (or None) per dim
+    scale: float = 1.0       # stddev multiplier on fan-in init
+    dtype: object = None     # override param dtype
+
+
+def is_desc(x):
+    return isinstance(x, ParamDesc)
+
+
+# Logical-axis -> mesh-axis rules.  'fsdp' is the combined (pod, data) axis;
+# 'tp' is the model axis.  A dim is only sharded if its size is divisible by
+# the mesh axis size (else it falls back to replicated) — this is what makes
+# e.g. 8 KV heads on a 16-way model axis lower cleanly.
+DEFAULT_RULES: dict[str, tuple] = {
+    "embed":    (("pod", "data"),),   # FSDP dim of 2-D weights
+    "vocab":    ("model",),
+    "heads":    ("model",),
+    "kv_heads": ("model",),
+    "mlp":      ("model",),
+    "experts":  ("model",),
+    "seq":      (),
+    "conv":     (),
+    "stack":    (),                   # scan/stack leading axis
+    "state":    (),
+    None:       (),
+}
+
+
+def resolve_spec(desc: ParamDesc, mesh_shape: Mapping[str, int],
+                 rules: Optional[dict] = None) -> P:
+    rules = rules or DEFAULT_RULES
+    parts = []
+    for size, ax in zip(desc.shape, desc.axes):
+        cands = rules.get(ax, ())
+        pick = None
+        for cand in cands:
+            axes = cand if isinstance(cand, tuple) else (cand,)
+            # prune axes absent from this mesh (e.g. 'pod' on single-pod)
+            axes = tuple(a for a in axes if a in mesh_shape)
+            if not axes:
+                continue
+            n = int(np.prod([mesh_shape[a] for a in axes]))
+            if n > 1 and size % n == 0:
+                pick = axes if len(axes) > 1 else axes[0]
+                break
+        parts.append(pick)
+    return P(*parts)
+
+
+def tree_abstract(descs, param_dtype):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype or param_dtype),
+        descs, is_leaf=is_desc)
+
+
+def tree_specs(descs, mesh_shape, rules=None):
+    return jax.tree.map(lambda d: resolve_spec(d, mesh_shape, rules),
+                        descs, is_leaf=is_desc)
+
+
+def tree_init(descs, key, param_dtype):
+    leaves, treedef = jax.tree.flatten(descs, is_leaf=is_desc)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for d, k in zip(leaves, keys):
+        dt = d.dtype or param_dtype
+        if len(d.shape) >= 2:
+            fan_in = int(np.prod(d.shape[:-1]))
+            std = d.scale / np.sqrt(max(fan_in, 1))
+            out.append(jax.random.normal(k, d.shape, dt) * jnp.asarray(std, dt))
+        elif d.scale == 0.0:
+            out.append(jnp.zeros(d.shape, dt))
+        else:
+            out.append(jnp.ones(d.shape, dt))
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# ops
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, gamma, eps=1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * (1.0 + gamma.astype(dt))
+
+
+def softcap(x, cap):
+    return jnp.tanh(x / cap) * cap
+
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, dh) with positions (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32)
+                    * (np.log(theta) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def activation(name: str, x, gate=None):
+    if name == "silu_glu":
+        return jax.nn.silu(gate) * x
+    if name == "gelu_glu":
+        return jax.nn.gelu(gate) * x
+    if name == "squared_relu":
+        r = jax.nn.relu(x)
+        return r * r
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(name)
+
+
+def is_glu(name: str) -> bool:
+    return name.endswith("_glu")
+
+
+def constrain(x, mesh, *spec_parts):
+    """Explicit activation sharding constraint (no-op without a mesh).
+    Axes absent from the mesh or non-dividing sizes degrade to replicated."""
+    if mesh is None or getattr(mesh, "empty", False):
+        return x
+    from jax.sharding import NamedSharding
+    final = []
+    for size, p_ in zip(x.shape, spec_parts):
+        if isinstance(p_, tuple):
+            p_ = tuple(a for a in p_ if a in mesh.shape)
+            p_ = p_ if p_ else None
+        elif isinstance(p_, str) and p_ not in mesh.shape:
+            p_ = None
+        if p_ is None:
+            final.append(None)
+            continue
+        axes = p_ if isinstance(p_, tuple) else (p_,)
+        n = int(np.prod([mesh.shape[a] for a in axes]))
+        final.append(p_ if (n > 1 and size % n == 0) else None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*final)))

@@ -1,0 +1,528 @@
+"""Model assembly: param trees, scanned layer stacks, train/prefill/decode.
+
+The layer stack is ``prologue`` (unrolled) + ``repeats`` scanned copies of the
+``block_pattern`` period.  Scanning keeps HLO size O(period), which is what
+makes 40 (arch x shape) x 2 mesh compiles tractable and keeps compile memory
+bounded for 96-layer models.
+
+Decode ("serve_step") threads a cache pytree whose leaves are stacked
+(repeats, ...) and scanned together with the block params.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import (ParamDesc, constrain, is_desc, rms_norm, softcap,
+                     tree_abstract, tree_init, tree_specs)
+from . import attention as attn
+from . import mlp as mlp_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from . import xlstm as xlstm_mod
+
+ATTN_KINDS = ("attn", "local", "global", "dense_ffn_attn", "moe")
+
+
+
+# ---------------------------------------------------------------------------
+# parameter declarations
+# ---------------------------------------------------------------------------
+
+def _block_descs(cfg: ArchConfig, kind: str):
+    d = cfg.d_model
+    ln = lambda: ParamDesc((d,), (None,), scale=0.0)
+    if kind in ATTN_KINDS:
+        descs = {"ln1": ln(), "ln2": ln()}
+        descs["attn"] = attn.mla_descs(cfg) if cfg.mla else attn.gqa_descs(cfg)
+        if kind == "moe":
+            descs["ffn"] = moe_mod.moe_descs(cfg)
+        else:
+            descs["ffn"] = mlp_mod.mlp_descs(cfg)
+        return descs
+    if kind in ("mamba", "mamba+shared_attn"):
+        return {"ln": ln(), "mamba": ssm_mod.mamba2_descs(cfg)}
+    if kind == "mlstm":
+        return {"ln": ln(), "mlstm": xlstm_mod.mlstm_descs(cfg)}
+    if kind == "slstm":
+        return {"ln": ln(), "slstm": xlstm_mod.slstm_descs(cfg)}
+    raise ValueError(kind)
+
+
+def _stack_descs(descs, n):
+    return jax.tree.map(
+        lambda p: ParamDesc((n,) + p.shape, ("stack",) + p.axes, p.scale,
+                            p.dtype),
+        descs, is_leaf=is_desc)
+
+
+def param_descs(cfg: ArchConfig):
+    d, V = cfg.d_model, cfg.vocab_size
+    tree: dict[str, Any] = {
+        "embed": ParamDesc((V, d), ("vocab", "embed")),
+        "final_norm": ParamDesc((d,), (None,), scale=0.0),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = ParamDesc((d, V), ("embed", "vocab"))
+
+    if cfg.family == "encdec":
+        enc_block = {"ln1": ParamDesc((d,), (None,), scale=0.0),
+                     "attn": attn.gqa_descs(cfg),
+                     "ln2": ParamDesc((d,), (None,), scale=0.0),
+                     "ffn": mlp_mod.mlp_descs(cfg)}
+        dec_block = dict(enc_block)
+        dec_block["ln_x"] = ParamDesc((d,), (None,), scale=0.0)
+        dec_block["xattn"] = attn.gqa_descs(cfg)
+        tree["encoder"] = _stack_descs(enc_block, cfg.enc_layers)
+        tree["decoder"] = _stack_descs(dec_block, cfg.dec_layers)
+        tree["enc_final_norm"] = ParamDesc((d,), (None,), scale=0.0)
+        return tree
+
+    for i, kind in enumerate(cfg.prologue):
+        tree[f"pro{i}"] = _block_descs(cfg, kind)
+    period = {f"l{i}": _block_descs(cfg, kind)
+              for i, kind in enumerate(cfg.block_pattern)}
+    tree["blocks"] = _stack_descs(period, cfg.repeats)
+
+    if any(k == "mamba+shared_attn" for k in cfg.block_pattern):
+        shared = {"ln1": ParamDesc((d,), (None,), scale=0.0),
+                  "attn": attn.gqa_descs(cfg),
+                  "ln2": ParamDesc((d,), (None,), scale=0.0),
+                  "ffn": mlp_mod.mlp_descs(cfg)}
+        tree["shared_attn"] = _stack_descs(shared, 2)  # two alternating sets
+    return tree
+
+
+def abstract_params(cfg, param_dtype=jnp.float32):
+    return tree_abstract(param_descs(cfg), param_dtype)
+
+
+def init_params(cfg, key, param_dtype=jnp.float32):
+    return tree_init(param_descs(cfg), key, param_dtype)
+
+
+def param_pspecs(cfg, mesh_shape):
+    return tree_specs(param_descs(cfg), mesh_shape)
+
+
+def param_count(cfg) -> int:
+    leaves = jax.tree.leaves(param_descs(cfg), is_leaf=is_desc)
+    return int(sum(np.prod(l.shape) for l in leaves))
+
+
+# ---------------------------------------------------------------------------
+# block forward
+# ---------------------------------------------------------------------------
+
+def _attn_ffn_block(p, x, positions, cfg, kind, *, cache=None, cache_pos=None,
+                    mesh=None, return_cache=False, capacity_factor=1.25):
+    window = cfg.window_size if kind == "local" else None
+    theta = (cfg.rope_theta_local if kind == "local" and cfg.rope_theta_local
+             else cfg.rope_theta)
+    aux = jnp.zeros((), jnp.float32)
+
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.mla:
+        a_out, new_cache = attn.mla_forward(p["attn"], h, positions, cfg,
+                                            cache=cache, cache_pos=cache_pos)
+    else:
+        a_out, new_cache = attn.gqa_forward(p["attn"], h, positions, cfg,
+                                            window=window, rope_theta=theta,
+                                            cache=cache, cache_pos=cache_pos)
+    if return_cache and cache is None and not cfg.mla:
+        # prefill: materialise the cache from full-sequence k/v
+        pass  # handled by caller via prefill-specific path
+    x = x + a_out
+
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if kind == "moe":
+        f_out, aux = moe_mod.moe_forward(p["ffn"], h, cfg, mesh=mesh,
+                                         capacity_factor=capacity_factor)
+    else:
+        f_out = mlp_mod.mlp_forward(p["ffn"], h, cfg)
+    x = x + f_out
+    return x, new_cache, aux
+
+
+def _block_forward(kind, p, x, positions, cfg, *, cache=None, cache_pos=None,
+                   mesh=None, shared_params=None, capacity_factor=1.25):
+    """Returns (x, new_cache, aux_loss)."""
+    zero = jnp.zeros((), jnp.float32)
+    if kind in ATTN_KINDS:
+        return _attn_ffn_block(p, x, positions, cfg, kind, cache=cache,
+                               cache_pos=cache_pos, mesh=mesh,
+                               capacity_factor=capacity_factor)
+    if kind in ("mamba", "mamba+shared_attn"):
+        h = rms_norm(x, p["ln"], cfg.norm_eps)
+        m_out, m_cache = ssm_mod.mamba2_forward(p["mamba"], h, cfg,
+                                                cache=(cache or {}).get("mamba")
+                                                if isinstance(cache, dict) else None)
+        x = x + m_out
+        new_cache = None
+        if kind == "mamba+shared_attn":
+            sp, s_cache_in = shared_params
+            h = rms_norm(x, sp["ln1"], cfg.norm_eps)
+            a_out, a_cache = attn.gqa_forward(sp["attn"], h, positions, cfg,
+                                              cache=s_cache_in,
+                                              cache_pos=cache_pos)
+            x = x + a_out
+            h = rms_norm(x, sp["ln2"], cfg.norm_eps)
+            x = x + mlp_mod.mlp_forward(sp["ffn"], h, cfg)
+            new_cache = {"mamba": m_cache, "shared": a_cache}
+        else:
+            new_cache = {"mamba": m_cache}
+        return x, new_cache, zero
+    if kind == "mlstm":
+        h = rms_norm(x, p["ln"], cfg.norm_eps)
+        out, c = xlstm_mod.mlstm_forward(p["mlstm"], h, cfg, cache=cache,
+                                         mesh=mesh)
+        return x + out, c, zero
+    if kind == "slstm":
+        h = rms_norm(x, p["ln"], cfg.norm_eps)
+        out, c = xlstm_mod.slstm_forward(p["slstm"], h, cfg, cache=cache,
+                                         mesh=mesh)
+        return x + out, c, zero
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# full decoder stack (train / decode); encoder-decoder handled separately
+# ---------------------------------------------------------------------------
+
+def _remat_wrap(fn, policy: str):
+    if policy == "none":
+        return fn
+    pol = {"full": None,
+           "dots": jax.checkpoint_policies.checkpoint_dots,
+           "nothing": jax.checkpoint_policies.nothing_saveable,
+           }.get(policy, None)
+    if policy == "full" or pol is None:
+        return jax.checkpoint(fn)
+    return jax.checkpoint(fn, policy=pol)
+
+
+def decoder_stack(params, x, positions, cfg: ArchConfig, *, caches=None,
+                  cache_pos=None, mesh=None, remat="full",
+                  capacity_factor=1.25, seq_shard=False):
+    """x: (B, S, d).  caches: None (train/prefill) or pytree as built by
+    ``init_cache``.  Returns (x, new_caches, aux)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    act_seq = "model" if seq_shard else None
+    x = constrain(x, mesh, ("pod", "data"), act_seq, None)
+
+    # prologue (unrolled)
+    pro_caches_new = []
+    for i, kind in enumerate(cfg.prologue):
+        c = caches["prologue"][i] if caches is not None else None
+        x, nc, aux = _block_forward(kind, params[f"pro{i}"], x, positions, cfg,
+                                    cache=c, cache_pos=cache_pos, mesh=mesh,
+                                    capacity_factor=capacity_factor)
+        pro_caches_new.append(nc)
+        aux_total += aux
+
+    has_shared = "shared_attn" in params
+
+    def period_body(carry, xs):
+        x, aux_acc = carry
+        p_step, cache_step, ridx = xs
+        new_caches = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            c = cache_step[f"l{i}"] if cache_step is not None else None
+            shared_arg = None
+            if kind == "mamba+shared_attn" and has_shared:
+                sp = jax.tree.map(lambda a: a[ridx % 2], params["shared_attn"])
+                # each application of the shared block has its OWN KV cache
+                shared_arg = (sp, c.get("shared") if isinstance(c, dict)
+                              else None)
+                c = c.get("mamba") if isinstance(c, dict) else None
+                c = {"mamba": c}
+            x, nc, aux = _block_forward(
+                kind, p_step[f"l{i}"], x, positions, cfg, cache=c,
+                cache_pos=cache_pos, mesh=mesh, shared_params=shared_arg,
+                capacity_factor=capacity_factor)
+            x = constrain(x, mesh, ("pod", "data"), act_seq, None)
+            new_caches[f"l{i}"] = nc
+            aux_acc = aux_acc + aux
+        return (x, aux_acc), new_caches
+
+    body = _remat_wrap(period_body, remat)
+    block_caches = caches["blocks"] if caches is not None else None
+    xs = (params["blocks"], block_caches, jnp.arange(cfg.repeats))
+    (x, aux_total), new_block_caches = jax.lax.scan(
+        body, (x, aux_total), xs)
+
+    new_caches = None
+    if caches is not None:
+        new_caches = {"blocks": new_block_caches,
+                      "prologue": pro_caches_new}
+    return x, new_caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# embedding / logits / loss
+# ---------------------------------------------------------------------------
+
+LOSS_CHUNK = 1024
+
+
+def embed_tokens(params, cfg, tokens, compute_dtype):
+    emb = params["embed"].astype(compute_dtype)
+    x = jnp.take(emb, tokens, axis=0)
+    return x * jnp.asarray(np.sqrt(cfg.d_model), compute_dtype)
+
+
+def _head_matrix(params, cfg, compute_dtype):
+    if cfg.tie_embeddings:
+        return params["embed"].astype(compute_dtype).T
+    return params["lm_head"].astype(compute_dtype)
+
+
+def logits_fn(params, cfg, x):
+    w = _head_matrix(params, cfg, x.dtype)
+    logits = (x @ w).astype(jnp.float32)
+    if cfg.final_softcap:
+        logits = softcap(logits, cfg.final_softcap)
+    return logits
+
+
+def chunked_ce_loss(params, cfg, x, labels, mask=None):
+    """Cross-entropy without materialising (B, S, V) logits: scan over
+    sequence chunks; each chunk's logits are recomputed in the backward pass
+    (nothing-saveable checkpoint)."""
+    B, S, d = x.shape
+    C = min(LOSS_CHUNK, S)
+    assert S % C == 0
+    nc = S // C
+    w = _head_matrix(params, cfg, x.dtype)
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def chunk_loss(xc, yc, mc):
+        logits = (xc @ w).astype(jnp.float32)
+        if cfg.final_softcap:
+            logits = softcap(logits, cfg.final_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * mc), jnp.sum(mc)
+
+    def body(acc, idx):
+        xc = jax.lax.dynamic_slice_in_dim(x, idx * C, C, 1)
+        yc = jax.lax.dynamic_slice_in_dim(labels, idx * C, C, 1)
+        mc = jax.lax.dynamic_slice_in_dim(mask, idx * C, C, 1)
+        l, n = chunk_loss(xc, yc, mc)
+        return (acc[0] + l, acc[1] + n), None
+
+    (tot, n), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                               jnp.arange(nc))
+    return tot / jnp.maximum(n, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder (seamless): frames are precomputed embeddings (stub)
+# ---------------------------------------------------------------------------
+
+def encdec_forward(params, cfg, frames, tokens, *, mesh=None, remat="full",
+                   dec_caches=None, cache_pos=None, enc_out=None,
+                   compute_dtype=None):
+    """frames: (B, S_enc, d) float embeddings; tokens: (B, S_dec) int32.
+    If enc_out is given (decode), the encoder is skipped."""
+    if compute_dtype is not None:
+        dt = compute_dtype
+    elif frames is not None:
+        dt = frames.dtype
+    else:
+        dt = enc_out.dtype
+
+    if enc_out is None:
+        x = frames
+        pos_e = jnp.arange(x.shape[1])
+
+        def enc_body(carry, p):
+            h = rms_norm(carry, p["ln1"], cfg.norm_eps)
+            a, _ = attn.gqa_forward(p["attn"], h, pos_e, cfg)
+            carry = carry + a
+            h = rms_norm(carry, p["ln2"], cfg.norm_eps)
+            return carry + mlp_mod.mlp_forward(p["ffn"], h, cfg), None
+
+        x, _ = jax.lax.scan(_remat_wrap(enc_body, remat), x,
+                            params["encoder"])
+        enc_out = rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+    y = embed_tokens(params, cfg, tokens, dt)
+    if dec_caches is None:
+        pos_d = jnp.arange(tokens.shape[1])
+    else:
+        pos_d = jnp.full((1,), cache_pos)
+
+    def dec_body(carry, xs):
+        y, = carry
+        p, cache_step = xs
+        c_self = cache_step["self"] if cache_step is not None else None
+        h = rms_norm(y, p["ln1"], cfg.norm_eps)
+        a, c_self_new = attn.gqa_forward(p["attn"], h, pos_d, cfg,
+                                         cache=c_self, cache_pos=cache_pos)
+        y = y + a
+        # cross attention over encoder states (no cache needed: enc_out fixed)
+        h = rms_norm(y, p["ln_x"], cfg.norm_eps)
+        xa = _cross_attention(p["xattn"], h, enc_out, cfg)
+        y = y + xa
+        h = rms_norm(y, p["ln2"], cfg.norm_eps)
+        y = y + mlp_mod.mlp_forward(p["ffn"], h, cfg)
+        return (y,), {"self": c_self_new}
+
+    xs = (params["decoder"], dec_caches)
+    (y,), new_caches = jax.lax.scan(_remat_wrap(dec_body, remat), (y,), xs)
+    y = rms_norm(y, params["final_norm"], cfg.norm_eps)
+    return y, enc_out, (new_caches if dec_caches is not None else None)
+
+
+def _cross_attention(p, q_in, kv_in, cfg):
+    H, KV, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dhk->bshk", q_in, p["wq"].astype(q_in.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", kv_in, p["wk"].astype(q_in.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", kv_in, p["wv"].astype(q_in.dtype))
+    Sq, Skv = q.shape[1], k.shape[1]
+    # non-causal: all positions visible
+    q_pos = jnp.full((Sq,), Skv - 1)
+    k_pos = jnp.arange(Skv)
+    o = attn.sdpa(q, k, v, q_pos, k_pos)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(q_in.dtype))
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def _kind_cache_shape(cfg, kind, batch, cache_len, dtype):
+    if kind in ("attn", "global", "dense_ffn_attn", "moe"):
+        if cfg.mla:
+            return attn.mla_cache_shape(cfg, batch, cache_len, dtype)
+        return attn.gqa_cache_shape(cfg, batch, cache_len, None, dtype)
+    if kind == "local":
+        return attn.gqa_cache_shape(cfg, batch, cache_len, cfg.window_size,
+                                    dtype)
+    if kind == "mamba":
+        return {"mamba": ssm_mod.mamba2_cache_shape(cfg, batch, dtype)}
+    if kind == "mamba+shared_attn":
+        return {"mamba": ssm_mod.mamba2_cache_shape(cfg, batch, dtype),
+                "shared": attn.gqa_cache_shape(cfg, batch, cache_len, None,
+                                               dtype)}
+    if kind == "mlstm":
+        return xlstm_mod.mlstm_cache_shape(cfg, batch, dtype)
+    if kind == "slstm":
+        return xlstm_mod.slstm_cache_shape(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def _stack_shapes(tree, n):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree)
+
+
+def cache_shapes(cfg: ArchConfig, batch: int, cache_len: int,
+                 dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree for the decode cache."""
+    if cfg.family == "encdec":
+        dec = {"self": attn.gqa_cache_shape(cfg, batch, cache_len, None,
+                                            dtype)}
+        return {"decoder": _stack_shapes(dec, cfg.dec_layers),
+                "enc_out": jax.ShapeDtypeStruct(
+                    (batch, cache_len, cfg.d_model), dtype)}
+    period = {f"l{i}": _kind_cache_shape(cfg, kind, batch, cache_len, dtype)
+              for i, kind in enumerate(cfg.block_pattern)}
+    out = {"blocks": _stack_shapes(period, cfg.repeats),
+           "prologue": [
+               _kind_cache_shape(cfg, kind, batch, cache_len, dtype)
+               for kind in cfg.prologue]}
+    return out
+
+
+def init_cache(cfg, batch, cache_len, dtype=jnp.bfloat16):
+    cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                         cache_shapes(cfg, batch, cache_len, dtype))
+
+    def walk(node):
+        # mLSTM / sLSTM carry a log-scale stabiliser that starts at -inf
+        if isinstance(node, xlstm_mod.MLSTMCache):
+            return node._replace(m=jnp.full_like(node.m, -1e30))
+        if isinstance(node, xlstm_mod.SLSTMCache):
+            return node._replace(m=jnp.full_like(node.m, -1e30))
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v) for v in node]
+        return node
+    return walk(cache)
+
+
+# ---------------------------------------------------------------------------
+# public steps
+# ---------------------------------------------------------------------------
+
+def assemble_inputs(params, cfg, batch, compute_dtype):
+    """tokens (+ optional modality embeddings) -> (B, S, d) input states."""
+    tokens = batch["tokens"]
+    x = embed_tokens(params, cfg, tokens, compute_dtype)
+    if cfg.frontend == "vision" and "patches" in batch:
+        x = jnp.concatenate([batch["patches"].astype(compute_dtype), x],
+                            axis=1)
+    return x
+
+
+def forward_train(params, cfg: ArchConfig, batch, *, mesh=None, remat="full",
+                  compute_dtype=jnp.bfloat16, seq_shard=False):
+    """Returns (loss, metrics).  batch: tokens/labels (+patches/frames)."""
+    if cfg.family == "encdec":
+        y, _, _ = encdec_forward(params, cfg,
+                                 batch["frames"].astype(compute_dtype),
+                                 batch["tokens"], mesh=mesh, remat=remat)
+        loss = chunked_ce_loss(params, cfg, y, batch["labels"])
+        return loss, {"ce": loss}
+
+    x = assemble_inputs(params, cfg, batch, compute_dtype)
+    positions = jnp.arange(x.shape[1])
+    x, _, aux = decoder_stack(params, x, positions, cfg, mesh=mesh,
+                              remat=remat, seq_shard=seq_shard)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    labels = batch["labels"]
+    if cfg.frontend == "vision" and "patches" in batch:
+        npatch = batch["patches"].shape[1]
+        pad = jnp.zeros((labels.shape[0], npatch), labels.dtype)
+        mask = jnp.concatenate([jnp.zeros_like(pad, jnp.float32),
+                                jnp.ones_like(labels, jnp.float32)], axis=1)
+        labels = jnp.concatenate([pad, labels], axis=1)
+        ce = chunked_ce_loss(params, cfg, x, labels, mask)
+    else:
+        ce = chunked_ce_loss(params, cfg, x, labels)
+    loss = ce + 0.01 * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def forward_decode(params, cfg: ArchConfig, caches, tokens, pos, *,
+                   mesh=None, compute_dtype=jnp.bfloat16):
+    """One decode step.  tokens: (B, 1) int32; pos: scalar absolute position.
+    Returns (logits (B, 1, V), new_caches)."""
+    if cfg.family == "encdec":
+        y, _, new_dec = encdec_forward(
+            params, cfg, None, tokens, dec_caches=caches["decoder"],
+            cache_pos=pos, enc_out=caches["enc_out"].astype(compute_dtype),
+            compute_dtype=compute_dtype)
+        logits = logits_fn(params, cfg, y)
+        return logits, {"decoder": new_dec, "enc_out": caches["enc_out"]}
+
+    x = embed_tokens(params, cfg, tokens, compute_dtype)
+    positions = jnp.full((1,), pos)
+    x, new_caches, _ = decoder_stack(params, x, positions, cfg, caches=caches,
+                                     cache_pos=pos, mesh=mesh, remat="none",
+                                     capacity_factor=None)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_fn(params, cfg, x)
+    return logits, new_caches

@@ -1,0 +1,198 @@
+"""Token-choice top-k MoE with expert parallelism.
+
+Dispatch is Megablocks-style: token-expert pairs are sorted by expert and fed
+to grouped matmuls.  Two execution paths:
+
+  * ``ep_shard_map`` (production): experts are sharded over the 'model' mesh
+    axis.  Inside a shard_map, each model shard keeps its E/|model| experts,
+    selects the token-expert pairs routed to a local expert (capacity-bounded
+    per shard, capacity_factor slack), runs the grouped matmuls and psums the
+    weighted contributions over 'model'.  Communication per MoE layer is one
+    all-reduce of the (B_local, S, d) output — no all-to-all, no expert
+    weight gathering.
+  * ``dense_gather`` (single-device smoke tests): the same sorted grouped
+    matmul without the shard_map.
+
+Grouped matmuls use a scan over experts with dynamic slices (portable, O(E)
+HLO) — each expert processes a fixed ``capacity`` slice of the sorted pairs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import ParamDesc, activation, is_glu
+
+
+def moe_descs(cfg):
+    d, f, E = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    descs = {
+        "router": ParamDesc((d, E), ("embed", None)),
+        "w_in": ParamDesc((E, d, f), ("experts", "embed", None)),
+        "w_out": ParamDesc((E, f, d), ("experts", None, "embed")),
+    }
+    if is_glu(cfg.mlp_act):
+        descs["w_gate"] = ParamDesc((E, d, f), ("experts", "embed", None))
+    if cfg.num_shared_experts:
+        fs = cfg.moe_d_ff * cfg.num_shared_experts
+        descs["shared_in"] = ParamDesc((d, fs), ("embed", "mlp"))
+        descs["shared_out"] = ParamDesc((fs, d), ("mlp", "embed"))
+        if is_glu(cfg.mlp_act):
+            descs["shared_gate"] = ParamDesc((d, fs), ("embed", "mlp"))
+    return descs
+
+
+def router_topk(p, x, cfg):
+    """Returns (expert_idx (B,S,k), gate_w (B,S,k) f32, aux_loss scalar)."""
+    logits = (x @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, expert_idx = jax.lax.top_k(probs, cfg.experts_per_token)
+    gate_w = gate_w / jnp.sum(gate_w, axis=-1, keepdims=True)
+    # switch-style load-balancing auxiliary
+    E = cfg.num_experts
+    me = jnp.mean(probs.reshape(-1, E), axis=0)
+    one_hot = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)
+    ce = jnp.mean(jnp.sum(one_hot, axis=-2).reshape(-1, E), axis=0) \
+        / cfg.experts_per_token
+    aux = E * jnp.sum(me * ce)
+    return expert_idx, gate_w, aux
+
+
+def _expert_ffn(tokens, w_in, w_gate, w_out, act):
+    """tokens: (C, d) for ONE expert."""
+    h = tokens @ w_in
+    if w_gate is not None:
+        h = activation(act, h, tokens @ w_gate)
+    else:
+        h = activation(act, h)
+    return h @ w_out
+
+
+def moe_ffn_local(x_flat, expert_idx, gate_w, w_in, w_gate, w_out, *,
+                  e_lo, n_local, capacity, act):
+    """MoE contribution of experts [e_lo, e_lo + n_local) to local tokens.
+
+    x_flat: (T, d); expert_idx/gate_w: (T, k).  Returns (T, d) partial sums
+    (contributions of non-local experts are zero — psum over 'model' adds
+    the rest).
+
+    Memory notes: the (T*k, d) duplicated-token matrix is never materialised
+    — each expert-scan step gathers its own (capacity, d) rows from x_flat
+    and scatter-adds its weighted output into the (T, d) accumulator.
+    """
+    T, d = x_flat.shape
+    k = expert_idx.shape[1]
+    pair_tok = jnp.repeat(jnp.arange(T), k)               # (T*k,)
+    pair_exp = expert_idx.reshape(-1) - e_lo              # local ids
+    pair_w = gate_w.reshape(-1)
+    local = (pair_exp >= 0) & (pair_exp < n_local)
+    sort_key = jnp.where(local, pair_exp, n_local)        # overflow bin last
+    order = jnp.argsort(sort_key)
+    pair_exp_s = sort_key[order]
+    pair_tok_s = pair_tok[order]
+    pair_w_s = jnp.where(local[order], pair_w[order], 0.0)
+
+    counts = jnp.bincount(pair_exp_s, length=n_local + 1)[:n_local]
+    starts = jnp.concatenate([jnp.zeros(1, counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    # pad by `capacity` so dynamic_slice windows never clamp (a clamped start
+    # would misalign rows against the validity mask)
+    pair_tok_s = jnp.concatenate(
+        [pair_tok_s, jnp.zeros(capacity, pair_tok_s.dtype)])
+    pair_w_s = jnp.concatenate([pair_w_s, jnp.zeros(capacity, pair_w_s.dtype)])
+
+    def body(acc, e):
+        idx = jax.lax.dynamic_slice_in_dim(pair_tok_s, starts[e], capacity, 0)
+        wts = jax.lax.dynamic_slice_in_dim(pair_w_s, starts[e], capacity, 0)
+        valid = jnp.arange(capacity) < counts[e]
+        wts = jnp.where(valid, wts, 0.0)
+        rows = jnp.take(x_flat, idx, axis=0)
+        wg = w_gate[e] if w_gate is not None else None
+        out_e = _expert_ffn(rows, w_in[e], wg, w_out[e], act)
+        acc = acc.at[idx].add(out_e * wts[:, None].astype(out_e.dtype))
+        return acc, None
+
+    acc0 = jnp.zeros((T, d), x_flat.dtype)
+    acc, _ = jax.lax.scan(body, acc0, jnp.arange(n_local))
+    return acc
+
+
+def moe_forward(p, x, cfg, *, mesh=None, capacity_factor: float = 1.25):
+    """x: (B, S, d) -> (B, S, d), plus aux loss.
+
+    With a mesh (axis 'model' present and > 1), runs expert-parallel under
+    shard_map; otherwise runs the single-shard path.
+    """
+    B, S, d = x.shape
+    expert_idx, gate_w, aux = router_topk(p, x, cfg)
+    E, k = cfg.num_experts, cfg.experts_per_token
+    act = cfg.mlp_act
+    w_gate_all = p.get("w_gate")
+
+    n_model = 1
+    if mesh is not None and "model" in mesh.shape:
+        n_model = mesh.shape["model"]
+
+    if n_model > 1 and E % n_model == 0:
+        n_local = E // n_model
+        # expected pairs per shard = T*k/n_model; slack for imbalance.
+        # capacity_factor=None => lossless (capacity = all pairs), used for
+        # decode where T is tiny and token dropping would be incorrect.
+        def cap_of(T):
+            if capacity_factor is None:
+                return T * k
+            c = int(np.ceil(T * k / n_model * capacity_factor))
+            return max(min(c, T * k), 8)
+
+        def ep_body(xl, idxl, wl, w_in, w_gate, w_out):
+            mi = jax.lax.axis_index("model")
+            Tl = xl.shape[0] * xl.shape[1]
+            xf = xl.reshape(Tl, d)
+            out = moe_ffn_local(
+                xf, idxl.reshape(Tl, k), wl.reshape(Tl, k),
+                w_in, w_gate, w_out,
+                e_lo=mi * n_local, n_local=n_local,
+                capacity=cap_of(Tl), act=act)
+            # psum in the compute dtype (bf16): halves EP wire bytes
+            out = jax.lax.psum(out.astype(xl.dtype), "model")
+            return out.reshape(xl.shape)
+
+        data_axes = tuple(a for a in mesh.axis_names if a != "model")
+        xspec = P(data_axes, None, None)
+        wspec3 = P("model", None, None)
+        gate_in = p["w_gate"] if w_gate_all is not None else None
+        args = (x, expert_idx, gate_w, p["w_in"],
+                gate_in if gate_in is not None else p["w_in"], p["w_out"])
+        in_specs = (xspec, xspec, xspec, wspec3, wspec3, wspec3)
+
+        def wrapped(xl, idxl, wl, w_in, w_gate, w_out):
+            return ep_body(xl, idxl, wl, w_in,
+                           w_gate if w_gate_all is not None else None, w_out)
+
+        out = jax.shard_map(wrapped, mesh=mesh, in_specs=in_specs,
+                            out_specs=xspec, check_vma=False)(*args)
+    else:
+        Tl = B * S
+        if capacity_factor is None:
+            cap = Tl * k
+        else:
+            cap = max(min(int(np.ceil(Tl * k / E * capacity_factor)), Tl * k), 8)
+        out = moe_ffn_local(
+            x.reshape(Tl, d), expert_idx.reshape(Tl, k),
+            gate_w.reshape(Tl, k), p["w_in"], w_gate_all, p["w_out"],
+            e_lo=0, n_local=E, capacity=cap, act=act)
+        out = out.reshape(B, S, d)
+
+    if cfg.num_shared_experts:
+        h = x @ p["shared_in"].astype(x.dtype)
+        if is_glu(act):
+            h = activation(act, h, x @ p["shared_gate"].astype(x.dtype))
+        else:
+            h = activation(act, h)
+        out = out + h @ p["shared_out"].astype(x.dtype)
+    return out.astype(x.dtype), aux

@@ -1,0 +1,155 @@
+"""Mamba2 (SSD) block — chunked parallel scan, TPU-friendly.
+
+State-space recurrence per head h (P = head dim, N = state dim):
+
+    h_t = a_t * h_{t-1} + dt_t * (B_t ⊗ x_t)        a_t = exp(dt_t * A_h) < 1
+    y_t = C_t · h_t + D_h * x_t
+
+The chunked SSD algorithm materialises O(S/Q) states instead of O(S):
+within-chunk outputs use the (Q, Q) decay-weighted Gram matrix on the MXU;
+chunk-boundary states are carried through a lax.scan.  Decode is the O(1)
+recurrent update on a persistent (B, H, N, P) state + conv ring buffer.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamDesc, rms_norm
+
+
+def mamba2_descs(cfg):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    H = d_in // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_dim = d_in + 2 * N
+    return {
+        "in_proj": ParamDesc((d, 2 * d_in + 2 * N + H), ("embed", "mlp")),
+        "conv_w": ParamDesc((cfg.ssm_conv, conv_dim), ("conv", "mlp")),
+        "conv_b": ParamDesc((conv_dim,), ("mlp",), scale=0.0),
+        "a_log": ParamDesc((H,), (None,), scale=0.0),
+        "dt_bias": ParamDesc((H,), (None,), scale=0.0),
+        "d_skip": ParamDesc((H,), (None,)),
+        "out_norm": ParamDesc((d_in,), ("mlp",), scale=0.0),
+        "out_proj": ParamDesc((d_in, d), ("mlp", "embed")),
+    }
+
+
+class MambaCache(NamedTuple):
+    conv: jnp.ndarray      # (B, conv_w - 1, conv_dim) ring of recent inputs
+    state: jnp.ndarray     # (B, H, N, P) f32
+
+
+def _split_proj(cfg, proj):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = d_in // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    z, xc, Bm, Cm, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1)
+    return z, xc, Bm, Cm, dt, d_in, H, N
+
+
+def _causal_conv(u, w, b):
+    """Depthwise causal conv.  u: (B, S, C), w: (K, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + u.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def mamba2_forward(p, x, cfg, *, cache: Optional[MambaCache] = None):
+    """x: (B, S, d).  Train/prefill when cache is None, decode otherwise."""
+    B, S, d = x.shape
+    P = cfg.ssm_head_dim
+    proj = x @ p["in_proj"].astype(x.dtype)
+    z, xc, Bm, Cm, dt, d_in, H, N = _split_proj(cfg, proj)
+
+    conv_in = jnp.concatenate([xc, Bm, Cm], axis=-1)
+    new_cache = None
+    if cache is None:
+        conv_out = _causal_conv(conv_in, p["conv_w"].astype(x.dtype),
+                                p["conv_b"].astype(x.dtype))
+    else:
+        hist = jnp.concatenate([cache.conv.astype(x.dtype), conv_in], axis=1)
+        w = p["conv_w"].astype(x.dtype)
+        out = sum(hist[:, i:i + 1, :] * w[i][None, None, :]
+                  for i in range(w.shape[0]))
+        conv_out = jax.nn.silu(out + p["conv_b"].astype(x.dtype))
+        new_conv = hist[:, 1:, :]
+
+    xc, Bm, Cm = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+    xh = xc.reshape(B, -1, H, P).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))       # (B,S,H)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))                   # (H,)
+    la_step = dt * A[None, None, :]                                # log a_t
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+    xdt = xh * dt[..., None]                                       # (B,S,H,P)
+
+    if cache is None:
+        Q = min(cfg.ssm_chunk, S)
+        Sp = -(-S // Q) * Q
+        if Sp != S:  # pad tail (zero dt => zero update, outputs discarded)
+            padw = ((0, 0), (0, Sp - S), (0, 0), (0, 0))
+            xdt = jnp.pad(xdt, padw)
+            la_step = jnp.pad(la_step, padw[:3])
+            Bf = jnp.pad(Bf, padw[:3])
+            Cf = jnp.pad(Cf, padw[:3])
+        nc = Sp // Q
+        r = lambda t: t.reshape((B, nc, Q) + t.shape[2:])
+        xdt_c, la_c, B_c, C_c = r(xdt), r(la_step), r(Bf), r(Cf)
+
+        def chunk(hstate, inp):
+            xdt_q, la_q, B_q, C_q = inp       # (B,Q,H,P),(B,Q,H),(B,Q,N),(B,Q,N)
+            la = jnp.cumsum(la_q, axis=1)                          # inclusive
+            la_last = la[:, -1:, :]                                # (B,1,H)
+            # intra-chunk
+            cb = jnp.einsum("bin,bjn->bij", C_q, B_q)
+            decay = jnp.exp(la[:, :, None, :] - la[:, None, :, :]) # (B,i,j,H)
+            mask = jnp.tril(jnp.ones((Q, Q), bool))
+            w_ij = jnp.where(mask[None, :, :, None],
+                             cb[..., None] * decay, 0.0)
+            y = jnp.einsum("bijh,bjhp->bihp", w_ij, xdt_q)
+            # inter-chunk (contribution of carried state)
+            y += jnp.einsum("bin,bhnp,bih->bihp", C_q, hstate, jnp.exp(la))
+            # chunk-final state
+            h_end = jnp.einsum("bjn,bjhp,bjh->bhnp", B_q, xdt_q,
+                               jnp.exp(la_last - la))
+            hstate = jnp.exp(la_last[:, 0, :, None, None]) * hstate + h_end
+            return hstate, y
+
+        h0 = jnp.zeros((B, H, N, P), jnp.float32)
+        _, y = jax.lax.scan(
+            chunk, h0,
+            (xdt_c.transpose(1, 0, 2, 3, 4), la_c.transpose(1, 0, 2, 3),
+             B_c.transpose(1, 0, 2, 3), C_c.transpose(1, 0, 2, 3)))
+        y = y.transpose(1, 0, 2, 3, 4).reshape(B, Sp, H, P)[:, :S]
+    else:
+        # decode: one recurrent step
+        a = jnp.exp(la_step[:, 0])                                 # (B,H)
+        upd = jnp.einsum("bn,bhp->bhnp", Bf[:, 0], xdt[:, 0])
+        state = a[..., None, None] * cache.state + upd
+        y = jnp.einsum("bn,bhnp->bhp", Cf[:, 0], state)[:, None]
+        new_cache = MambaCache(new_conv.astype(cache.conv.dtype), state)
+
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] \
+        * xh[:, :y.shape[1]].reshape(y.shape)
+    y = y.reshape(B, -1, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, new_cache
+
+
+def mamba2_cache_shape(cfg, batch, dtype=jnp.bfloat16):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = d_in // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_dim = d_in + 2 * N
+    return MambaCache(
+        jax.ShapeDtypeStruct((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        jax.ShapeDtypeStruct((batch, H, N, cfg.ssm_head_dim), jnp.float32))

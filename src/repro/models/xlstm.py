@@ -1,0 +1,282 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked-parallel) and sLSTM (scalar
+memory, strictly sequential — per the paper it is NOT parallelisable, so the
+train path is a lax.scan over time).
+
+mLSTM recurrence per head (dh = head dim):
+
+    C_t = f_t C_{t-1} + i_t  k_t ⊗ v_t          (matrix memory, dh x dh)
+    n_t = f_t n_{t-1} + i_t  k_t
+    h_t = (q_t · C_t) / max(|q_t · n_t|, 1)
+
+with exponential input gate i_t = exp(ĩ_t) and forget gate f_t = σ(f̃_t),
+stabilised by the running max m_t.  The chunked form is exact: within a chunk
+the decay-weighted Gram matrix runs on the MXU; the carried state is stored
+with its own log-scale so stabilisation is preserved across chunks (same
+skeleton as the Mamba2 SSD kernel — both are gated linear attention).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamDesc, constrain, rms_norm
+
+NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_descs(cfg):
+    d = cfg.d_model
+    d_in = 2 * d
+    H = cfg.num_heads
+    dh = d_in // H
+    return {
+        "w_up": ParamDesc((d, d_in), ("embed", "mlp")),
+        "w_gate": ParamDesc((d, d_in), ("embed", "mlp")),
+        "conv_w": ParamDesc((4, d_in), ("conv", "mlp")),
+        "conv_b": ParamDesc((d_in,), ("mlp",), scale=0.0),
+        "wq": ParamDesc((d_in, H, dh), ("mlp", "heads", None)),
+        "wk": ParamDesc((d_in, H, dh), ("mlp", "heads", None)),
+        "wv": ParamDesc((d_in, H, dh), ("mlp", "heads", None)),
+        "w_if": ParamDesc((d_in, 2 * H), ("mlp", None)),
+        "if_bias": ParamDesc((2 * H,), (None,), scale=0.0),
+        "out_norm": ParamDesc((d_in,), ("mlp",), scale=0.0),
+        "w_down": ParamDesc((d_in, d), ("mlp", "embed")),
+    }
+
+
+class MLSTMCache(NamedTuple):
+    C: jnp.ndarray      # (B, H, dh, dh) f32 — matrix memory (scaled)
+    n: jnp.ndarray      # (B, H, dh) f32
+    m: jnp.ndarray      # (B, H) f32 — log scale of C, n
+    conv: jnp.ndarray   # (B, 3, d_in)
+
+
+def _mlstm_chunked(q, k, v, li, lf, chunk):
+    """q,k,v: (B,S,H,dh) f32; li/lf: (B,S,H) log input/forget gates.
+
+    Returns y: (B,S,H,dh).  Exact stabilised chunked evaluation.
+    """
+    B, S, H, dh = q.shape
+    Q = min(chunk, S)
+    Sp = -(-S // Q) * Q
+    if Sp != S:  # pad with li = -inf (no input), lf = 0 (keep state)
+        q = jnp.pad(q, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+        li = jnp.pad(li, ((0, 0), (0, Sp - S), (0, 0)), constant_values=NEG)
+        lf = jnp.pad(lf, ((0, 0), (0, Sp - S), (0, 0)))
+    S_run = Sp
+    nc = Sp // Q
+    r = lambda t: t.reshape((B, nc, Q) + t.shape[2:]).transpose(
+        (1, 0, 2) + tuple(range(3, t.ndim + 1)))
+    qc, kc, vc, lic, lfc = map(r, (q, k, v, li, lf))
+    scale = dh ** -0.5
+
+    def chunk_step(carry, inp):
+        Ct, nt, mt = carry                     # scaled state, (B,H,dh,dh) etc
+        qq, kk, vv, lii, lff = inp             # (B,Q,H,dh) ...
+        la = jnp.cumsum(lff, axis=1)           # (B,Q,H) inclusive log decay
+        la_last = la[:, -1, :]                 # (B,H)
+        # g_ij = la_i - la_j + li_j   (j <= i)
+        g = la[:, :, None, :] - la[:, None, :, :] + lii[:, None, :, :]
+        mask = jnp.tril(jnp.ones((Q, Q), bool))[None, :, :, None]
+        g = jnp.where(mask, g, NEG)
+        c_i = la + mt[:, None, :]              # carry term (B,Q,H)
+        m_i = jnp.maximum(jnp.max(g, axis=2), c_i)
+        m_i = jnp.maximum(m_i, -1e29)
+        w_ij = jnp.exp(g - m_i[:, :, None, :])                    # (B,i,j,H)
+        qk = jnp.einsum("bihd,bjhd->bijh", qq, kk) * scale
+        num = jnp.einsum("bijh,bijh,bjhd->bihd", qk, w_ij, vv)
+        num += jnp.exp(c_i - m_i)[..., None] * jnp.einsum(
+            "bihd,bhde->bihe", qq * scale, Ct)
+        den = jnp.einsum("bijh,bijh->bih", qk, w_ij)
+        den += jnp.exp(c_i - m_i) * jnp.einsum("bihd,bhd->bih",
+                                               qq * scale, nt)
+        y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+        # update carried state (own log scale)
+        g_end = la_last[:, None, :] - la + lii                    # (B,Q,H)
+        m_new = jnp.maximum(la_last + mt, jnp.max(g_end, axis=1))
+        w_end = jnp.exp(g_end - m_new[:, None, :])
+        C_new = jnp.exp(la_last + mt - m_new)[..., None, None] * Ct \
+            + jnp.einsum("bjh,bjhd,bjhe->bhde", w_end, kk, vv)
+        n_new = jnp.exp(la_last + mt - m_new)[..., None] * nt \
+            + jnp.einsum("bjh,bjhd->bhd", w_end, kk)
+        return (C_new, n_new, m_new), y
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    _, y = jax.lax.scan(chunk_step, (C0, n0, m0), (qc, kc, vc, lic, lfc))
+    return y.transpose(1, 0, 2, 3, 4).reshape(B, Sp, H, dh)[:, :S]
+
+
+def mlstm_forward(p, x, cfg, *, cache: Optional[MLSTMCache] = None,
+                  chunk: int = 256, mesh=None):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    d_in = 2 * d
+    dh = d_in // H
+    u = x @ p["w_up"].astype(x.dtype)
+    z = x @ p["w_gate"].astype(x.dtype)
+
+    if cache is None:
+        K = p["conv_w"].shape[0]
+        pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+        conv = sum(pad[:, i:i + S, :] * p["conv_w"][i][None, None].astype(x.dtype)
+                   for i in range(K))
+        new_conv = None
+    else:
+        hist = jnp.concatenate([cache.conv.astype(x.dtype), u], axis=1)
+        w = p["conv_w"].astype(x.dtype)
+        conv = sum(hist[:, i:i + 1, :] * w[i][None, None]
+                   for i in range(w.shape[0]))
+        new_conv = hist[:, 1:, :]
+    conv = jax.nn.silu(conv + p["conv_b"].astype(x.dtype))
+
+    q = jnp.einsum("bsd,dhk->bshk", conv, p["wq"].astype(x.dtype)).astype(jnp.float32)
+    k = jnp.einsum("bsd,dhk->bshk", conv, p["wk"].astype(x.dtype)).astype(jnp.float32)
+    v = jnp.einsum("bsd,dhk->bshk", u, p["wv"].astype(x.dtype)).astype(jnp.float32)
+    q = constrain(q, mesh, ("pod", "data"), None, "model", None)
+    k = constrain(k, mesh, ("pod", "data"), None, "model", None)
+    v = constrain(v, mesh, ("pod", "data"), None, "model", None)
+    gates = (u @ p["w_if"].astype(x.dtype)
+             + p["if_bias"].astype(x.dtype)).astype(jnp.float32)
+    li, lf = gates[..., :H], jax.nn.log_sigmoid(gates[..., H:])
+
+    new_cache = None
+    if cache is None:
+        y = _mlstm_chunked(q, k, v, li, lf, chunk)
+    else:
+        scale = dh ** -0.5
+        lf1 = lf[:, 0]                                  # (B,H)
+        li1 = li[:, 0]
+        m_new = jnp.maximum(lf1 + cache.m, li1)
+        f_s = jnp.exp(lf1 + cache.m - m_new)
+        i_s = jnp.exp(li1 - m_new)
+        C = f_s[..., None, None] * cache.C + i_s[..., None, None] * \
+            jnp.einsum("bhd,bhe->bhde", k[:, 0], v[:, 0])
+        n = f_s[..., None] * cache.n + i_s[..., None] * k[:, 0]
+        num = jnp.einsum("bhd,bhde->bhe", q[:, 0] * scale, C)
+        den = jnp.einsum("bhd,bhd->bh", q[:, 0] * scale, n)
+        y = (num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None])[:, None]
+        new_cache = MLSTMCache(C, n, m_new, new_conv.astype(cache.conv.dtype))
+
+    y = y.reshape(B, -1, d_in).astype(x.dtype)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return y @ p["w_down"].astype(x.dtype), new_cache
+
+
+def mlstm_cache_shape(cfg, batch, dtype=jnp.bfloat16):
+    d_in = 2 * cfg.d_model
+    H = cfg.num_heads
+    dh = d_in // H
+    return MLSTMCache(
+        jax.ShapeDtypeStruct((batch, H, dh, dh), jnp.float32),
+        jax.ShapeDtypeStruct((batch, H, dh), jnp.float32),
+        jax.ShapeDtypeStruct((batch, H), jnp.float32),
+        jax.ShapeDtypeStruct((batch, 3, d_in), dtype))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_descs(cfg):
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    f_up = int(d * 4 / 3) // 64 * 64 or 64
+    return {
+        "w_gates": ParamDesc((d, 4 * d), ("embed", "mlp")),   # z,i,f,o pre-acts
+        "r_gates": ParamDesc((H, dh, 4 * dh), (None, None, "mlp")),
+        "gate_bias": ParamDesc((4 * d,), ("mlp",), scale=0.0),
+        "up1": ParamDesc((d, f_up), ("embed", "mlp")),
+        "up2": ParamDesc((d, f_up), ("embed", "mlp")),
+        "down": ParamDesc((f_up, d), ("mlp", "embed")),
+    }
+
+
+class SLSTMCache(NamedTuple):
+    c: jnp.ndarray   # (B, H, dh) f32
+    n: jnp.ndarray
+    h: jnp.ndarray
+    m: jnp.ndarray   # (B, H, dh)
+
+
+def _slstm_cell(cfg, carry, gates_x, r_w):
+    """One time step.  gates_x: (B, 4*d) input contribution."""
+    c, n, h, m = carry
+    B = c.shape[0]
+    H, dh = c.shape[1], c.shape[2]
+    rec = jnp.einsum("bhd,hde->bhe", h, r_w)          # (B,H,4*dh)
+    g = gates_x.reshape(B, H, 4 * dh) + rec
+    z, i_raw, f_raw, o = jnp.split(g, 4, axis=-1)
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o)
+    lf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(lf + m, i_raw)
+    i_s = jnp.exp(i_raw - m_new)
+    f_s = jnp.exp(lf + m - m_new)
+    c_new = f_s * c + i_s * z
+    n_new = jnp.maximum(f_s * n + i_s, jnp.exp(-m_new))
+    h_new = o * c_new / n_new
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_forward(p, x, cfg, *, cache: Optional[SLSTMCache] = None,
+                  mesh=None):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    dh = d // H
+    gates_x = (x @ p["w_gates"].astype(x.dtype)
+               + p["gate_bias"].astype(x.dtype)).astype(jnp.float32)
+    # fixed layout for the whole recurrence: batch over dp, gates over model
+    gates_x = constrain(gates_x, mesh, ("pod", "data"), None, "model")
+    r_w = p["r_gates"].astype(jnp.float32)
+
+    if cache is None:
+        init = (jnp.zeros((B, H, dh), jnp.float32),) * 3 + (
+            jnp.full((B, H, dh), -1e30, jnp.float32),)
+
+        def step(carry, g_t):
+            new = _slstm_cell(cfg, carry, g_t, r_w)
+            return new, new[2]
+
+        # two-level scan: outer over time-chunks with checkpoint, inner over
+        # steps — bounds backward residuals to one chunk instead of S steps.
+        TC = 128
+        if S % TC == 0 and S > TC:
+            g_seq = gates_x.transpose(1, 0, 2).reshape(S // TC, TC, B, -1)
+
+            @jax.checkpoint
+            def run_chunk(carry, g_chunk):
+                return jax.lax.scan(step, carry, g_chunk)
+
+            _, hs = jax.lax.scan(run_chunk, init, g_seq)
+            hs = hs.reshape(S, B, H, dh)
+        else:
+            _, hs = jax.lax.scan(step, init, gates_x.transpose(1, 0, 2))
+        y = hs.transpose(1, 0, 2, 3).reshape(B, S, d)
+        new_cache = None
+    else:
+        carry = (cache.c, cache.n, cache.h, cache.m)
+        new = _slstm_cell(cfg, carry, gates_x[:, 0], r_w)
+        y = new[2].reshape(B, 1, d)
+        new_cache = SLSTMCache(*new)
+
+    y = y.astype(x.dtype)
+    ff = jax.nn.gelu(y @ p["up1"].astype(x.dtype)) * (y @ p["up2"].astype(x.dtype))
+    return ff @ p["down"].astype(x.dtype), new_cache
+
+
+def slstm_cache_shape(cfg, batch, dtype=jnp.bfloat16):
+    H = cfg.num_heads
+    dh = cfg.d_model // H
+    s = jax.ShapeDtypeStruct((batch, H, dh), jnp.float32)
+    return SLSTMCache(s, s, s, s)

@@ -1,0 +1,83 @@
+"""Hand-rolled AdamW (no optax dependency) + cosine schedule.
+
+State layout mirrors the param tree: f32 master params + f32 (m, v).  The
+whole TrainState is ZeRO-3 sharded by the same pspecs as the params, so
+per-chip optimizer memory is params*12B / n_chips.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TrainState(NamedTuple):
+    step: jnp.ndarray          # ()
+    params: Any                # f32 master
+    m: Any
+    v: Any
+
+
+def init_state(params, moment_dtype=jnp.float32) -> TrainState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, moment_dtype), params)
+    return TrainState(jnp.zeros((), jnp.int32), params, zeros,
+                      jax.tree.map(jnp.copy, zeros))
+
+
+def abstract_state(abstract_params, moment_dtype=jnp.float32) -> TrainState:
+    f32 = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), abstract_params)
+    mom = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, moment_dtype), abstract_params)
+    return TrainState(jax.ShapeDtypeStruct((), jnp.int32), f32, mom, mom)
+
+
+def state_pspecs(param_specs) -> TrainState:
+    from jax.sharding import PartitionSpec as P
+    return TrainState(P(), param_specs, param_specs, param_specs)
+
+
+def cosine_schedule(step, *, base_lr=3e-4, warmup=100, total=10000,
+                    min_ratio=0.1):
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * jnp.minimum(warm, cos)
+
+
+def adamw_update(state: TrainState, grads, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1, grad_clip=1.0) -> TrainState:
+    # global-norm clip
+    gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(grads))
+    gnorm = jnp.sqrt(gsq)
+    scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        mdt = m.dtype                      # bf16 moments halve optimizer HBM
+        g = g.astype(jnp.float32) * scale
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p
+        return p - lr * delta, m_new.astype(mdt), v_new.astype(mdt)
+
+    flat_p, treedef = jax.tree.flatten(state.params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return TrainState(step, new_p, new_m, new_v)

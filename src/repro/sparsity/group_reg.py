@@ -1,0 +1,104 @@
+"""SGL-regularised structured sparsification of LM weights (beyond-paper
+integration — DESIGN.md section 4).
+
+Weight matrices are partitioned into structural groups (attention heads, FFN
+channels, experts); training adds the SGL penalty via the exact two-level
+prox (prox-AdamW), and TLFre screening runs periodically on the linearised
+local subproblem to CERTIFY inactive groups, which are then frozen (removed
+from the optimisation) — the paper's "remove from optimization" claim applied
+to LM weight groups.  The lambda path is the pruning schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..core import GroupSpec, shrink, group_norms, broadcast_to_features
+from ..core.prox import sgl_prox
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightGroups:
+    """How one weight leaf decomposes into prunable groups.
+
+    ``axis`` is the group axis (e.g. the head axis of wq, the channel axis of
+    w_in); slices along it are the groups of an SGL problem whose features
+    are the individual weights.
+    """
+    path: str
+    axis: int
+    n_groups: int
+
+
+def head_groups_for(cfg) -> list[WeightGroups]:
+    """Default grouping: attention heads + FFN channels per scanned block."""
+    out = []
+    if cfg.mla:
+        out.append(WeightGroups("attn/wk_b", 2, cfg.num_heads))
+    else:
+        out.append(WeightGroups("attn/wq", 2, cfg.num_heads))
+    if cfg.num_experts:
+        out.append(WeightGroups("ffn/w_in", 1, cfg.num_experts))
+    else:
+        out.append(WeightGroups("ffn/w_in", 2, min(cfg.d_ff, 4096)))
+    return out
+
+
+def leaf_group_norms(w: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """L2 norm of each group slice."""
+    axes = tuple(i for i in range(w.ndim) if i != axis)
+    return jnp.sqrt(jnp.sum(w.astype(jnp.float32) ** 2, axis=axes))
+
+
+def sgl_weight_penalty(w: jnp.ndarray, axis: int, lam1, lam2) -> jnp.ndarray:
+    """alpha-weighted SGL penalty of one weight leaf."""
+    n_per = w.size // w.shape[axis]
+    gn = leaf_group_norms(w, axis)
+    return lam1 * jnp.sqrt(float(n_per)) * jnp.sum(gn) \
+        + lam2 * jnp.sum(jnp.abs(w))
+
+
+def sgl_weight_prox(w: jnp.ndarray, axis: int, t_lam1, t_lam2) -> jnp.ndarray:
+    """Exact SGL prox applied group-wise along ``axis`` (soft-threshold then
+    group soft-threshold) — same closed form as core.prox.sgl_prox."""
+    n_per = w.size // w.shape[axis]
+    u = shrink(w.astype(jnp.float32), t_lam2)
+    gn = jnp.sqrt(jnp.sum(u * u, axis=tuple(
+        i for i in range(w.ndim) if i != axis), keepdims=True))
+    tg = t_lam1 * jnp.sqrt(float(n_per))
+    scale = jnp.where(gn > tg, 1.0 - tg / jnp.where(gn > 0, gn, 1.0), 0.0)
+    return (u * scale).astype(w.dtype)
+
+
+def screen_weight_groups(acts: jnp.ndarray, resid: jnp.ndarray,
+                         spec: GroupSpec, alpha, lam, lam_bar, theta_bar):
+    """TLFre layer-1 on the linearised subproblem  min 0.5||resid - acts b||^2
+    + SGL(b):  certify weight groups that stay zero.  ``acts``: (samples,
+    features) local activation matrix; reuses the exact core machinery."""
+    from ..core import (column_norms, estimate_dual_ball,
+                        group_frobenius_norms, normal_vector_sgl, tlfre_screen,
+                        lambda_max_sgl)
+    lam_max, g_star = lambda_max_sgl(spec, acts.T @ resid, alpha)
+    n_vec = normal_vector_sgl(acts, resid, spec, lam_bar, lam_max, theta_bar,
+                              g_star)
+    ball = estimate_dual_ball(resid, lam, lam_bar, theta_bar, n_vec)
+    return tlfre_screen(acts, spec, alpha, ball, column_norms(acts),
+                        group_frobenius_norms(acts, spec), safety=1e-6)
+
+
+def apply_group_mask(w: jnp.ndarray, axis: int, keep: jnp.ndarray):
+    """Zero out (freeze) pruned groups."""
+    shape = [1] * w.ndim
+    shape[axis] = w.shape[axis]
+    return w * keep.reshape(shape).astype(w.dtype)
+
+
+def group_sparsity_stats(w: jnp.ndarray, axis: int, tol=1e-8):
+    gn = leaf_group_norms(w, axis)
+    return {"groups": int(gn.size),
+            "inactive": int(jnp.sum(gn <= tol)),
+            "weight_sparsity": float(jnp.mean(jnp.abs(w) <= tol))}

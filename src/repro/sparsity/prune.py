@@ -1,0 +1,52 @@
+"""Periodic TLFre certification of LM weight groups (DESIGN.md section 4).
+
+During SGL-regularised training (prox-AdamW, see launch/train.py), groups
+whose norms the prox has driven to zero are only *empirically* zero.  This
+module runs the paper's layer-1 rule on the LINEARISED local subproblem
+
+    min_b 0.5 || r - A b ||^2 + lam (alpha sum_g w_g ||b_g|| + ||b||_1)
+
+with A = a batch of layer-input activations and r the residual target, and
+certifies which groups are provably zero at the optimum — those are frozen
+(masked) and skipped by the optimiser from then on: the paper's "removed
+from the optimization", applied to heads/channels/experts.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..core import (GroupSpec, column_norms, estimate_dual_ball,
+                    group_frobenius_norms, lambda_max_sgl, normal_vector_sgl,
+                    tlfre_screen)
+from . import group_reg
+
+
+def certify_inactive_groups(acts: jnp.ndarray, resid: jnp.ndarray,
+                            spec: GroupSpec, alpha: float, lam: float,
+                            safety: float = 1e-6):
+    """Run TLFre (layer 1+2) on the linearised subproblem from lam_max down
+    to ``lam`` in one jump.  Returns ScreenResult; ~res.group_keep are the
+    groups certified zero at ``lam``."""
+    xty = acts.T @ resid
+    lam_max, g_star = lambda_max_sgl(spec, xty, alpha)
+    lam_max_f = jnp.maximum(lam_max, lam)
+    theta_bar = resid / lam_max_f
+    n_vec = normal_vector_sgl(acts, resid, spec, lam_max_f, lam_max_f,
+                              theta_bar, g_star)
+    ball = estimate_dual_ball(resid, lam, lam_max_f, theta_bar, n_vec)
+    return tlfre_screen(acts, spec, alpha, ball, column_norms(acts),
+                        group_frobenius_norms(acts, spec), safety=safety)
+
+
+def prune_step(w: jnp.ndarray, axis: int, acts: jnp.ndarray,
+               resid: jnp.ndarray, alpha: float, lam: float):
+    """Certify + freeze one weight leaf's groups.  ``acts``: (samples,
+    n_groups) group-aggregated activations (one feature per group for the
+    group-level rule).  Returns (masked weight, keep mask, #pruned)."""
+    spec = GroupSpec.uniform_groups(acts.shape[1], 1)
+    res = certify_inactive_groups(acts, resid, spec, alpha, lam)
+    keep = res.group_keep
+    w_new = group_reg.apply_group_mask(w, axis, keep)
+    return w_new, keep, int(jnp.sum(~keep))

@@ -1,0 +1,13 @@
+"""Test configuration.
+
+float64 is enabled globally: the screening-rule exactness proofs are
+real-analysis statements and the property tests check them to ~1e-10.  Model
+code declares its dtypes explicitly, so it is unaffected.
+
+NOTE: XLA_FLAGS --xla_force_host_platform_device_count is deliberately NOT
+set here — smoke tests and benches must see the 1 real CPU device; only the
+dry-run entrypoint forces 512 (see src/repro/launch/dryrun.py).
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)

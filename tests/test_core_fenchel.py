@@ -1,0 +1,115 @@
+"""Unit tests: decomposition operators, dual feasibility, lambda_max.
+
+These pin down the paper's closed forms (Lemma 3, Theorem 8, Lemma 9,
+Corollary 10) against brute-force numerics.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (GroupSpec, dual_decompose, group_shrink_roots,
+                        lambda1_max, lambda2_max, lambda_max_sgl, proj_binf,
+                        sgl_dual_feasible, shrink, solve_sgl, spectral_norm,
+                        dual_scaling_sgl)
+
+
+def _problem(seed=0, N=30, G=12, n=4, frac=0.25):
+    rng = np.random.default_rng(seed)
+    p = G * n
+    X = rng.standard_normal((N, p))
+    beta = np.zeros(p)
+    for g in rng.choice(G, max(1, int(G * frac)), replace=False):
+        idx = np.arange(g * n, (g + 1) * n)
+        beta[rng.choice(idx, 2, replace=False)] = rng.standard_normal(2)
+    y = X @ beta + 0.01 * rng.standard_normal(N)
+    return jnp.asarray(X), jnp.asarray(y), GroupSpec.uniform_groups(G, n)
+
+
+def test_shrink_is_residual_of_projection():
+    """Eq. (19): S_gamma(w) = w - P_{gamma*Binf}(w), for all w."""
+    w = jnp.asarray(np.random.default_rng(0).standard_normal(1000) * 3)
+    np.testing.assert_allclose(shrink(w, 1.3), w - proj_binf(w, 1.3),
+                               atol=1e-12)
+
+
+def test_dual_decomposition_identity():
+    """Remark 2: xi = P_Binf(xi) + S_1(xi), with each part in its set."""
+    xi = jnp.asarray(np.random.default_rng(1).standard_normal(512) * 5)
+    pb, sh = dual_decompose(xi)
+    np.testing.assert_allclose(pb + sh, xi, atol=1e-12)
+    assert float(jnp.max(jnp.abs(pb))) <= 1.0 + 1e-12
+
+
+@pytest.mark.parametrize("alpha", [0.087, 0.5, 1.0, 3.7])
+def test_lambda_max_boundary(alpha):
+    """Theorem 8: y/lambda feasible iff lambda >= lambda_max^alpha."""
+    X, y, spec = _problem(2)
+    lam_max, _ = lambda_max_sgl(spec, X.T @ y, alpha)
+    lam_max = float(lam_max)
+    assert lam_max > 0
+    assert bool(sgl_dual_feasible(spec, X.T @ (y / lam_max), alpha, tol=1e-9))
+    assert not bool(sgl_dual_feasible(spec, X.T @ (y / (0.995 * lam_max)),
+                                      alpha, tol=1e-12))
+
+
+@pytest.mark.parametrize("alpha", [0.3, 1.0])
+def test_lambda_max_zero_solution(alpha):
+    """Theorem 8 (iii)<->(iv): beta*=0 iff lambda >= lambda_max."""
+    X, y, spec = _problem(3)
+    lam_max = float(lambda_max_sgl(spec, X.T @ y, alpha)[0])
+    L = spectral_norm(X) ** 2
+    above = solve_sgl(X, y, spec, lam_max * 1.0001, alpha, L, tol=1e-13)
+    below = solve_sgl(X, y, spec, lam_max * 0.95, alpha, L, tol=1e-13)
+    assert float(jnp.max(jnp.abs(above.beta))) == 0.0
+    assert float(jnp.max(jnp.abs(below.beta))) > 0.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.floats(0.05, 5.0))
+def test_lemma9_roots(seed, alpha):
+    """Lemma 9: rho_g solves ||S_1(c/rho)|| = alpha*sqrt(n_g) exactly."""
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(1, 9, size=8)
+    spec = GroupSpec.from_sizes(sizes)
+    c = jnp.asarray(rng.standard_normal(int(sizes.sum())) * rng.uniform(0.1, 10))
+    rho = np.asarray(group_shrink_roots(spec, c, alpha))
+    cs = np.asarray(c)
+    start = 0
+    for g, n in enumerate(sizes):
+        cg = cs[start:start + n]
+        start += n
+        if np.max(np.abs(cg)) == 0:
+            assert rho[g] == 0
+            continue
+        val = np.linalg.norm(np.sign(cg) * np.maximum(np.abs(cg) / rho[g] - 1, 0))
+        np.testing.assert_allclose(val, alpha * np.sqrt(n), rtol=1e-6,
+                                   atol=1e-9)
+
+
+def test_corollary10():
+    """lambda1 >= lambda1_max(lambda2) iff y is dual feasible for (2)."""
+    X, y, spec = _problem(5)
+    xty = X.T @ y
+    lam2 = 0.4 * float(lambda2_max(xty))
+    l1m = float(lambda1_max(spec, xty, lam2))
+    # feasibility of y for problem (28): ||S_{lam2}(X_g^T y)|| <= lam1*w_g
+    from repro.core import group_norms
+    norms = np.asarray(group_norms(spec, shrink(xty, lam2)))
+    w = np.asarray(spec.weights)
+    assert np.all(norms <= l1m * w * (1 + 1e-12))
+    assert np.any(norms > 0.999 * l1m * w)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_dual_scaling_feasible(seed):
+    """dual_scaling_sgl returns s with s*rho feasible (gap machinery)."""
+    rng = np.random.default_rng(seed)
+    X, y, spec = _problem(seed % 100, N=20, G=6, n=3)
+    rho = jnp.asarray(rng.standard_normal(20))
+    alpha = 0.8
+    s = float(dual_scaling_sgl(spec, X.T @ rho, alpha))
+    assert 0 < s <= 1.0
+    assert bool(sgl_dual_feasible(spec, X.T @ (s * rho), alpha, tol=1e-9))

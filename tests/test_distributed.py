@@ -1,0 +1,109 @@
+"""Distributed substrate tests: sharding rules + gradient compression."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import compression as C
+from repro.distributed import sharding as sh
+from repro.models.common import ParamDesc, resolve_spec
+from repro.configs.base import get_config
+from repro.models import model as M
+
+
+MESH = {"pod": 2, "data": 16, "model": 16}
+
+
+def test_resolve_spec_divisibility_fallback():
+    # 8 KV heads cannot shard over a 16-way model axis -> replicated
+    d = ParamDesc((1024, 8, 128), ("embed", "kv_heads", None))
+    spec = resolve_spec(d, MESH)
+    assert spec == P(("pod", "data"), None, None)
+    # 96 heads CAN shard
+    d = ParamDesc((1024, 96, 128), ("embed", "heads", None))
+    assert resolve_spec(d, MESH)[1] == "model"
+    # single-pod mesh: 'pod' pruned from candidates
+    spec = resolve_spec(ParamDesc((1024, 96), ("embed", "heads")),
+                        {"data": 16, "model": 16})
+    assert spec == P("data", "model")
+
+
+def test_param_specs_structure_matches_params():
+    for arch in ("gemma2-2b", "deepseek-v2-236b", "zamba2-2.7b"):
+        cfg = get_config(arch)
+        abstract = M.abstract_params(cfg, jnp.float32)
+        specs = M.param_pspecs(cfg, MESH)
+        # same tree structure
+        jax.tree.map(lambda a, s: None, abstract,
+                     jax.tree.map(lambda s: s, specs,
+                                  is_leaf=lambda x: isinstance(x, P)))
+        for leaf, spec in zip(
+                jax.tree.leaves(abstract),
+                jax.tree.leaves(specs,
+                                is_leaf=lambda x: isinstance(x, P))):
+            # every sharded dim divides
+            for size, part in zip(leaf.shape, spec):
+                if part is None:
+                    continue
+                axes = part if isinstance(part, tuple) else (part,)
+                n = int(np.prod([MESH[a] for a in axes]))
+                assert size % n == 0, (arch, leaf.shape, spec)
+
+
+def test_cache_pspecs_structure():
+    for arch in ("gemma3-12b", "minicpm3-4b", "zamba2-2.7b", "xlstm-350m"):
+        cfg = get_config(arch)
+        shapes = M.cache_shapes(cfg, 128, 32768)
+        specs = sh.cache_pspecs(cfg, 128, 32768, MESH)
+        jax.tree.map(lambda a, s: None, shapes,
+                     specs, is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 2000), st.integers(0, 10**6), st.floats(0.01, 100.0))
+def test_int8_compression_roundtrip_error_bound(n, seed, scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n) * scale, jnp.float32)
+    comp, err = C.compress(x)
+    deq = C.decompress(comp)
+    # blockwise int8: |x - deq| <= max|block| / 127 per element
+    assert deq.shape == x.shape
+    bound = float(jnp.max(jnp.abs(x))) / 127.0 + 1e-6
+    assert float(jnp.max(jnp.abs(x - deq))) <= bound * 1.01
+    # error feedback carries exactly the quantisation residual
+    np.testing.assert_allclose(np.asarray(err), np.asarray(x - deq),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_error_feedback_reduces_bias():
+    """With error feedback, the ACCUMULATED dequantised signal tracks the
+    accumulated true signal to one quantisation step (no drift)."""
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.standard_normal((50, 300)) * 0.01, jnp.float32)
+    err = jnp.zeros(300)
+    acc_true = np.zeros(300)
+    acc_deq = np.zeros(300)
+    for t in range(50):
+        comp, err = C.compress(g_true[t], err)
+        acc_true += np.asarray(g_true[t])
+        acc_deq += np.asarray(C.decompress(comp))
+    # residual bounded by one step's quantisation error, NOT sqrt(T) drift
+    resid = np.abs(acc_true - acc_deq).max()
+    one_step = float(jnp.max(jnp.abs(g_true))) / 127.0
+    assert resid <= 2 * one_step, (resid, one_step)
+
+
+def test_compression_tree_and_wire_bytes():
+    tree = {"a": jnp.ones((1000,)), "b": {"c": jnp.ones((3, 7))}}
+    comp, err = C.compress_tree(tree)
+    out = C.decompress_tree(comp)
+    jax.tree.map(lambda x, y: None, tree, out)
+    wire = C.wire_bytes(tree)
+    f32 = sum(l.size * 4 for l in jax.tree.leaves(tree))
+    assert wire < f32 / 3            # ~4x compression incl. scales

@@ -1,0 +1,75 @@
+"""Batched lambda-grid screening (beyond-paper) must agree with the
+sequential per-lambda rule, and the prune integration must be safe."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (GroupSpec, column_norms, estimate_dual_ball,
+                        group_spectral_norms, lambda_max_sgl,
+                        normal_vector_sgl, tlfre_screen)
+from repro.core.screening import tlfre_screen_grid
+from repro.sparsity.prune import certify_inactive_groups, prune_step
+from repro.core import solve_sgl, spectral_norm
+
+
+def _problem(seed=0, N=40, G=20, n=5):
+    rng = np.random.default_rng(seed)
+    p = G * n
+    X = rng.standard_normal((N, p))
+    beta = np.zeros(p)
+    for g in rng.choice(G, 4, replace=False):
+        beta[g * n + rng.choice(n, 2, replace=False)] = rng.standard_normal(2)
+    y = X @ beta + 0.01 * rng.standard_normal(N)
+    return jnp.asarray(X), jnp.asarray(y), GroupSpec.uniform_groups(G, n)
+
+
+def test_grid_matches_sequential_rule():
+    X, y, spec = _problem(3)
+    alpha = 1.0
+    lam_max, g_star = lambda_max_sgl(spec, X.T @ y, alpha)
+    lam_max = float(lam_max)
+    col_n = column_norms(X)
+    gspec = group_spectral_norms(X, spec)
+    theta_bar, lam_bar = y / lam_max, lam_max
+    n_vec = normal_vector_sgl(X, y, spec, lam_bar, lam_max, theta_bar, g_star)
+
+    lambdas = lam_max * np.asarray([0.9, 0.6, 0.3, 0.1])
+    gk, fk, radii = tlfre_screen_grid(X, y, spec, alpha, lambdas, lam_bar,
+                                      theta_bar, n_vec, col_n, gspec)
+    for i, lam in enumerate(lambdas):
+        ball = estimate_dual_ball(y, lam, lam_bar, theta_bar, n_vec)
+        ref = tlfre_screen(X, spec, alpha, ball, col_n, gspec)
+        np.testing.assert_array_equal(np.asarray(gk[i]),
+                                      np.asarray(ref.group_keep))
+        np.testing.assert_array_equal(np.asarray(fk[i]),
+                                      np.asarray(ref.feat_keep))
+        assert abs(float(radii[i]) - float(ball.radius)) < 1e-9
+
+
+def test_certify_inactive_groups_is_safe():
+    """Groups certified zero by the prune integration must be zero in the
+    exact SGL solution of the linearised subproblem."""
+    X, y, spec = _problem(7)
+    alpha, lam_frac = 1.0, 0.5
+    lam_max = float(lambda_max_sgl(spec, X.T @ y, alpha)[0])
+    lam = lam_frac * lam_max
+    res = certify_inactive_groups(X, y, spec, alpha, lam)
+    sol = solve_sgl(X, y, spec, lam, alpha, spectral_norm(X) ** 2, tol=1e-13,
+                    max_iter=100_000)
+    beta = np.asarray(sol.beta)
+    gid = np.asarray(spec.group_ids)
+    for g in np.nonzero(~np.asarray(res.group_keep))[0]:
+        assert np.all(np.abs(beta[gid == g]) < 1e-9), f"group {g} was active"
+
+
+def test_prune_step_masks_weights():
+    rng = np.random.default_rng(0)
+    n_groups = 16
+    acts = jnp.asarray(rng.standard_normal((64, n_groups)))
+    resid = jnp.asarray(rng.standard_normal(64) * 0.1)
+    w = jnp.asarray(rng.standard_normal((8, n_groups, 4)), jnp.float32)
+    w_new, keep, n_pruned = prune_step(w, 1, acts, resid, alpha=1.0,
+                                       lam=float(1e3))
+    # at an absurdly large lambda, everything is certified inactive
+    assert n_pruned == n_groups
+    assert float(jnp.max(jnp.abs(w_new))) == 0.0

@@ -1,0 +1,95 @@
+"""Tests for the loop-aware HLO analyzer (the roofline's measurement tool)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+def test_scan_trip_count_expansion():
+    """FLOPs of a scanned matmul must scale with the trip count (raw
+    cost_analysis counts the body once — the bug this module exists for)."""
+    def f(x, ws):
+        def body(c, w):
+            return c @ w, None
+        out, _ = jax.lax.scan(body, x, ws)
+        return out
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    for trips in (3, 11):
+        ws = jax.ShapeDtypeStruct((trips, 64, 64), jnp.float32)
+        c = _compile(f, x, ws)
+        t = H.analyze(c.as_text(), c.cost_analysis())
+        expect = trips * 2 * 64 ** 3
+        assert abs(t["flops"] - expect) / expect < 0.02, (trips, t["flops"])
+        # raw XLA number is trip-count-independent (body once)
+        assert t["raw_cost_flops"] < expect / max(trips - 1, 1) * 1.2
+
+
+def test_nested_scan_multiplies():
+    def f(x, ws):
+        def outer(c, w):
+            def inner(ci, _):
+                return ci @ w, None
+            c2, _ = jax.lax.scan(inner, c, None, length=5)
+            return c2, None
+        out, _ = jax.lax.scan(outer, x, ws)
+        return out
+
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    ws = jax.ShapeDtypeStruct((4, 32, 32), jnp.float32)
+    c = _compile(f, x, ws)
+    t = H.analyze(c.as_text(), c.cost_analysis())
+    expect = 4 * 5 * 2 * 32 ** 3
+    assert abs(t["flops"] - expect) / expect < 0.05
+
+
+def test_dot_flops_from_shapes():
+    def f(a, b):
+        return a @ b
+
+    a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    c = _compile(f, a, b)
+    t = H.analyze(c.as_text(), c.cost_analysis())
+    expect = 2 * 128 * 256 * 512
+    assert abs(t["flops"] - expect) / expect < 0.01
+
+
+def test_shape_parsing():
+    elems, b = H._parse_shape("f32[16,128]")
+    assert b == 16 * 128 * 4
+    elems, b = H._parse_shape("(f32[8]{0}, bf16[4,4]{1,0})")
+    assert b == 8 * 4 + 16 * 2
+    # '/*index=5*/' comments inside tuple shapes must not break parsing
+    _, b = H._parse_shape("(s32[], f32[2,2]{1,0}, /*index=2*/pred[])")
+    assert b == 4 + 16 + 1
+
+
+def test_statement_parser_handles_tuple_shapes():
+    s = ("%while.1 = (s32[], f32[16,1,64]{2,1,0}, /*index=5*/pred[]) "
+         "while(%tuple.9), condition=%cond.1, body=%body.1")
+    name, shape, kind = H._parse_statement(s)
+    assert name == "while.1"
+    assert kind == "while"
+
+
+def test_hbm_slice_accounting():
+    """dynamic-slice reads only the slice, not the operand."""
+    def f(x):
+        def body(c, i):
+            sl = jax.lax.dynamic_slice_in_dim(x, i * 8, 8, 0)
+            return c + jnp.sum(sl), None
+        out, _ = jax.lax.scan(body, jnp.zeros(()), jnp.arange(64))
+        return out
+
+    xs = jax.ShapeDtypeStruct((512, 1024), jnp.float32)
+    c = _compile(f, xs)
+    t = H.analyze(c.as_text(), c.cost_analysis())
+    full_reads = 64 * 512 * 1024 * 4          # if each step read all of x
+    assert t["bytes"] < full_reads / 4, "slice traffic should be ~slice-sized"

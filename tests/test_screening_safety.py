@@ -1,0 +1,149 @@
+"""THE property of the paper: screening is SAFE (exact).
+
+Every group/feature discarded by TLFre (Theorems 12/15/16/17) and every
+feature discarded by DPC (Theorems 21/22) must have a zero coefficient in a
+high-precision solution of the full problem.  Checked by hypothesis over
+random problems, parameters, and path positions.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (GroupSpec, column_norms, dpc_screen,
+                        estimate_dual_ball, gap_safe_ball,
+                        group_spectral_norms, lambda_max_nn, lambda_max_sgl,
+                        nn_lasso_path, normal_vector_nn, normal_vector_sgl,
+                        rejection_ratios_sgl, sgl_path, solve_nn_lasso,
+                        solve_sgl, spectral_norm, tlfre_screen,
+                        sgl_primal_objective, sgl_dual_objective)
+
+
+def _problem(seed, N=40, G=15, n=4):
+    rng = np.random.default_rng(seed)
+    p = G * n
+    X = rng.standard_normal((N, p))
+    beta = np.zeros(p)
+    for g in rng.choice(G, 3, replace=False):
+        idx = np.arange(g * n, (g + 1) * n)
+        beta[rng.choice(idx, 2, replace=False)] = rng.standard_normal(2)
+    y = X @ beta + 0.01 * rng.standard_normal(N)
+    return jnp.asarray(X), jnp.asarray(y), GroupSpec.uniform_groups(G, n)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10**6), st.floats(0.2, 2.5), st.floats(0.35, 0.95))
+def test_tlfre_screening_is_safe(seed, alpha, lam_frac):
+    """Sequential TLFre at lambda = frac * lambda_bar never discards an
+    active coefficient of the exact solution."""
+    X, y, spec = _problem(seed)
+    xty = X.T @ y
+    lam_max, g_star = lambda_max_sgl(spec, xty, alpha)
+    lam_max = float(lam_max)
+    L = spectral_norm(X) ** 2
+    col_n = column_norms(X)
+    gspec = group_spectral_norms(X, spec)
+
+    # previous path point: exact dual at lam_bar = lam_max (theta = y/lam)
+    lam_bar = lam_max
+    theta_bar = y / lam_max
+    lam = lam_frac * lam_bar
+    n_vec = normal_vector_sgl(X, y, spec, lam_bar, lam_max, theta_bar, g_star)
+    ball = estimate_dual_ball(y, lam, lam_bar, theta_bar, n_vec)
+    res = tlfre_screen(X, spec, alpha, ball, col_n, gspec)
+
+    sol = solve_sgl(X, y, spec, lam, alpha, L, tol=1e-13, max_iter=100_000)
+    beta = np.asarray(sol.beta)
+    feat_keep = np.asarray(res.feat_keep)
+    gid = np.asarray(spec.group_ids)
+    group_keep = np.asarray(res.group_keep)
+
+    active = np.abs(beta) > 1e-9
+    # L1 safety: discarded groups have all-zero coefficients
+    assert not np.any(active & ~group_keep[gid]), "L1 discarded active group"
+    # L2 safety: discarded features are zero
+    assert not np.any(active & ~feat_keep), "L2 discarded active feature"
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10**6), st.floats(0.1, 0.9))
+def test_dpc_screening_is_safe(seed, lam_frac):
+    rng = np.random.default_rng(seed)
+    N, p = 30, 120
+    X = rng.standard_normal((N, p))
+    beta = np.zeros(p)
+    beta[rng.choice(p, 10, replace=False)] = np.abs(rng.standard_normal(10))
+    y = X @ beta + 0.01 * rng.standard_normal(N)
+    X, y = jnp.asarray(X), jnp.asarray(y)
+    xty = X.T @ y
+    lam_max, i_star = lambda_max_nn(xty)
+    lam_max = float(lam_max)
+    if lam_max <= 0:
+        return
+    lam = lam_frac * lam_max
+    theta_bar = y / lam_max
+    n_vec = normal_vector_nn(X, y, lam_max, lam_max, theta_bar, i_star)
+    ball = estimate_dual_ball(y, lam, lam_max, theta_bar, n_vec)
+    keep = np.asarray(dpc_screen(X, ball, column_norms(X)))
+    L = spectral_norm(X) ** 2
+    sol = solve_nn_lasso(X, y, lam, L, tol=1e-13, max_iter=100_000)
+    active = np.asarray(sol.beta) > 1e-9
+    assert not np.any(active & ~keep), "DPC discarded an active feature"
+
+
+def test_screened_path_equals_baseline_path():
+    """End-to-end: the TLFre-screened path reproduces the baseline path."""
+    X, y, spec = _problem(7, N=50, G=20, n=5)
+    res_s = sgl_path(np.asarray(X), np.asarray(y), spec, 1.0, n_lambdas=12,
+                     tol=1e-11)
+    res_b = sgl_path(np.asarray(X), np.asarray(y), spec, 1.0, n_lambdas=12,
+                     tol=1e-11, screen="none")
+    np.testing.assert_allclose(res_s.betas, res_b.betas, atol=5e-6)
+    # screening must actually remove something on the early path
+    assert res_s.kept_features[1] < spec.num_features
+
+
+def test_nn_path_equals_baseline_path():
+    rng = np.random.default_rng(3)
+    N, p = 40, 150
+    X = rng.standard_normal((N, p))
+    beta = np.zeros(p)
+    beta[rng.choice(p, 12, replace=False)] = np.abs(rng.standard_normal(12))
+    y = X @ beta + 0.01 * rng.standard_normal(N)
+    res_s = nn_lasso_path(X, y, n_lambdas=12, tol=1e-11)
+    res_b = nn_lasso_path(X, y, n_lambdas=12, tol=1e-11, screen="none")
+    np.testing.assert_allclose(res_s.betas, res_b.betas, atol=5e-6)
+    assert res_s.kept_features[1] < p
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10**6))
+def test_gap_safe_ball_contains_optimum(seed):
+    """Beyond-paper Gap-Safe ball: ||theta* - theta|| <= sqrt(2 gap)/lam."""
+    X, y, spec = _problem(seed, N=30, G=10, n=3)
+    alpha, lam_frac = 1.0, 0.4
+    lam_max = float(lambda_max_sgl(spec, X.T @ y, alpha)[0])
+    lam = lam_frac * lam_max
+    L = spectral_norm(X) ** 2
+    # crude solution -> feasible dual + gap
+    rough = solve_sgl(X, y, spec, lam, alpha, L, tol=1e-3, max_iter=500)
+    p_val = sgl_primal_objective(X, y, rough.beta, spec, lam, alpha)
+    d_val = sgl_dual_objective(y, rough.theta, lam)
+    ball = gap_safe_ball(rough.theta, p_val, d_val, lam)
+    exact = solve_sgl(X, y, spec, lam, alpha, L, tol=1e-13, max_iter=100_000)
+    dist = float(jnp.linalg.norm(exact.theta - ball.center))
+    assert dist <= float(ball.radius) * (1 + 1e-6)
+
+
+def test_rejection_ratio_bookkeeping():
+    X, y, spec = _problem(11)
+    beta = np.zeros(spec.num_features)
+    beta[:4] = 1.0
+    gk = np.ones(spec.num_groups, bool)
+    gk[2:] = False                     # drop groups 2.. (features 8..)
+    fk = np.repeat(gk, 4)
+    r1, r2 = rejection_ratios_sgl(spec, beta, gk, fk)
+    m = (spec.num_features - 4)
+    assert abs(r1 - (spec.num_features - 8) / m) < 1e-12
+    assert r2 == 0.0
