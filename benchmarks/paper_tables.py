@@ -49,11 +49,12 @@ MAX_ITER = 6000
 CHECK_EVERY = 50
 
 
-def _speedup_row(name, X, y, spec, alpha, n_lambda, screen_kwargs=None):
+def _speedup_row(name, X, y, spec, alpha, n_lambda, screen_kwargs=None,
+                 engine="legacy"):
     screen_kwargs = screen_kwargs or {}
     res_s = sgl_path(X, y, spec, alpha, n_lambdas=n_lambda, tol=TOL,
                      safety=1e-6, max_iter=MAX_ITER, check_every=CHECK_EVERY,
-                     **screen_kwargs)
+                     engine=engine, **screen_kwargs)
     res_b = sgl_path(X, y, spec, alpha, n_lambdas=n_lambda, tol=TOL,
                      screen="none", max_iter=MAX_ITER,
                      check_every=CHECK_EVERY)
@@ -67,7 +68,7 @@ def _speedup_row(name, X, y, spec, alpha, n_lambda, screen_kwargs=None):
              round(res_s.screen_time / max(res_s.total_time, 1e-9), 4))]
 
 
-def table1_sgl_synthetic():
+def table1_sgl_synthetic(engine="legacy"):
     """Paper Table 1: solver vs TLFre+solver on Synthetic 1 / 2."""
     rows = []
     for kind, g1, g2 in ((1, 0.1, 0.1), (2, 0.2, 0.2)):
@@ -77,11 +78,11 @@ def table1_sgl_synthetic():
         for alpha in ALPHAS:
             deg = round(np.rad2deg(np.arctan(alpha)))
             rows += _speedup_row(f"table1_synth{kind}_tan{deg}", X, y, spec,
-                                 float(alpha), N_LAMBDA)
+                                 float(alpha), N_LAMBDA, engine=engine)
     return rows
 
 
-def table2_adni_scale():
+def table2_adni_scale(engine="legacy"):
     """Paper Table 2 protocol at ADNI-like shape (ragged gene groups).
 
     Real ADNI genotypes are access-controlled; this reproduces the shape
@@ -97,7 +98,8 @@ def table2_adni_scale():
     y = (X @ beta + 0.01 * rng.standard_normal(ADNI["N"])).astype(np.float32)
     n_lam = 8 if not FULL else 100
     return _speedup_row("table2_adni_scale_tan45", X, y, spec, 1.0, n_lam,
-                        screen_kwargs=dict(specnorm_method="frobenius"))
+                        screen_kwargs=dict(specnorm_method="frobenius"),
+                        engine=engine)
 
 
 def fig_rejection_sgl():
@@ -142,7 +144,7 @@ def fig_rejection_sgl():
             ("fig12_rejection_total_min", dt, round(float(np.min(tot)), 4))]
 
 
-def table3_dpc():
+def table3_dpc(engine="legacy"):
     """Paper Table 3: DPC speedups — synthetic 1/2 + image-dictionary
     stand-ins for the PIE/MNIST-style columns-regress-on-column task."""
     rows = []
@@ -150,7 +152,8 @@ def table3_dpc():
         X, y, _ = data_synth.synthetic_nn(kind, seed=kind, **NN_DIMS)
         name = f"table3_synth{kind}"
         res_s = nn_lasso_path(X, y, n_lambdas=N_LAMBDA, tol=TOL, safety=1e-6,
-                              max_iter=MAX_ITER, check_every=CHECK_EVERY)
+                              max_iter=MAX_ITER, check_every=CHECK_EVERY,
+                              engine=engine)
         res_b = nn_lasso_path(X, y, n_lambdas=N_LAMBDA, tol=TOL, screen="none",
                               max_iter=MAX_ITER, check_every=CHECK_EVERY)
         agree = float(np.max(np.abs(res_s.betas - res_b.betas)))
@@ -163,13 +166,48 @@ def table3_dpc():
     N_img, p_img = (1024, 11553) if FULL else (400, 1200)
     X, y = data_synth.image_like(N_img, p_img, seed=3)
     res_s = nn_lasso_path(X, y, n_lambdas=N_LAMBDA, tol=TOL, safety=1e-6,
-                          max_iter=MAX_ITER, check_every=CHECK_EVERY)
+                          max_iter=MAX_ITER, check_every=CHECK_EVERY,
+                          engine=engine)
     res_b = nn_lasso_path(X, y, n_lambdas=N_LAMBDA, tol=TOL, screen="none",
                           max_iter=MAX_ITER, check_every=CHECK_EVERY)
     rows.append(("table3_image_dict_screened",
                  res_s.total_time / N_LAMBDA * 1e6,
                  round(res_b.total_time / max(res_s.total_time, 1e-9), 2)))
     return rows
+
+
+def engine_bench(engine="batched"):
+    """Batched path engine vs the legacy per-lambda driver, same problem.
+
+    Rows: wall-clock per lambda for both drivers, the engine's host-sync
+    and solver-compilation counters, and the max |beta| disagreement (the
+    certification guarantee makes it solver-tolerance small)."""
+    X, y, _ = data_synth.synthetic_sgl(1, gamma1=0.1, gamma2=0.1, seed=1,
+                                       **SGL_DIMS)
+    spec = GroupSpec.uniform_groups(SGL_DIMS["G"], SGL_DIMS["n"])
+    # speculation needs the paper's dense grid: adjacent lambdas must be
+    # close enough that one segment's feature set covers several of them
+    n_lam = N_LAMBDA
+    kw = dict(n_lambdas=n_lam, tol=TOL, safety=1e-6, max_iter=MAX_ITER,
+              check_every=CHECK_EVERY)
+    res_l = sgl_path(X, y, spec, 1.0, **kw)
+    res_cold = sgl_path(X, y, spec, 1.0, engine=engine, **kw)
+    # steady state: sweep shapes are jit-cached, so a second path (the
+    # serving regime: many paths, same grid protocol) pays no compiles
+    res_e = sgl_path(X, y, spec, 1.0, engine=engine, **kw)
+    agree = float(np.max(np.abs(res_l.betas - res_e.betas)))
+    st = res_e.stats
+    return [
+        ("engine_legacy_path", res_l.total_time / n_lam * 1e6, n_lam),
+        ("engine_batched_cold", res_cold.total_time / n_lam * 1e6,
+         round(res_l.total_time / max(res_cold.total_time, 1e-9), 2)),
+        ("engine_batched_warm", res_e.total_time / n_lam * 1e6,
+         round(res_l.total_time / max(res_e.total_time, 1e-9), 2)),
+        ("engine_host_syncs", 0.0, st.n_segments + st.n_screens),
+        ("engine_solver_compilations", 0.0, st.n_compilations),
+        ("engine_speculative_rejects", 0.0, st.n_rejected),
+        ("engine_agree_max_abs", 0.0, round(agree, 8)),
+    ]
 
 
 def fig5_rejection_dpc():

@@ -1,12 +1,25 @@
 """Benchmark harness entry: one function per paper table/figure.
 
+Usage::
+
+    python -m benchmarks.run [SUITE_FILTER] [--engine {legacy,batched}]
+
 Prints ``name,us_per_call,derived`` CSV.  ``derived`` is the headline metric
 of the corresponding table (speedup x, rejection ratio, roofline fraction).
+
+``--engine`` selects the lambda-path driver used by the path suites
+(table1/table2/table3): ``legacy`` (default) is the paper-protocol
+per-lambda driver; ``batched`` is the device-resident engine
+(``core/path_engine.py``) — grid screening, speculative bucketed sweeps in
+a single ``lax.scan`` per segment, in-scan certification, O(log p) solver
+compilations.  The ``engine`` suite always benchmarks both drivers against
+each other and reports the engine's host-sync / compilation counters.
 
 REPRO_BENCH_FULL=1 switches to the paper's full dimensions.
 """
 from __future__ import annotations
 
+import functools
 import sys
 import time
 import traceback
@@ -67,6 +80,21 @@ def _roofline_rows():
 
 def main() -> None:
     from . import paper_tables
+    argv = sys.argv[1:]
+    engine = "legacy"
+    for i, a in enumerate(argv):
+        if a == "--engine":
+            if i + 1 >= len(argv):
+                raise SystemExit("--engine requires a value: legacy|batched")
+            engine = argv[i + 1]
+            del argv[i:i + 2]
+            break
+        if a.startswith("--engine="):
+            engine = a.split("=", 1)[1]
+            del argv[i]
+            break
+    if engine not in ("legacy", "batched"):
+        raise SystemExit(f"unknown --engine {engine!r}")
     # ordered so the claim-critical rejection figures and the roofline
     # table stream first (lambda-grid density per the paper's protocol:
     # rejection ratios are grid-sensitive, see EXPERIMENTS.md)
@@ -75,11 +103,14 @@ def main() -> None:
         ("fig5", paper_tables.fig5_rejection_dpc),
         ("kernels", _kernel_bench),
         ("roofline", _roofline_rows),
-        ("table3", paper_tables.table3_dpc),
-        ("table1", paper_tables.table1_sgl_synthetic),
-        ("table2", paper_tables.table2_adni_scale),
+        ("table3", functools.partial(paper_tables.table3_dpc, engine=engine)),
+        ("table1", functools.partial(paper_tables.table1_sgl_synthetic,
+                                     engine=engine)),
+        ("table2", functools.partial(paper_tables.table2_adni_scale,
+                                     engine=engine)),
+        ("engine", paper_tables.engine_bench),
     ]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    only = argv[0] if argv else None
     print("name,us_per_call,derived", flush=True)
     failures = 0
     for name, fn in suites:

@@ -18,7 +18,7 @@ beta_true[hot] = np.abs(rng.standard_normal(40))
 y = (X @ beta_true + 0.01 * rng.standard_normal(N)).astype(np.float32)
 
 res = nn_lasso_path(X, y, n_lambdas=40, tol=1e-6, safety=1e-6,
-                    max_iter=6000, check_every=50)
+                    max_iter=6000, check_every=50, engine="batched")
 base = nn_lasso_path(X, y, n_lambdas=40, tol=1e-6, screen="none",
                      max_iter=6000, check_every=50)
 
@@ -28,6 +28,8 @@ for j in range(0, 40, 8):
     print(f"  {res.lambdas[j]/res.lam_max:8.3f}   {res.kept_features[j]:8d}")
 print(f"\nmax |beta_dpc - beta_baseline| = "
       f"{np.max(np.abs(res.betas - base.betas)):.2e}")
+print(f"engine host round-trips: {res.stats.n_segments + res.stats.n_screens}"
+      f" (legacy would make {len(res.lambdas)})")
 print(f"DPC path      : {res.total_time:6.2f}s")
 print(f"baseline path : {base.total_time:6.2f}s")
 print(f"SPEEDUP       : {base.total_time / res.total_time:5.1f}x")

@@ -17,14 +17,20 @@ from .fenchel import (shrink, proj_binf, dual_decompose, sgl_dual_feasible,
 from .lambda_max import (lambda_max_sgl, lambda1_max, lambda2_max,
                          group_shrink_roots, dual_scaling_sgl)
 from .estimation import DualBall, estimate_dual_ball, gap_safe_ball, normal_vector_sgl
-from .screening import ScreenResult, tlfre_screen, sup_shrink_norm, screen_stats
-from .dpc import (lambda_max_nn, dpc_screen, normal_vector_nn, dual_scaling_nn,
+from .screening import (ScreenResult, tlfre_screen, sup_shrink_norm,
+                        screen_stats, tlfre_screen_grid, gap_safe_screen_grid,
+                        gap_safe_grid_radii, grid_ball_geometry)
+from .dpc import (lambda_max_nn, dpc_screen, dpc_screen_grid,
+                  normal_vector_nn, dual_scaling_nn,
                   nn_primal_objective, nn_dual_objective)
 from .prox import sgl_prox, nn_lasso_prox
 from .linalg import (spectral_norm, group_spectral_norms, column_norms,
                      group_frobenius_norms)
-from .solver import SolveResult, solve_sgl, solve_nn_lasso
+from .solver import (SolveResult, solve_sgl, solve_nn_lasso, fista_sgl,
+                     fista_nn_lasso)
 from .path import (PathResult, sgl_path, nn_lasso_path, default_lambda_grid,
                    rejection_ratios_sgl)
+from .path_engine import (EngineStats, sgl_path_batched,
+                          nn_lasso_path_batched)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

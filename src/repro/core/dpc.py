@@ -46,6 +46,26 @@ def dpc_screen(X, ball: DualBall, col_norms, safety: float = 0.0):
     return omega >= 1.0
 
 
+def dpc_screen_grid(X, y, lambdas, theta_bar, n_vec, col_norms,
+                    safety: float = 0.0):
+    """Theorem 22 for a WHOLE remaining lambda grid in one GEMM.
+
+    Same center/radius algebra as the SGL grid rule (Theorem 21 shares the
+    Theorem 12 geometry); returns (feat_keep (L, p), radii (L,))."""
+    from .screening import grid_ball_geometry
+    centers, radii = grid_ball_geometry(y, lambdas, theta_bar, n_vec)
+    radii = radii * (1.0 + safety)
+    omega = centers @ X + radii[:, None] * col_norms[None, :]
+    return omega >= 1.0, radii
+
+
+def gap_safe_screen_grid_nn(c_theta, radii, col_norms):
+    """Gap-Safe DPC grid rules for a fixed feasible center: one GEMV, radii
+    vary per lambda.  Returns feat_keep (L, p)."""
+    omega = c_theta[None, :] + radii[:, None] * col_norms[None, :]
+    return omega >= 1.0
+
+
 def dual_scaling_nn(xt_rho: jnp.ndarray):
     """Largest s in (0,1] with s * rho dual-feasible for (82)."""
     m = jnp.max(xt_rho)

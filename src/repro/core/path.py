@@ -44,6 +44,7 @@ class PathResult:
     iters: np.ndarray                   # (J,)
     kept_features: np.ndarray           # (J,) columns entering the solver
     kept_groups: Optional[np.ndarray] = None
+    stats: Optional[object] = None      # EngineStats when engine="batched"
 
     @property
     def total_time(self):
@@ -72,7 +73,24 @@ def _bucket(n: int, minimum: int = 64) -> int:
 def sgl_path(X, y, spec: GroupSpec, alpha, *, lambdas=None, n_lambdas=100,
              min_ratio=0.01, screen: str = "tlfre", tol=1e-9,
              max_iter: int = 20000, safety: float = 0.0,
-             specnorm_method: str = "power", check_every: int = 10) -> PathResult:
+             specnorm_method: str = "power", check_every: int = 10,
+             engine: str = "legacy", **engine_kwargs) -> PathResult:
+    """``engine='legacy'`` is the paper-protocol per-lambda driver below;
+    ``engine='batched'`` delegates to the device-resident grid engine
+    (``path_engine.sgl_path_batched``), which accepts the extra knobs
+    ``use_pallas`` / ``min_bucket`` / ``min_group_bucket``."""
+    if engine == "batched":
+        from .path_engine import sgl_path_batched
+        return sgl_path_batched(
+            X, y, spec, alpha, lambdas=lambdas, n_lambdas=n_lambdas,
+            min_ratio=min_ratio, screen=screen, tol=tol, max_iter=max_iter,
+            safety=safety, specnorm_method=specnorm_method,
+            check_every=check_every, **engine_kwargs)
+    if engine != "legacy":
+        raise ValueError(f"unknown engine {engine!r}")
+    if engine_kwargs:
+        raise TypeError(f"engine='legacy' takes no extra kwargs, got "
+                        f"{sorted(engine_kwargs)}")
     X = jnp.asarray(X)
     y = jnp.asarray(y)
     N, p = X.shape
@@ -190,7 +208,19 @@ def sgl_path(X, y, spec: GroupSpec, alpha, *, lambdas=None, n_lambdas=100,
 
 def nn_lasso_path(X, y, *, lambdas=None, n_lambdas=100, min_ratio=0.01,
                   screen: str = "dpc", tol=1e-9, max_iter: int = 20000,
-                  safety: float = 0.0, check_every: int = 10) -> PathResult:
+                  safety: float = 0.0, check_every: int = 10,
+                  engine: str = "legacy", **engine_kwargs) -> PathResult:
+    if engine == "batched":
+        from .path_engine import nn_lasso_path_batched
+        return nn_lasso_path_batched(
+            X, y, lambdas=lambdas, n_lambdas=n_lambdas, min_ratio=min_ratio,
+            screen=screen, tol=tol, max_iter=max_iter, safety=safety,
+            check_every=check_every, **engine_kwargs)
+    if engine != "legacy":
+        raise ValueError(f"unknown engine {engine!r}")
+    if engine_kwargs:
+        raise TypeError(f"engine='legacy' takes no extra kwargs, got "
+                        f"{sorted(engine_kwargs)}")
     X = jnp.asarray(X)
     y = jnp.asarray(y)
     N, p = X.shape

@@ -1,0 +1,645 @@
+"""Device-resident batched lambda-path engine (TLFre / Gap-Safe / DPC).
+
+The legacy drivers in ``path.py`` sync to host after EVERY lambda: one
+screening GEMV, one numpy submatrix rebuild, one solver dispatch per grid
+point — O(L) host round-trips for an L-point path.  This engine restructures
+the path into a handful of *segments*, each one device round-trip:
+
+  1. **Grid screening.**  At each segment boundary the ENTIRE remaining
+     lambda grid is screened in one shot: the Theorem-12 ball centers of all
+     remaining grid points share ``theta_bar``, so the L screening GEMVs
+     collapse into a single (L, N) x (N, p) GEMM
+     (``tlfre_screen_grid`` / ``dpc_screen_grid``) — the MXU-shaped
+     formulation.  ``screen='gapsafe'`` instead uses the dynamic Gap-Safe
+     ball around the latest exact dual; its center is shared across the
+     grid, so the GEMM collapses further to one GEMV.  Row 0 of the grid
+     (the next lambda) is the *safe base set* of the segment.
+
+  2. **Speculative bucketed sweep with in-scan certification.**  The ball
+     is near-vacuous a few grid steps past its reference, so distant rows
+     of the grid screen cannot pick solver sets.  Instead the segment
+     solves the next ``m`` lambdas on a fixed feature set S = safe base
+     set + nearby-row union + a margin of top-ranked groups, padded to a
+     power-of-two bucket (``GroupSpec.bucketed_subset``), inside ONE
+     jitted ``lax.scan`` whose carry is the warm-started coefficient
+     vector — the paper's exact-dual warm-start chain, kept on device.
+     Solving on a superset of the true active set yields the true optimum,
+     so each row certifies itself immediately after its solve: one full-X
+     GEMV recovers the exact dual (Lemma-9 scaling) and the FULL-problem
+     duality gap.  A failed certificate marks the scan dead — later rows
+     skip via ``lax.cond`` instead of solving on a stale set — so at most
+     one speculative solve per segment is wasted.
+
+  3. **Single host sync.**  The host reads the per-row certificates once
+     per segment, accepts the certified prefix (row 0 is solved on a
+     provably safe superset, so progress is guaranteed), and seeds the next
+     segment's screening and margin ranking with the last accepted row's
+     exact dual — which the sweep already computed.
+
+  4. **Pallas wiring.**  With ``use_pallas`` (auto: float32 on TPU), the
+     screening reductions run through the fused ``screen_norms`` kernel,
+     the FISTA prox through ``sgl_prox_padded``, and the certification
+     GEMV through ``xtv`` — all via ``kernels.ops``, which interprets the
+     kernels off-TPU.  The kernels are float32, so the engine only engages
+     them for float32 problems (float64 exactness runs keep pure jnp).
+
+Solver compilations are keyed on (feature bucket, group bucket, padded
+width, pow2 chunk length) and reused across segments — O(log p) distinct
+keys per path (``EngineStats.n_compilations``), versus one dispatch per
+lambda for the legacy driver.
+
+Knobs: ``min_bucket`` / ``min_group_bucket`` (smallest buckets, defaults
+64 / 16), ``margin`` (bucket slack filled with top-ranked groups: the
+bucket is the next power of two with at least ``margin`` fractional
+headroom over the safe base set, default 0.125), ``chunk_init`` (initial
+speculative chunk length, default 8; doubles on fully-certified segments).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .dpc import (dpc_screen_grid, dual_scaling_nn, gap_safe_screen_grid_nn,
+                  lambda_max_nn, normal_vector_nn)
+from .estimation import normal_vector_sgl
+from .fenchel import shrink
+from .groups import GroupSpec, group_norms
+from .lambda_max import dual_scaling_sgl, lambda_max_sgl
+from .linalg import (column_norms, group_frobenius_norms,
+                     group_spectral_norms, spectral_norm)
+from .path import PathResult, _bucket, default_lambda_grid
+from .screening import (gap_safe_grid_radii, gap_safe_screen_grid,
+                        tlfre_screen_grid)
+from .solver import fista_nn_lasso, fista_sgl
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Host-interaction accounting for the batched engine.
+
+    ``n_segments`` counts sweep round-trips (the legacy driver makes one
+    round-trip per lambda).  ``n_compilations`` counts distinct sweep
+    shapes — actual solver compilations; the O(log p) claim is about this
+    number.  ``n_rejected`` counts speculative rows whose certificate
+    failed (at most one solved row per segment is wasted; the rest are
+    skipped on device)."""
+    n_segments: int = 0
+    n_screens: int = 0
+    n_compilations: int = 0
+    n_rejected: int = 0
+    buckets: list = dataclasses.field(default_factory=list)  # (p_b, g_b, m, k)
+
+
+def _pallas_active(use_pallas: Optional[bool], dtype) -> bool:
+    """The Pallas kernels are float32; never engage them for float64 runs."""
+    if dtype != jnp.float32:
+        return False
+    if use_pallas is None:
+        return jax.default_backend() == "tpu"
+    return bool(use_pallas)
+
+
+def _xtv(X, v, use_pallas: bool):
+    if use_pallas:
+        from ..kernels import ops as _kops
+        return _kops.xtv(X, v)
+    return X.T @ v
+
+
+def _padded_prox(spec: GroupSpec):
+    """Fused SGL prox through the Pallas kernel on the padded layout.
+
+    Padding columns beyond the garbage bin's first ``n_max`` slots never
+    enter the padded view; their gradient is zero and they start at zero, so
+    scattering back onto a zero vector is exact."""
+    from ..kernels import ops as _kops
+
+    def prox(v, t_l1, t_group):
+        v_pad = jnp.where(spec.pad_mask, v[spec.pad_index], 0.0)
+        out = _kops.sgl_prox_padded(v_pad.astype(jnp.float32), spec.pad_mask,
+                                    t_l1, t_group)
+        return jnp.zeros_like(v).at[spec.pad_index].add(
+            jnp.where(spec.pad_mask, out, 0.0).astype(v.dtype))
+
+    return prox
+
+
+def _pow2_len(m: int) -> int:
+    b = 1
+    while b < m:
+        b *= 2
+    return b
+
+
+# The remaining-grid length shrinks every segment; pad it to a power of two
+# (repeating the last lambda) so the jitted grid screens retrace O(log L)
+# times per path instead of once per segment.
+_tlfre_grid_jit = functools.partial(jax.jit, static_argnames=("use_pallas",))(
+    tlfre_screen_grid)
+_gap_safe_grid_jit = functools.partial(
+    jax.jit, static_argnames=("use_pallas",))(gap_safe_screen_grid)
+_gap_safe_radii_jit = jax.jit(gap_safe_grid_radii)
+_dpc_grid_jit = jax.jit(dpc_screen_grid)
+_gap_safe_nn_jit = jax.jit(gap_safe_screen_grid_nn)
+
+
+def _pad_grid(lambdas_rem: np.ndarray, dtype):
+    """(padded device grid, real length) with the tail repeating the last
+    lambda — extra rows are computed and discarded on the host slice."""
+    L = len(lambdas_rem)
+    Lp = _pow2_len(L)
+    pad = np.concatenate([lambdas_rem, np.full(Lp - L, lambdas_rem[-1])])
+    return jnp.asarray(pad, dtype), L
+
+
+def _feature_bucket(n_base: int, p: int, min_bucket: int,
+                    margin: float) -> int:
+    """Next power-of-two bucket with at least ``margin`` fractional slack
+    over the safe base set (the slack is filled with speculative groups)."""
+    b = min(_bucket(max(n_base, 1), min_bucket), p)
+    if b < p and b - n_base < margin * b:
+        b = min(b * 2, p)
+    return b
+
+
+def _expand_set(base, fk_np, cap: int):
+    """Union nearby grid-screen rows into the base set while it stays under
+    ``cap`` features — free lookahead from the one-shot grid screen."""
+    S = base.copy()
+    for r in range(1, min(len(fk_np), 8)):
+        trial = S | fk_np[r]
+        if int(trial.sum()) > cap:
+            break
+        S = trial
+    return S
+
+
+# ---------------------------------------------------------------------------
+# Jitted sweeps: lax.scan over a lambda chunk, carry = (beta, alive).
+# Each row certifies itself against the FULL problem right after its solve;
+# a failed certificate kills the remaining rows on device.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_iter", "check_every", "use_pallas"))
+def _sweep_sgl(X, X_sub, y, spec: GroupSpec, sub_spec: GroupSpec, alpha,
+               lipschitz, lams, valid, beta0, tol, gap_scale, *,
+               max_iter: int, check_every: int, use_pallas: bool):
+    prox = _padded_prox(sub_spec) if use_pallas else None
+    N = y.shape[0]
+    p = X.shape[1]
+
+    def step(carry, xs):
+        beta, alive = carry
+        lam, ok, idx = xs
+
+        def run(b):
+            res = fista_sgl(X_sub, y, sub_spec, lam, alpha, lipschitz, b,
+                            max_iter=max_iter, check_every=check_every,
+                            tol=tol, prox=prox)
+            resid = y - X_sub @ res.beta
+            rho = resid / lam
+            c = _xtv(X, rho, use_pallas).astype(b.dtype)   # full-X GEMV
+            s = dual_scaling_sgl(spec, c, alpha)
+            theta = (s * rho).astype(b.dtype)
+            pen = (alpha * jnp.sum(sub_spec.weights
+                                   * group_norms(sub_spec, res.beta))
+                   + jnp.sum(jnp.abs(res.beta)))
+            pval = 0.5 * jnp.vdot(resid, resid) + lam * pen
+            d = y - lam * theta
+            dval = 0.5 * jnp.vdot(y, y) - 0.5 * jnp.vdot(d, d)
+            gap = pval - dval
+            # a max_iter-capped solve only certifies on the provably safe
+            # row 0 (legacy accepts its best-effort solution there too)
+            good = (gap <= tol * gap_scale * 1.01) | \
+                   ((idx == 0) & (res.iters >= max_iter))
+            return res.beta, theta, (s * c).astype(b.dtype), good, res.iters
+
+        def skip(b):
+            return (b, jnp.zeros(N, b.dtype), jnp.zeros(p, b.dtype),
+                    jnp.asarray(False), jnp.asarray(0))
+
+        beta_new, theta, ctheta, good, its = jax.lax.cond(
+            alive & ok, run, skip, beta)
+        return (beta_new, alive & good), (beta_new, theta, ctheta, good, its)
+
+    idxs = jnp.arange(lams.shape[0])
+    _, out = jax.lax.scan(step, (beta0, jnp.asarray(True)),
+                          (lams, valid, idxs))
+    return out   # (betas, thetas, cthetas, good, iters)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_iter", "check_every", "use_pallas"))
+def _sweep_nn(X, X_sub, y, lipschitz, lams, valid, beta0, tol, gap_scale, *,
+              max_iter: int, check_every: int, use_pallas: bool):
+    N = y.shape[0]
+    p = X.shape[1]
+
+    def step(carry, xs):
+        beta, alive = carry
+        lam, ok, idx = xs
+
+        def run(b):
+            res = fista_nn_lasso(X_sub, y, lam, lipschitz, b,
+                                 max_iter=max_iter, check_every=check_every,
+                                 tol=tol)
+            resid = y - X_sub @ res.beta
+            rho = resid / lam
+            c = _xtv(X, rho, use_pallas).astype(b.dtype)
+            s = dual_scaling_nn(c)
+            theta = (s * rho).astype(b.dtype)
+            pval = 0.5 * jnp.vdot(resid, resid) + lam * jnp.sum(res.beta)
+            d = y - lam * theta
+            dval = 0.5 * jnp.vdot(y, y) - 0.5 * jnp.vdot(d, d)
+            gap = pval - dval
+            good = (gap <= tol * gap_scale * 1.01) | \
+                   ((idx == 0) & (res.iters >= max_iter))
+            return res.beta, theta, (s * c).astype(b.dtype), good, res.iters
+
+        def skip(b):
+            return (b, jnp.zeros(N, b.dtype), jnp.zeros(p, b.dtype),
+                    jnp.asarray(False), jnp.asarray(0))
+
+        beta_new, theta, ctheta, good, its = jax.lax.cond(
+            alive & ok, run, skip, beta)
+        return (beta_new, alive & good), (beta_new, theta, ctheta, good, its)
+
+    idxs = jnp.arange(lams.shape[0])
+    _, out = jax.lax.scan(step, (beta0, jnp.asarray(True)),
+                          (lams, valid, idxs))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# SGL
+# ---------------------------------------------------------------------------
+
+def sgl_path_batched(X, y, spec: GroupSpec, alpha, *, lambdas=None,
+                     n_lambdas: int = 100, min_ratio: float = 0.01,
+                     screen: str = "tlfre", tol=1e-9, max_iter: int = 20000,
+                     safety: float = 0.0, specnorm_method: str = "power",
+                     check_every: int = 10, use_pallas: Optional[bool] = None,
+                     min_bucket: int = 64, min_group_bucket: int = 16,
+                     margin: float = 0.125,
+                     chunk_init: int = 8) -> PathResult:
+    """Batched SGL path: grid screening, speculative bucketed sweeps with
+    in-scan certification.
+
+    Semantics match ``sgl_path``: same grid protocol, same exact-dual warm
+    starts, and every accepted solution carries a full-problem duality-gap
+    certificate at the solver tolerance, so the betas agree with the legacy
+    driver to solver precision.
+    """
+    if screen not in ("tlfre", "gapsafe", "none"):
+        raise ValueError(f"unknown screen mode {screen!r}")
+    X = jnp.asarray(X)
+    y = jnp.asarray(y)
+    N, p = X.shape
+    G = spec.num_groups
+    pallas = _pallas_active(use_pallas, X.dtype)
+
+    t0 = time.perf_counter()
+    xty = X.T @ y
+    lam_max, g_star = lambda_max_sgl(spec, xty, alpha)
+    lam_max = float(lam_max)
+    col_n = column_norms(X)
+    if specnorm_method == "power":
+        gspec = group_spectral_norms(X, spec)
+    else:
+        gspec = group_frobenius_norms(X, spec)
+    L_full = spectral_norm(X) ** 2
+    jax.block_until_ready((col_n, gspec, L_full))
+    setup_time = time.perf_counter() - t0
+
+    if lambdas is None:
+        lambdas = default_lambda_grid(lam_max, n_lambdas, min_ratio)
+    lambdas = np.asarray(lambdas, dtype=float)
+    J = len(lambdas)
+
+    betas = np.zeros((J, p))
+    iters = np.zeros(J, dtype=np.int64)
+    kept_feat = np.zeros(J, dtype=np.int64)
+    kept_grp = np.zeros(J, dtype=np.int64)
+    stats = EngineStats()
+    screen_time = 0.0
+    solve_time = 0.0
+    X_np = np.asarray(X)
+    gid = np.asarray(spec.group_ids)
+    sizes_np = np.asarray(spec.sizes)
+    weights_np = np.asarray(spec.weights)
+    gap_scale = max(float(0.5 * jnp.vdot(y, y)), 1e-30)
+
+    theta_bar = y / lam_max             # exact dual at lam_max (Thm 8)
+    c_prev = xty / lam_max              # X^T theta_bar
+    lam_bar = lam_max
+    beta_dev = jnp.zeros(p, X.dtype)
+    beta_full = np.zeros(p)
+    seen_keys: set = set()
+    spec_m = max(int(chunk_init), 1)
+
+    j = 0
+    while j < J and lambdas[j] >= lam_max * (1.0 - 1e-12):
+        j += 1                          # beta* = 0 at/above lam_max
+
+    while j < J:
+        rem, L_rem = _pad_grid(lambdas[j:], X.dtype)
+        # ---- screen the whole remaining grid in one shot ----------------
+        ts = time.perf_counter()
+        if screen == "none":
+            fk_np = np.ones((J - j, p), dtype=bool)
+        else:
+            n_vec = normal_vector_sgl(X, y, spec, lam_bar, lam_max,
+                                      theta_bar, g_star)
+            _, fk, _ = _tlfre_grid_jit(
+                X, y, spec, alpha, rem, lam_bar, theta_bar, n_vec,
+                col_n, gspec, safety=safety, use_pallas=pallas)
+            if screen == "gapsafe":
+                # both balls certify the dual optimum, so their
+                # intersection screens strictly harder than either alone
+                resid = y - X @ beta_dev
+                pen = (alpha * jnp.sum(spec.weights *
+                                       group_norms(spec, beta_dev))
+                       + jnp.sum(jnp.abs(beta_dev)))
+                radii = _gap_safe_radii_jit(y, rem, theta_bar, resid,
+                                            pen) * (1.0 + safety)
+                _, fk_dyn = _gap_safe_grid_jit(spec, alpha, c_prev, radii,
+                                               col_n, gspec,
+                                               use_pallas=pallas)
+                fk = fk & fk_dyn
+            fk_np = np.asarray(fk)[:L_rem]      # one host sync
+            stats.n_screens += 1
+        screen_time += time.perf_counter() - ts
+
+        row_counts = fk_np.sum(axis=1)
+        if row_counts[0] == 0:
+            # fully-screened prefix: beta* = 0 and the dual optimum is y/lam
+            k = (int(np.argmax(row_counts > 0)) if row_counts.any()
+                 else len(row_counts))
+            lam_bar = float(lambdas[j + k - 1])
+            theta_bar = y / lam_bar
+            c_prev = xty / lam_bar
+            beta_dev = jnp.zeros(p, X.dtype)
+            beta_full = np.zeros(p)
+            j += k
+            continue
+
+        # ---- feature set: safe base + nearby-row union + ranked margin --
+        base = fk_np[0]
+        n_base = int(base.sum())
+        p_b = _feature_bucket(n_base, p, min_bucket, margin)
+        S = _expand_set(base, fk_np, p_b)
+        g_S = np.unique(gid[S])
+        g_b = min(_bucket(len(g_S) + 2, min_group_bucket), G + 1)
+        if not S.all():
+            # fill spare bucket capacity with whole groups ranked by their
+            # dual correlation (Lemma-9 margin at the latest exact dual)
+            score = np.asarray(group_norms(spec, shrink(c_prev))) / weights_np
+            in_S = np.zeros(G, dtype=bool)
+            in_S[g_S] = True
+            n_S, n_grp = int(S.sum()), len(g_S)
+            for g in np.argsort(-score):
+                if in_S[g]:
+                    continue
+                if n_grp + 1 >= g_b or n_S + int(sizes_np[g]) > p_b:
+                    continue
+                S[gid == g] = True
+                in_S[g] = True
+                n_S += int(sizes_np[g])
+                n_grp += 1
+
+        m = min(J - j, spec_m)
+
+        # ---- bucketed reduced problem + one jitted sweep over the chunk --
+        ts = time.perf_counter()
+        if S.all():
+            sub_spec, col_idx = spec, np.arange(p)
+            X_sub, L_sub = X, L_full
+            p_b, g_b = p, G
+        else:
+            sub_spec, col_idx = spec.bucketed_subset(S, p_b, g_b)
+            X_s = np.zeros((N, p_b), dtype=X_np.dtype)
+            X_s[:, :len(col_idx)] = X_np[:, col_idx]
+            X_sub = jnp.asarray(X_s)
+            L_sub = spectral_norm(X_sub, iters=25) ** 2
+        beta0 = np.zeros(p_b, dtype=X_np.dtype)
+        beta0[:len(col_idx)] = beta_full[col_idx]
+
+        lam_chunk = lambdas[j:j + m]
+        len2 = _pow2_len(m)
+        # pad to a power of two so compile keys are reused; padded steps
+        # are masked out via lax.cond inside the sweep
+        lam_pad = np.concatenate(
+            [lam_chunk, np.full(len2 - m, lam_chunk[-1])])
+        valid = np.arange(len2) < m
+        key = (p_b, sub_spec.num_groups, sub_spec.max_size, len2)
+        if key not in seen_keys:
+            seen_keys.add(key)
+            stats.n_compilations += 1
+        betas_b, thetas_b, cthetas_b, good_b, iters_b = _sweep_sgl(
+            X, X_sub, y, spec, sub_spec, alpha, L_sub,
+            jnp.asarray(lam_pad, X.dtype), jnp.asarray(valid),
+            jnp.asarray(beta0), tol, gap_scale, max_iter=max_iter,
+            check_every=check_every, use_pallas=pallas)
+        good_np = np.asarray(good_b[:m])     # one host sync
+        k = int(np.argmin(good_np)) if not good_np.all() else m
+        if k == 0:
+            # cannot happen for a converged row 0 (its set is provably
+            # safe); belt-and-braces progress guarantee
+            k = 1
+        stats.n_rejected += int(m - k)
+        theta_bar = thetas_b[k - 1]
+        c_prev = cthetas_b[k - 1]
+        betas_np = np.asarray(betas_b[:k])
+        iters_np = np.asarray(iters_b[:k])
+        jax.block_until_ready(theta_bar)
+        solve_time += time.perf_counter() - ts
+
+        chunk_rows = np.zeros((k, p))
+        chunk_rows[:, col_idx] = betas_np[:, :len(col_idx)]
+        betas[j:j + k] = chunk_rows
+        iters[j:j + k] = iters_np
+        kept_feat[j:j + k] = len(col_idx)       # columns entering the solver
+        kept_grp[j:j + k] = len(np.unique(gid[S]))
+        beta_full = chunk_rows[-1]
+        beta_dev = jnp.asarray(beta_full, X.dtype)
+        lam_bar = float(lam_chunk[k - 1])
+        stats.n_segments += 1
+        stats.buckets.append((p_b, g_b, m, k))
+        spec_m = min(2 * spec_m, 64) if k == m else max(2, k)
+        j += k
+
+    return PathResult(lambdas=lambdas, betas=betas, lam_max=lam_max,
+                      screen_time=screen_time, solve_time=solve_time,
+                      setup_time=setup_time, iters=iters,
+                      kept_features=kept_feat, kept_groups=kept_grp,
+                      stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# Nonnegative Lasso
+# ---------------------------------------------------------------------------
+
+def nn_lasso_path_batched(X, y, *, lambdas=None, n_lambdas: int = 100,
+                          min_ratio: float = 0.01, screen: str = "dpc",
+                          tol=1e-9, max_iter: int = 20000,
+                          safety: float = 0.0, check_every: int = 10,
+                          use_pallas: Optional[bool] = None,
+                          min_bucket: int = 64, margin: float = 0.125,
+                          chunk_init: int = 8) -> PathResult:
+    """Batched nonnegative-Lasso path: whole-grid DPC / Gap-Safe rules,
+    speculative bucketed sweeps with in-scan certification."""
+    if screen not in ("dpc", "gapsafe", "none"):
+        raise ValueError(f"unknown screen mode {screen!r}")
+    X = jnp.asarray(X)
+    y = jnp.asarray(y)
+    N, p = X.shape
+    pallas = _pallas_active(use_pallas, X.dtype)
+
+    t0 = time.perf_counter()
+    xty = X.T @ y
+    lam_max, i_star = lambda_max_nn(xty)
+    lam_max = float(lam_max)
+    if lam_max <= 0:
+        raise ValueError("max_i <x_i, y> <= 0: nonnegative Lasso solution is "
+                         "identically zero for every lambda > 0")
+    col_n = column_norms(X)
+    L_full = spectral_norm(X) ** 2
+    jax.block_until_ready((col_n, L_full))
+    setup_time = time.perf_counter() - t0
+
+    if lambdas is None:
+        lambdas = default_lambda_grid(lam_max, n_lambdas, min_ratio)
+    lambdas = np.asarray(lambdas, dtype=float)
+    J = len(lambdas)
+
+    betas = np.zeros((J, p))
+    iters = np.zeros(J, dtype=np.int64)
+    kept_feat = np.zeros(J, dtype=np.int64)
+    stats = EngineStats()
+    screen_time = 0.0
+    solve_time = 0.0
+    X_np = np.asarray(X)
+    gap_scale = max(float(0.5 * jnp.vdot(y, y)), 1e-30)
+
+    theta_bar = y / lam_max
+    c_prev = xty / lam_max
+    lam_bar = lam_max
+    beta_dev = jnp.zeros(p, X.dtype)
+    beta_full = np.zeros(p)
+    seen_keys: set = set()
+    spec_m = max(int(chunk_init), 1)
+
+    j = 0
+    while j < J and lambdas[j] >= lam_max * (1.0 - 1e-12):
+        j += 1
+
+    while j < J:
+        rem, L_rem = _pad_grid(lambdas[j:], X.dtype)
+        ts = time.perf_counter()
+        if screen == "none":
+            fk_np = np.ones((J - j, p), dtype=bool)
+        else:
+            n_vec = normal_vector_nn(X, y, lam_bar, lam_max, theta_bar,
+                                     i_star)
+            fk, _ = _dpc_grid_jit(X, y, rem, theta_bar, n_vec, col_n,
+                                  safety=safety)
+            if screen == "gapsafe":
+                resid = y - X @ beta_dev
+                pen = jnp.sum(beta_dev)          # beta >= 0 => l1 = sum
+                radii = _gap_safe_radii_jit(y, rem, theta_bar, resid,
+                                            pen) * (1.0 + safety)
+                fk = fk & _gap_safe_nn_jit(c_prev, radii, col_n)
+            fk_np = np.asarray(fk)[:L_rem]
+            stats.n_screens += 1
+        screen_time += time.perf_counter() - ts
+
+        row_counts = fk_np.sum(axis=1)
+        if row_counts[0] == 0:
+            k = (int(np.argmax(row_counts > 0)) if row_counts.any()
+                 else len(row_counts))
+            lam_bar = float(lambdas[j + k - 1])
+            theta_bar = y / lam_bar
+            c_prev = xty / lam_bar
+            beta_dev = jnp.zeros(p, X.dtype)
+            beta_full = np.zeros(p)
+            j += k
+            continue
+
+        base = fk_np[0]
+        n_base = int(base.sum())
+        p_b = _feature_bucket(n_base, p, min_bucket, margin)
+        S = _expand_set(base, fk_np, p_b)
+        if not S.all():
+            # margin: fill spare capacity with top features by correlation
+            spare = p_b - int(S.sum())
+            if spare > 0:
+                cand = np.asarray(c_prev).copy()
+                cand[S] = -np.inf
+                top = np.argpartition(-cand, spare - 1)[:spare]
+                S[top] = True
+
+        m = min(J - j, spec_m)
+
+        ts = time.perf_counter()
+        if S.all():
+            col_idx = np.arange(p)
+            X_sub, L_sub = X, L_full
+            p_b = p
+        else:
+            col_idx = np.nonzero(S)[0]
+            X_s = np.zeros((N, p_b), dtype=X_np.dtype)
+            X_s[:, :len(col_idx)] = X_np[:, col_idx]
+            X_sub = jnp.asarray(X_s)
+            L_sub = spectral_norm(X_sub, iters=25) ** 2
+        beta0 = np.zeros(p_b, dtype=X_np.dtype)
+        beta0[:len(col_idx)] = beta_full[col_idx]
+
+        lam_chunk = lambdas[j:j + m]
+        len2 = _pow2_len(m)
+        lam_pad = np.concatenate(
+            [lam_chunk, np.full(len2 - m, lam_chunk[-1])])
+        valid = np.arange(len2) < m
+        key = (p_b, len2)
+        if key not in seen_keys:
+            seen_keys.add(key)
+            stats.n_compilations += 1
+        betas_b, thetas_b, cthetas_b, good_b, iters_b = _sweep_nn(
+            X, X_sub, y, L_sub, jnp.asarray(lam_pad, X.dtype),
+            jnp.asarray(valid), jnp.asarray(beta0), tol, gap_scale,
+            max_iter=max_iter, check_every=check_every, use_pallas=pallas)
+        good_np = np.asarray(good_b[:m])
+        k = int(np.argmin(good_np)) if not good_np.all() else m
+        if k == 0:
+            k = 1
+        stats.n_rejected += int(m - k)
+        theta_bar = thetas_b[k - 1]
+        c_prev = cthetas_b[k - 1]
+        betas_np = np.asarray(betas_b[:k])
+        iters_np = np.asarray(iters_b[:k])
+        jax.block_until_ready(theta_bar)
+        solve_time += time.perf_counter() - ts
+
+        chunk_rows = np.zeros((k, p))
+        chunk_rows[:, col_idx] = betas_np[:, :len(col_idx)]
+        betas[j:j + k] = chunk_rows
+        iters[j:j + k] = iters_np
+        kept_feat[j:j + k] = len(col_idx)       # columns entering the solver
+        beta_full = chunk_rows[-1]
+        beta_dev = jnp.asarray(beta_full, X.dtype)
+        lam_bar = float(lam_chunk[k - 1])
+        stats.n_segments += 1
+        stats.buckets.append((p_b, 0, m, k))
+        spec_m = min(2 * spec_m, 64) if k == m else max(2, k)
+        j += k
+
+    return PathResult(lambdas=lambdas, betas=betas, lam_max=lam_max,
+                      screen_time=screen_time, solve_time=solve_time,
+                      setup_time=setup_time, iters=iters,
+                      kept_features=kept_feat, stats=stats)

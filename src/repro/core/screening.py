@@ -81,11 +81,59 @@ def screen_stats(spec: GroupSpec, res: ScreenResult):
     return g_drop, feats_in_dropped, l2_extra
 
 
+def _grid_group_stats(spec: GroupSpec, C: jnp.ndarray, use_pallas: bool):
+    """(||S_1(C_g)||, ||C_g||_inf) per grid row: (L, p) -> ((L, G), (L, G)).
+
+    ``use_pallas`` routes the fused reduction through the ``screen_norms``
+    kernel on the padded (L*G, n_max) layout (float32 — callers must carry a
+    nonzero ``safety`` inflation; the float64 exactness path keeps the jnp
+    segment reductions).
+    """
+    if use_pallas:
+        from ..kernels import ops as _kops
+        L = C.shape[0]
+        c_pad = jnp.where(spec.pad_mask[None], C[:, spec.pad_index], 0.0)
+        snorm2, cinf = _kops.screen_norms_batched(
+            c_pad.astype(jnp.float32), spec.pad_mask)
+        return jnp.sqrt(snorm2).astype(C.dtype), cinf.astype(C.dtype)
+    c_norm = jax.vmap(lambda r: group_norms(spec, r))(shrink(C))   # (L, G)
+    c_inf = jax.vmap(lambda r: group_max_abs(spec, r))(jnp.abs(C))
+    return c_norm, c_inf
+
+
+def _grid_rules(spec: GroupSpec, alpha, C, radii, col_norms, group_specnorms,
+                use_pallas: bool = False):
+    """Theorems 15/16 evaluated for every (lambda, group/feature) pair."""
+    c_norm, c_inf = _grid_group_stats(spec, C, use_pallas)
+    r_g = radii[:, None] * group_specnorms[None, :]
+    s = sup_shrink_norm(c_norm, c_inf, r_g)
+    group_keep = s >= alpha * spec.weights[None, :]
+
+    t = jnp.abs(C) + radii[:, None] * col_norms[None, :]
+    feat_keep = (t > 1.0) & group_keep[:, spec.group_ids]
+    return group_keep, feat_keep
+
+
+def grid_ball_geometry(y, lambdas, theta_bar, n_vec):
+    """Theorem-12 ball centers/radii for a whole grid sharing (theta_bar, n).
+
+    Returns (centers (L, N), radii (L,)) — the radii are NOT safety-inflated.
+    """
+    lambdas = jnp.asarray(lambdas)
+    v = y[None, :] / lambdas[:, None] - theta_bar[None, :]        # (L, N)
+    n2 = jnp.maximum(jnp.vdot(n_vec, n_vec), 1e-30)
+    coef = (v @ n_vec) / n2                                        # (L,)
+    v_perp = v - coef[:, None] * n_vec[None, :]
+    centers = theta_bar[None, :] + 0.5 * v_perp                   # (L, N)
+    radii = 0.5 * jnp.linalg.norm(v_perp, axis=1)
+    return centers, radii
+
+
 def tlfre_screen_grid(X, y, spec: GroupSpec, alpha, lambdas, lam_bar,
                       theta_bar, n_vec, col_norms, group_specnorms,
-                      safety: float = 0.0):
+                      safety: float = 0.0, use_pallas: bool = False):
     """Beyond-paper: evaluate the TLFre rules for a WHOLE remaining lambda
-    grid at once (cross-validation / stability-selection workloads).
+    grid at once (path engine / cross-validation / stability selection).
 
     The paper screens one lambda at a time; the dominant cost is the
     screening GEMV X^T o.  All grid points share theta_bar, so their ball
@@ -94,22 +142,38 @@ def tlfre_screen_grid(X, y, spec: GroupSpec, alpha, lambdas, lam_bar,
 
     Returns (group_keep (L, G), feat_keep (L, p), radii (L,)).
     """
-    lambdas = jnp.asarray(lambdas)
-    v = y[None, :] / lambdas[:, None] - theta_bar[None, :]        # (L, N)
-    n2 = jnp.maximum(jnp.vdot(n_vec, n_vec), 1e-30)
-    coef = (v @ n_vec) / n2                                        # (L,)
-    v_perp = v - coef[:, None] * n_vec[None, :]
-    centers = theta_bar[None, :] + 0.5 * v_perp                   # (L, N)
-    radii = 0.5 * jnp.linalg.norm(v_perp, axis=1) * (1.0 + safety)
-
+    centers, radii = grid_ball_geometry(y, lambdas, theta_bar, n_vec)
+    radii = radii * (1.0 + safety)
     C = centers @ X                                                # (L, p)
-    shr = shrink(C)
-    c_norm = jax.vmap(lambda r: group_norms(spec, r))(shr)         # (L, G)
-    c_inf = jax.vmap(lambda r: group_max_abs(spec, r))(jnp.abs(C))
-    r_g = radii[:, None] * group_specnorms[None, :]
-    s = sup_shrink_norm(c_norm, c_inf, r_g)
-    group_keep = s >= alpha * spec.weights[None, :]
-
-    t = jnp.abs(C) + radii[:, None] * col_norms[None, :]
-    feat_keep = (t > 1.0) & group_keep[:, spec.group_ids]
+    group_keep, feat_keep = _grid_rules(spec, alpha, C, radii, col_norms,
+                                        group_specnorms, use_pallas)
     return group_keep, feat_keep, radii
+
+
+def gap_safe_screen_grid(spec: GroupSpec, alpha, c_theta, radii, col_norms,
+                         group_specnorms, use_pallas: bool = False):
+    """Gap-Safe grid rules for a FIXED feasible dual center theta.
+
+    SGL dual feasibility does not depend on lambda, so one feasible theta
+    (e.g. the exact dual at the previous solved point) certifies a ball at
+    EVERY remaining lambda with radius sqrt(2*gap_l)/lam_l.  The center is
+    shared, so the screening GEMM collapses to the single GEMV
+    ``c_theta = X^T theta`` — only the radii vary across the grid.
+
+    Returns (group_keep (L, G), feat_keep (L, p)).
+    """
+    C = jnp.broadcast_to(c_theta[None, :], (radii.shape[0], c_theta.shape[0]))
+    return _grid_rules(spec, alpha, C, radii, col_norms, group_specnorms,
+                       use_pallas)
+
+
+def gap_safe_grid_radii(y, lambdas, theta, resid, penalty):
+    """sqrt(2 * gap_l) / lam_l per grid point, for primal iterate beta with
+    residual ``resid = y - X beta`` and penalty ``Omega(beta)`` (so
+    P_l = 0.5||resid||^2 + lam_l * Omega) and feasible dual theta."""
+    lambdas = jnp.asarray(lambdas)
+    p_half = 0.5 * jnp.vdot(resid, resid)
+    d = y[None, :] - lambdas[:, None] * theta[None, :]
+    dual = 0.5 * jnp.vdot(y, y) - 0.5 * jnp.sum(d * d, axis=1)
+    gap = jnp.maximum(p_half + lambdas * penalty - dual, 0.0)
+    return jnp.sqrt(2.0 * gap) / lambdas

@@ -46,23 +46,30 @@ def _sgl_gap(X, y, spec, lam, alpha, beta):
     return p, d, theta
 
 
-@functools.partial(jax.jit, static_argnames=("max_iter", "check_every"))
-def solve_sgl(X, y, spec: GroupSpec, lam, alpha, lipschitz, beta0=None, *,
-              max_iter: int = 20000, check_every: int = 10,
-              tol: float = 1e-9) -> SolveResult:
-    """FISTA for problem (3).  ``tol`` is a relative duality-gap tolerance
-    (gap <= tol * 0.5||y||^2)."""
-    p = X.shape[1]
+def fista_sgl(X, y, spec: GroupSpec, lam, alpha, lipschitz, beta0, *,
+              max_iter: int = 20000, check_every: int = 10, tol: float = 1e-9,
+              prox=None) -> SolveResult:
+    """Un-jitted FISTA core for problem (3); traceable inside scans.
+
+    ``lam`` may be a traced scalar, so the batched path engine can sweep a
+    whole lambda chunk inside one ``lax.scan`` without retracing.  ``prox``
+    optionally overrides the (z, t_l1, t_group) -> z' proximal step — the
+    engine injects the fused Pallas kernel here.
+    """
     dtype = X.dtype
-    beta0 = jnp.zeros(p, dtype) if beta0 is None else beta0.astype(dtype)
+    beta0 = beta0.astype(dtype)
     t_step = 1.0 / lipschitz
     t_l1 = t_step * lam                       # lam2 = lam
     t_group = t_step * lam * alpha * spec.weights   # lam1*w_g = alpha*lam*w_g
     gap_scale = jnp.maximum(0.5 * jnp.vdot(y, y), 1e-30)
+    if prox is None:
+        prox = lambda v, a, b: sgl_prox(spec, v, a, b)
 
     def prox_grad(z):
         g = X.T @ (X @ z - y)
-        return sgl_prox(spec, z - t_step * g, t_l1, t_group)
+        # spec.weights is float64 for exactness; pin the iterate dtype so
+        # float32 problems under jax_enable_x64 keep a stable carry
+        return prox(z - t_step * g, t_l1, t_group).astype(dtype)
 
     def inner(carry, _):
         beta, z, tk = carry
@@ -83,12 +90,24 @@ def solve_sgl(X, y, spec: GroupSpec, lam, alpha, lipschitz, beta0=None, *,
         carry, it, _ = state
         carry, _ = jax.lax.scan(inner, carry, None, length=check_every)
         pval, dval, _ = _sgl_gap(X, y, spec, lam, alpha, carry[0])
-        return carry, it + check_every, pval - dval
+        return carry, it + check_every, (pval - dval).astype(dtype)
 
     init = ((beta0, beta0, jnp.asarray(1.0, dtype)), jnp.asarray(0), jnp.asarray(jnp.inf, dtype))
     (beta, _, _), iters, gap = jax.lax.while_loop(cond, body, init)
     _, _, theta = _sgl_gap(X, y, spec, lam, alpha, beta)
     return SolveResult(beta, theta, gap, iters)
+
+
+@functools.partial(jax.jit, static_argnames=("max_iter", "check_every"))
+def solve_sgl(X, y, spec: GroupSpec, lam, alpha, lipschitz, beta0=None, *,
+              max_iter: int = 20000, check_every: int = 10,
+              tol: float = 1e-9) -> SolveResult:
+    """FISTA for problem (3).  ``tol`` is a relative duality-gap tolerance
+    (gap <= tol * 0.5||y||^2)."""
+    p = X.shape[1]
+    beta0 = jnp.zeros(p, X.dtype) if beta0 is None else beta0
+    return fista_sgl(X, y, spec, lam, alpha, lipschitz, beta0,
+                     max_iter=max_iter, check_every=check_every, tol=tol)
 
 
 # ---------------------------------------------------------------------------
@@ -104,13 +123,11 @@ def _nn_gap(X, y, lam, beta):
     return p, d, theta
 
 
-@functools.partial(jax.jit, static_argnames=("max_iter", "check_every"))
-def solve_nn_lasso(X, y, lam, lipschitz, beta0=None, *, max_iter: int = 20000,
+def fista_nn_lasso(X, y, lam, lipschitz, beta0, *, max_iter: int = 20000,
                    check_every: int = 10, tol: float = 1e-9) -> SolveResult:
-    """FISTA for problem (80) with prox (v - t*lam)_+."""
-    p = X.shape[1]
+    """Un-jitted FISTA core for problem (80); traceable inside scans."""
     dtype = X.dtype
-    beta0 = jnp.zeros(p, dtype) if beta0 is None else beta0.astype(dtype)
+    beta0 = beta0.astype(dtype)
     t_step = 1.0 / lipschitz
     gap_scale = jnp.maximum(0.5 * jnp.vdot(y, y), 1e-30)
 
@@ -132,9 +149,19 @@ def solve_nn_lasso(X, y, lam, lipschitz, beta0=None, *, max_iter: int = 20000,
         carry, it, _ = state
         carry, _ = jax.lax.scan(inner, carry, None, length=check_every)
         pval, dval, _ = _nn_gap(X, y, lam, carry[0])
-        return carry, it + check_every, pval - dval
+        return carry, it + check_every, (pval - dval).astype(dtype)
 
     init = ((beta0, beta0, jnp.asarray(1.0, dtype)), jnp.asarray(0), jnp.asarray(jnp.inf, dtype))
     (beta, _, _), iters, gap = jax.lax.while_loop(cond, body, init)
     _, _, theta = _nn_gap(X, y, lam, beta)
     return SolveResult(beta, theta, gap, iters)
+
+
+@functools.partial(jax.jit, static_argnames=("max_iter", "check_every"))
+def solve_nn_lasso(X, y, lam, lipschitz, beta0=None, *, max_iter: int = 20000,
+                   check_every: int = 10, tol: float = 1e-9) -> SolveResult:
+    """FISTA for problem (80) with prox (v - t*lam)_+."""
+    p = X.shape[1]
+    beta0 = jnp.zeros(p, X.dtype) if beta0 is None else beta0
+    return fista_nn_lasso(X, y, lam, lipschitz, beta0, max_iter=max_iter,
+                          check_every=check_every, tol=tol)

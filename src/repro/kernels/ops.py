@@ -37,6 +37,24 @@ def screen_norms(c_pad, mask, interpret: bool | None = None):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
+def screen_norms_batched(c_pad_grid, mask, interpret: bool | None = None):
+    """Grid variant of ``screen_norms``: c_pad_grid (L, G, n_max) with a
+    shared (G, n_max) mask -> ((L, G), (L, G)) float32.
+
+    Folds the lambda-grid axis into the kernel's group-grid axis so the
+    whole remaining path is one streaming pass (the screening half of the
+    batched path engine)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    L, G, n_max = c_pad_grid.shape
+    flat = c_pad_grid.reshape(L * G, n_max)
+    mask_flat = jnp.broadcast_to(mask[None], (L, G, n_max)).reshape(
+        L * G, n_max)
+    snorm2, cinf = screen_norms_pallas(flat, mask_flat, interpret=interpret)
+    return snorm2.reshape(L, G), cinf.reshape(L, G)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
 def sgl_prox_padded(v_pad, mask, t_l1, t_group, interpret: bool | None = None):
     """Fused SGL prox on the padded layout, float32."""
     if interpret is None:

@@ -327,8 +327,28 @@ HBM_BW = 819e9               # bytes/s / chip
 LINK_BW = 50e9               # bytes/s / link (ICI)
 
 
-def analyze(text: str, raw_cost: dict | None = None) -> dict:
+def _normalize_raw_cost(raw_cost) -> dict:
+    """``Compiled.cost_analysis()`` returns a dict in newer JAX but a
+    one-element list of dicts in older releases (one entry per device
+    program).  Accept both, plus None."""
+    if raw_cost is None:
+        return {}
+    if isinstance(raw_cost, (list, tuple)):
+        merged: dict = {}
+        for entry in raw_cost:
+            if isinstance(entry, dict):
+                for k, v in entry.items():
+                    try:
+                        merged[k] = merged.get(k, 0.0) + float(v)
+                    except (TypeError, ValueError):
+                        merged.setdefault(k, v)
+        return merged
+    return dict(raw_cost)
+
+
+def analyze(text: str, raw_cost: dict | list | None = None) -> dict:
     hc = HloCost(text)
+    raw_cost = _normalize_raw_cost(raw_cost)
     c = hc.entry_cost()
     t_compute = c.flops / PEAK_FLOPS
     t_memory = c.hbm_bytes / HBM_BW
@@ -342,8 +362,8 @@ def analyze(text: str, raw_cost: dict | None = None) -> dict:
         "t_compute": t_compute,
         "t_memory": t_memory,
         "t_collective": t_coll,
-        "raw_cost_flops": float((raw_cost or {}).get("flops", 0.0)),
-        "raw_cost_bytes": float((raw_cost or {}).get("bytes accessed", 0.0)),
+        "raw_cost_flops": float(raw_cost.get("flops", 0.0)),
+        "raw_cost_bytes": float(raw_cost.get("bytes accessed", 0.0)),
     }
     dom = max(("t_compute", "t_memory", "t_collective"),
               key=lambda k: terms[k])

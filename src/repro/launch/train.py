@@ -55,22 +55,30 @@ class Watchdog:
         return slow
 
 
+def _resolve_group_axis(shape, n_groups: int, recorded: int) -> int:
+    """Group axis of a STACKED leaf.
+
+    WeightGroups axes historically mix stacked and unstacked conventions,
+    so prefer whichever of the recorded axis or its stacked shift matches
+    the registered group count (deterministic when two axes share a size),
+    then fall back to a size scan over the non-stack axes."""
+    for ax in (recorded, recorded + 1):
+        if 0 < ax < len(shape) and shape[ax] == n_groups:
+            return ax
+    for ax in range(1, len(shape)):
+        if shape[ax] == n_groups:
+            return ax
+    return min(recorded + 1, len(shape) - 1)
+
+
 def sgl_prox_step(params, cfg, t_lam1, t_lam2):
     """Apply the exact SGL prox to the registered weight groups."""
     groups = group_reg.head_groups_for(cfg)
+
+    # tree.map rebuilds every container, so writes below land in the copy
+    # and never mutate the caller's tree; bind blocks AFTER the copy
+    params = jax.tree.map(lambda x: x, params)
     blocks = params["blocks"]
-
-    def apply_leaf(tree, path, axis):
-        node = tree
-        keys = path.split("/")
-        for k in keys[:-1]:
-            node = node[k]
-        leaf = node[keys[-1]]
-        node[keys[-1]] = group_reg.sgl_weight_prox(leaf, axis + 1, t_lam1,
-                                                   t_lam2)  # +1: stack axis
-
-    import copy
-    params = jax.tree.map(lambda x: x, params)  # shallow-copy containers
     for gw in groups:
         for lname, ltree in list(blocks.items()):
             node = ltree
@@ -87,12 +95,14 @@ def sgl_prox_step(params, cfg, t_lam1, t_lam2):
                 tgt = sub
                 for k in keys[:-1]:
                     tgt = tgt[k]
+                leaf = tgt[keys[-1]]
+                axis = _resolve_group_axis(leaf.shape, gw.n_groups, gw.axis)
                 tgt[keys[-1]] = group_reg.sgl_weight_prox(
-                    tgt[keys[-1]], gw.axis + 1, t_lam1, t_lam2)
+                    leaf, axis, t_lam1, t_lam2)
     return params
 
 
-def main(argv=None):
+def main(argv=None, return_state=False):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true",
@@ -180,6 +190,8 @@ def main(argv=None):
         writer.close()
     print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f}); "
           f"straggler flags: {dog.flagged}")
+    if return_state:
+        return losses, state
     return losses
 
 

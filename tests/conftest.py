@@ -8,6 +8,31 @@ NOTE: XLA_FLAGS --xla_force_host_platform_device_count is deliberately NOT
 set here — smoke tests and benches must see the 1 real CPU device; only the
 dry-run entrypoint forces 512 (see src/repro/launch/dryrun.py).
 """
+import numpy as np
 import jax
 
 jax.config.update("jax_enable_x64", True)
+
+
+def rand_cases(n_cases, *dims, seed=0):
+    """Deterministic stand-in for hypothesis ``@given`` sweeps.
+
+    The container has no ``hypothesis``; property tests instead parametrize
+    over ``n_cases`` tuples drawn from a fixed generator.  Each dim is
+    ``("int", lo, hi)`` (inclusive) or ``("float", lo, hi)``.  Returns a list
+    of tuples (or scalars for a single dim) usable with
+    ``pytest.mark.parametrize``.
+    """
+    rng = np.random.default_rng(seed)
+    cases = []
+    for _ in range(n_cases):
+        vals = []
+        for kind, lo, hi in dims:
+            if kind == "int":
+                vals.append(int(rng.integers(lo, hi + 1)))
+            elif kind == "float":
+                vals.append(float(rng.uniform(lo, hi)))
+            else:
+                raise ValueError(f"unknown dim kind {kind!r}")
+        cases.append(tuple(vals) if len(vals) > 1 else vals[0])
+    return cases

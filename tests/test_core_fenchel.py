@@ -7,7 +7,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import rand_cases
 
 from repro.core import (GroupSpec, dual_decompose, group_shrink_roots,
                         lambda1_max, lambda2_max, lambda_max_sgl, proj_binf,
@@ -66,8 +66,8 @@ def test_lambda_max_zero_solution(alpha):
     assert float(jnp.max(jnp.abs(below.beta))) > 0.0
 
 
-@settings(max_examples=15, deadline=None)
-@given(st.integers(0, 10_000), st.floats(0.05, 5.0))
+@pytest.mark.parametrize("seed,alpha", rand_cases(
+    15, ("int", 0, 10_000), ("float", 0.05, 5.0), seed=9))
 def test_lemma9_roots(seed, alpha):
     """Lemma 9: rho_g solves ||S_1(c/rho)|| = alpha*sqrt(n_g) exactly."""
     rng = np.random.default_rng(seed)
@@ -102,8 +102,7 @@ def test_corollary10():
     assert np.any(norms > 0.999 * l1m * w)
 
 
-@settings(max_examples=10, deadline=None)
-@given(st.integers(0, 10_000))
+@pytest.mark.parametrize("seed", rand_cases(10, ("int", 0, 10_000), seed=10))
 def test_dual_scaling_feasible(seed):
     """dual_scaling_sgl returns s with s*rho feasible (gap machinery)."""
     rng = np.random.default_rng(seed)

@@ -3,7 +3,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import rand_cases
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed import compression as C
@@ -65,8 +65,9 @@ def test_cache_pspecs_structure():
 # gradient compression
 # ---------------------------------------------------------------------------
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(1, 2000), st.integers(0, 10**6), st.floats(0.01, 100.0))
+@pytest.mark.parametrize("n,seed,scale", rand_cases(
+    20, ("int", 1, 2000), ("int", 0, 10**6), ("float", 0.01, 100.0),
+    seed=16))
 def test_int8_compression_roundtrip_error_bound(n, seed, scale):
     rng = np.random.default_rng(seed)
     x = jnp.asarray(rng.standard_normal(n) * scale, jnp.float32)

@@ -1,10 +1,10 @@
 """Per-kernel allclose tests: Pallas (interpret=True on CPU) vs pure-jnp
-oracle, swept over shapes and dtypes (hypothesis + parametrised edges)."""
+oracle, swept over shapes and dtypes (seeded sweeps + parametrised edges)."""
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import rand_cases
 
 from repro.kernels import ops, ref
 from repro.kernels.xtv import xtv_pallas
@@ -31,9 +31,9 @@ def test_xtv_shapes(N, p, dt):
     np.testing.assert_allclose(np.asarray(out), np.asarray(expect), **_tol(dt))
 
 
-@settings(max_examples=15, deadline=None)
-@given(st.integers(1, 200), st.integers(1, 300), st.integers(0, 10**6))
-def test_xtv_hypothesis(N, p, seed):
+@pytest.mark.parametrize("N,p,seed", rand_cases(
+    15, ("int", 1, 200), ("int", 1, 300), ("int", 0, 10**6), seed=11))
+def test_xtv_sweep(N, p, seed):
     rng = np.random.default_rng(seed)
     X = jnp.asarray(rng.standard_normal((N, p)), jnp.float32)
     v = jnp.asarray(rng.standard_normal(N), jnp.float32)
@@ -54,10 +54,10 @@ def test_screen_norms_shapes(G, nm, dt):
     np.testing.assert_allclose(np.asarray(i), np.asarray(ir), **_tol(dt))
 
 
-@settings(max_examples=15, deadline=None)
-@given(st.integers(1, 80), st.integers(1, 70), st.integers(0, 10**6),
-       st.floats(0.0, 3.0))
-def test_sgl_prox_hypothesis(G, nm, seed, t_l1):
+@pytest.mark.parametrize("G,nm,seed,t_l1", rand_cases(
+    15, ("int", 1, 80), ("int", 1, 70), ("int", 0, 10**6),
+    ("float", 0.0, 3.0), seed=12))
+def test_sgl_prox_sweep(G, nm, seed, t_l1):
     rng = np.random.default_rng(seed)
     v = jnp.asarray(rng.standard_normal((G, nm)) * 3, jnp.float32)
     m = jnp.asarray(rng.random((G, nm)) > 0.3)
@@ -103,3 +103,73 @@ def test_ops_jit_wrappers():
     np.testing.assert_allclose(np.asarray(ops.xtv(X, v)),
                                np.asarray(ref.xtv_ref(X, v)), rtol=1e-5,
                                atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Ragged, non-multiple-of-128 layouts: padded-lane masking must be exact
+# ---------------------------------------------------------------------------
+
+RAGGED_SIZES = [
+    [1, 3, 130, 7, 129, 2, 64, 200, 5, 31],   # n_max = 200 (not 128k)
+    [127, 1, 1, 1, 255],                       # n_max = 255
+    [5] * 37 + [133],                          # one oversized straggler
+]
+
+
+def _ragged_layout(sizes, seed):
+    """Padded (G, n_max) layout for a ragged GroupSpec with GARBAGE in the
+    invalid slots — the kernels must mask them, not read them."""
+    from repro.core import GroupSpec
+    from repro.core.groups import pad_groups
+    spec = GroupSpec.from_sizes(sizes)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(spec.num_features) * 2, jnp.float32)
+    clean = pad_groups(spec, x).astype(jnp.float32)
+    garbage = jnp.asarray(
+        rng.standard_normal(clean.shape) * 1e6, jnp.float32)
+    dirty = jnp.where(spec.pad_mask, clean, garbage)
+    return spec, clean, dirty
+
+
+@pytest.mark.pallas
+@pytest.mark.parametrize("sizes", RAGGED_SIZES)
+def test_screen_norms_ragged_masks_padded_lanes(sizes):
+    spec, clean, dirty = _ragged_layout(sizes, seed=sum(sizes))
+    s, i = screen_norms_pallas(dirty, spec.pad_mask, interpret=True,
+                               block_g=32)
+    sr, ir = ref.screen_norms_ref(clean, spec.pad_mask)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(i), np.asarray(ir), rtol=1e-6)
+
+
+@pytest.mark.pallas
+@pytest.mark.parametrize("sizes", RAGGED_SIZES)
+def test_sgl_prox_ragged_masks_padded_lanes(sizes):
+    spec, clean, dirty = _ragged_layout(sizes, seed=len(sizes))
+    t_l1 = 0.4
+    tg = jnp.asarray(0.3 * np.asarray(spec.weights), jnp.float32)
+    out = sgl_prox_pallas(dirty, spec.pad_mask, t_l1, tg, interpret=True,
+                          block_g=32)
+    expect = ref.sgl_prox_ref(clean, spec.pad_mask, jnp.float32(t_l1), tg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+    # padded lanes must come out exactly zero (the engine scatters them back)
+    assert float(jnp.max(jnp.abs(jnp.where(spec.pad_mask, 0.0, out)))) == 0.0
+
+
+@pytest.mark.pallas
+def test_screen_norms_batched_grid_layout():
+    """The (L, G, n_max) grid fold used by the batched path engine."""
+    spec, clean, dirty = _ragged_layout(RAGGED_SIZES[0], seed=0)
+    rng = np.random.default_rng(1)
+    L = 5
+    scales = jnp.asarray(rng.uniform(0.2, 3.0, L), jnp.float32)
+    grid_dirty = scales[:, None, None] * dirty[None]
+    s, i = ops.screen_norms_batched(grid_dirty, spec.pad_mask)
+    for r in range(L):
+        sr, ir = ref.screen_norms_ref(scales[r] * clean, spec.pad_mask)
+        np.testing.assert_allclose(np.asarray(s[r]), np.asarray(sr),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(i[r]), np.asarray(ir),
+                                   rtol=1e-5)

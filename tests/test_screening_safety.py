@@ -2,14 +2,14 @@
 
 Every group/feature discarded by TLFre (Theorems 12/15/16/17) and every
 feature discarded by DPC (Theorems 21/22) must have a zero coefficient in a
-high-precision solution of the full problem.  Checked by hypothesis over
+high-precision solution of the full problem.  Checked by seeded sweeps over
 random problems, parameters, and path positions.
 """
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import rand_cases
 
 from repro.core import (GroupSpec, column_norms, dpc_screen,
                         estimate_dual_ball, gap_safe_ball,
@@ -32,8 +32,9 @@ def _problem(seed, N=40, G=15, n=4):
     return jnp.asarray(X), jnp.asarray(y), GroupSpec.uniform_groups(G, n)
 
 
-@settings(max_examples=12, deadline=None)
-@given(st.integers(0, 10**6), st.floats(0.2, 2.5), st.floats(0.35, 0.95))
+@pytest.mark.parametrize("seed,alpha,lam_frac", rand_cases(
+    12, ("int", 0, 10**6), ("float", 0.2, 2.5), ("float", 0.35, 0.95),
+    seed=13))
 def test_tlfre_screening_is_safe(seed, alpha, lam_frac):
     """Sequential TLFre at lambda = frac * lambda_bar never discards an
     active coefficient of the exact solution."""
@@ -66,8 +67,8 @@ def test_tlfre_screening_is_safe(seed, alpha, lam_frac):
     assert not np.any(active & ~feat_keep), "L2 discarded active feature"
 
 
-@settings(max_examples=8, deadline=None)
-@given(st.integers(0, 10**6), st.floats(0.1, 0.9))
+@pytest.mark.parametrize("seed,lam_frac", rand_cases(
+    8, ("int", 0, 10**6), ("float", 0.1, 0.9), seed=14))
 def test_dpc_screening_is_safe(seed, lam_frac):
     rng = np.random.default_rng(seed)
     N, p = 30, 120
@@ -117,8 +118,7 @@ def test_nn_path_equals_baseline_path():
     assert res_s.kept_features[1] < p
 
 
-@settings(max_examples=6, deadline=None)
-@given(st.integers(0, 10**6))
+@pytest.mark.parametrize("seed", rand_cases(6, ("int", 0, 10**6), seed=15))
 def test_gap_safe_ball_contains_optimum(seed):
     """Beyond-paper Gap-Safe ball: ||theta* - theta|| <= sqrt(2 gap)/lam."""
     X, y, spec = _problem(seed, N=30, G=10, n=3)

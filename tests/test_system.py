@@ -6,6 +6,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+pytestmark = pytest.mark.slow    # deselect with -m "not slow"
+
 from repro.configs.base import get_config, list_archs
 from repro.launch.steps import SHAPES, input_specs, make_train_step, shape_supported
 from repro.models import model as M
