@@ -20,7 +20,7 @@ import numpy as np
 import jax
 
 from repro.core import (GroupSpec, nn_lasso_path, rejection_ratios_sgl,
-                        sgl_path)
+                        sgl_cv, sgl_path)
 from . import data_synth
 
 FULL = bool(int(os.environ.get("REPRO_BENCH_FULL", "0")))
@@ -207,6 +207,49 @@ def engine_bench(engine="batched"):
         ("engine_solver_compilations", 0.0, st.n_compilations),
         ("engine_speculative_rejects", 0.0, st.n_rejected),
         ("engine_agree_max_abs", 0.0, round(agree, 8)),
+    ]
+
+
+def cv_bench(engine="batched", n_folds=5):
+    """Fold-batched K-fold CV vs K sequential per-fold path solves.
+
+    Rows: wall-clock for the fold-batched ``sgl_cv`` (one stacked screening
+    GEMM + one vmapped sweep per segment) against solving each fold's path
+    independently with the chosen engine, the speedup, the stacked-screen
+    counter (one per segment, NOT one per fold), and the max per-fold
+    disagreement between the two (certificate-bounded)."""
+    X, y, _ = data_synth.synthetic_sgl(1, gamma1=0.1, gamma2=0.1, seed=1,
+                                       **SGL_DIMS)
+    spec = GroupSpec.uniform_groups(SGL_DIMS["G"], SGL_DIMS["n"])
+    kw = dict(tol=TOL, safety=1e-6, max_iter=MAX_ITER,
+              check_every=CHECK_EVERY)
+    # warm BOTH sides: the serving regime re-runs the same fold/grid
+    # protocol, so steady state pays no compiles on either driver — the
+    # speedup row must not charge compile time to the baseline
+    sgl_cv(X, y, spec, 1.0, n_folds=n_folds, n_lambdas=N_LAMBDA, **kw)
+    t0 = time.perf_counter()
+    res = sgl_cv(X, y, spec, 1.0, n_folds=n_folds, n_lambdas=N_LAMBDA, **kw)
+    t_batched = time.perf_counter() - t0
+    for _ in range(2):                  # first pass absorbs per-shape jits
+        t0 = time.perf_counter()
+        refs = [sgl_path(X[train], y[train], spec, 1.0, lambdas=res.lambdas,
+                         engine=engine, **kw)
+                for train, _ in res.folds]
+        t_seq = time.perf_counter() - t0
+    agree = max(float(np.max(np.abs(ref.betas - res.fold_betas[k])))
+                for k, ref in enumerate(refs))
+    st = res.stats
+    n_lam = N_LAMBDA * n_folds
+    return [
+        ("cv_foldbatched_warm", t_batched / n_lam * 1e6,
+         round(t_seq / max(t_batched, 1e-9), 2)),
+        (f"cv_sequential_{engine}_warm", t_seq / n_lam * 1e6, n_folds),
+        ("cv_stacked_screens", 0.0, st.n_screens),
+        ("cv_segments", 0.0, st.n_segments),
+        ("cv_solver_compilations", 0.0, st.n_compilations),
+        ("cv_agree_max_abs", 0.0, round(agree, 8)),
+        ("cv_best_lambda_ratio", 0.0,
+         round(res.best_lambda / res.lam_max, 4)),
     ]
 
 

@@ -3,6 +3,7 @@
 Usage::
 
     python -m benchmarks.run [SUITE_FILTER] [--engine {legacy,batched}]
+                             [--folds K] [--smoke]
 
 Prints ``name,us_per_call,derived`` CSV.  ``derived`` is the headline metric
 of the corresponding table (speedup x, rejection ratio, roofline fraction).
@@ -14,6 +15,13 @@ per-lambda driver; ``batched`` is the device-resident engine
 a single ``lax.scan`` per segment, in-scan certification, O(log p) solver
 compilations.  The ``engine`` suite always benchmarks both drivers against
 each other and reports the engine's host-sync / compilation counters.
+
+``--folds`` sets the fold count of the ``cv`` suite (default 5), which
+benchmarks the fold-batched ``sgl_cv`` (one stacked screening GEMM per
+segment) against K sequential per-fold path solves.
+
+``--smoke`` runs only the fast engine + cv comparison suites at reduced
+dimensions — the CI perf-regression gate.
 
 REPRO_BENCH_FULL=1 switches to the paper's full dimensions.
 """
@@ -78,38 +86,60 @@ def _roofline_rows():
     return rows
 
 
+def _pop_flag(argv, name, default=None, has_value=True):
+    for i, a in enumerate(argv):
+        if a == name:
+            if not has_value:
+                del argv[i]
+                return True
+            if i + 1 >= len(argv):
+                raise SystemExit(f"{name} requires a value")
+            v = argv[i + 1]
+            del argv[i:i + 2]
+            return v
+        if has_value and a.startswith(name + "="):
+            v = a.split("=", 1)[1]
+            del argv[i]
+            return v
+    return default
+
+
 def main() -> None:
     from . import paper_tables
     argv = sys.argv[1:]
-    engine = "legacy"
-    for i, a in enumerate(argv):
-        if a == "--engine":
-            if i + 1 >= len(argv):
-                raise SystemExit("--engine requires a value: legacy|batched")
-            engine = argv[i + 1]
-            del argv[i:i + 2]
-            break
-        if a.startswith("--engine="):
-            engine = a.split("=", 1)[1]
-            del argv[i]
-            break
+    engine = _pop_flag(argv, "--engine", "legacy")
+    folds = int(_pop_flag(argv, "--folds", "5"))
+    smoke = _pop_flag(argv, "--smoke", False, has_value=False)
     if engine not in ("legacy", "batched"):
         raise SystemExit(f"unknown --engine {engine!r}")
-    # ordered so the claim-critical rejection figures and the roofline
-    # table stream first (lambda-grid density per the paper's protocol:
-    # rejection ratios are grid-sensitive, see EXPERIMENTS.md)
-    suites = [
-        ("fig12", paper_tables.fig_rejection_sgl),
-        ("fig5", paper_tables.fig5_rejection_dpc),
-        ("kernels", _kernel_bench),
-        ("roofline", _roofline_rows),
-        ("table3", functools.partial(paper_tables.table3_dpc, engine=engine)),
-        ("table1", functools.partial(paper_tables.table1_sgl_synthetic,
-                                     engine=engine)),
-        ("table2", functools.partial(paper_tables.table2_adni_scale,
-                                     engine=engine)),
-        ("engine", paper_tables.engine_bench),
-    ]
+    if smoke:
+        # CI perf-regression gate: fast engine + fold-batched CV comparison
+        paper_tables.SGL_DIMS = dict(N=120, G=60, n=5)
+        paper_tables.N_LAMBDA = 16
+        suites = [
+            ("engine", paper_tables.engine_bench),
+            ("cv", functools.partial(paper_tables.cv_bench, engine="batched",
+                                     n_folds=min(folds, 3))),
+        ]  # smoke always baselines against the batched engine (CI gate)
+    else:
+        # ordered so the claim-critical rejection figures and the roofline
+        # table stream first (lambda-grid density per the paper's protocol:
+        # rejection ratios are grid-sensitive, see EXPERIMENTS.md)
+        suites = [
+            ("fig12", paper_tables.fig_rejection_sgl),
+            ("fig5", paper_tables.fig5_rejection_dpc),
+            ("kernels", _kernel_bench),
+            ("roofline", _roofline_rows),
+            ("table3", functools.partial(paper_tables.table3_dpc,
+                                         engine=engine)),
+            ("table1", functools.partial(paper_tables.table1_sgl_synthetic,
+                                         engine=engine)),
+            ("table2", functools.partial(paper_tables.table2_adni_scale,
+                                         engine=engine)),
+            ("engine", paper_tables.engine_bench),
+            ("cv", functools.partial(paper_tables.cv_bench, engine=engine,
+                                     n_folds=folds)),
+        ]
     only = argv[0] if argv else None
     print("name,us_per_call,derived", flush=True)
     failures = 0

@@ -1,0 +1,86 @@
+"""Model selection: fold-batched K-fold CV and stability selection.
+
+The paper makes one lambda path cheap; this example shows the workload
+those cheap paths unlock — picking lambda by cross-validation and scoring
+features by stability selection, with all folds/subsamples screened in one
+stacked GEMM per segment and solved in one vmapped sweep
+(``core/cv.py``).  Compares against solving each fold independently and
+prints the engine counters that prove the batching (screens == segments,
+not segments x folds).
+
+    PYTHONPATH=src python examples/cv_model_selection.py
+"""
+import time
+
+import numpy as np
+
+from repro.api import SGLCV
+from repro.core import GroupSpec, sgl_cv, sgl_path, stability_selection
+
+# --- synthetic problem: 10% of groups carry signal ------------------------
+rng = np.random.default_rng(0)
+N, G, n = 200, 100, 8
+p = G * n
+X = rng.standard_normal((N, p))
+beta_true = np.zeros(p)
+true_groups = rng.choice(G, G // 10, replace=False)
+for g in true_groups:
+    idx = g * n + rng.choice(n, 3, replace=False)
+    beta_true[idx] = rng.standard_normal(3)
+y = X @ beta_true + 0.5 * rng.standard_normal(N)
+
+spec = GroupSpec.uniform_groups(G, n)
+K = 5
+kw = dict(n_lambdas=24, min_ratio=0.03, tol=1e-7, safety=1e-8,
+          max_iter=8000, check_every=50)
+
+# --- fold-batched CV vs K independent paths -------------------------------
+t0 = time.perf_counter()
+cv = sgl_cv(X, y, spec, 1.0, n_folds=K, **kw)
+t_batched = time.perf_counter() - t0
+
+t0 = time.perf_counter()
+worst = 0.0
+for k, (train, _) in enumerate(cv.folds):
+    ref = sgl_path(X[train], y[train], spec, 1.0, lambdas=cv.lambdas,
+                   engine="batched", **kw)
+    worst = max(worst, float(np.max(np.abs(ref.betas - cv.fold_betas[k]))))
+t_seq = time.perf_counter() - t0
+
+print(f"lambda grid: {len(cv.lambdas)} points, lambda_max = {cv.lam_max:.3f}")
+print(f"best lambda  = {cv.best_lambda:.4f} "
+      f"(index {cv.best_index}, mean MSE {cv.mean_mse[cv.best_index]:.4f})")
+print(f"1-SE lambda  = {cv.lambda_1se:.4f} (sparser model within one SE)")
+st = cv.stats
+print(f"\nfold-batched CV : {t_batched:5.2f}s (cold, incl. jit)   "
+      f"stacked screens {st.n_screens} == segments {st.n_segments} "
+      f"(NOT {st.n_segments} x {K} folds)")
+print(f"{K} sequential    : {t_seq:5.2f}s")
+print(f"ratio {t_seq / t_batched:4.1f}x — on CPU the folds serialize, so "
+      f"the win is compile/sync\namortization (warm numbers: "
+      f"`python -m benchmarks.run cv`) and, on a real\nmesh, fold "
+      f"parallelism via make_fold_mesh")
+print(f"max |beta_batched - beta_independent| = {worst:.2e}")
+
+# --- the estimator facade -------------------------------------------------
+est = SGLCV(alpha=1.0, groups=[n] * G, n_folds=K, n_lambdas=24,
+            min_ratio=0.03, tol=1e-7, max_iter=8000).fit(X, y)
+sel_groups = np.unique(np.asarray(spec.group_ids)[np.abs(est.coef_) > 1e-6])
+hit = len(np.intersect1d(sel_groups, true_groups))
+print(f"\nSGLCV estimator: R^2 = {est.score(X, y):.4f}, "
+      f"{hit}/{len(true_groups)} true groups recovered "
+      f"({len(sel_groups)} selected)")
+
+# --- stability selection --------------------------------------------------
+stab = stability_selection(X, y, spec, 1.0, n_subsamples=20, n_lambdas=12,
+                           tol=1e-6, batch_size=10, seed=1)
+true_feats = np.abs(beta_true) > 0
+print(f"\nstability selection over {stab.n_subsamples} half-subsamples:")
+print(f"  mean max-prob on true features : "
+      f"{stab.max_probs[true_feats].mean():.2f}")
+print(f"  mean max-prob on null features : "
+      f"{stab.max_probs[~true_feats].mean():.2f}")
+stable = stab.max_probs >= 0.75
+tp = int((stable & true_feats).sum())
+print(f"  stable set (prob >= 0.75): {int(stable.sum())} features, "
+      f"{tp} of {int(true_feats.sum())} true ones")

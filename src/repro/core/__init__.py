@@ -8,6 +8,7 @@ Public surface:
   tlfre_screen, dpc_screen
   solve_sgl, solve_nn_lasso
   sgl_path, nn_lasso_path
+  sgl_cv, nn_lasso_cv, stability_selection   (fold-batched model selection)
 """
 from .groups import (GroupSpec, group_sum, group_norms, group_max_abs,
                      pad_groups, broadcast_to_features)
@@ -32,5 +33,8 @@ from .path import (PathResult, sgl_path, nn_lasso_path, default_lambda_grid,
                    rejection_ratios_sgl)
 from .path_engine import (EngineStats, sgl_path_batched,
                           nn_lasso_path_batched)
+from .cv import (CVResult, StabilityResult, kfold_indices, nn_lasso_cv,
+                 sgl_cv, sgl_fold_paths, nn_fold_paths, stability_selection,
+                 subsample_masks)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,802 @@
+"""Fold-parallel model selection on the batched engine: K-fold CV and
+stability selection for SGL / nonnegative Lasso.
+
+The paper makes *one* lambda path cheap; the canonical consumer of repeated
+grid solves is K-fold cross-validation (pick lambda by held-out error) and
+stability selection (selection probabilities over random subsamples).  Both
+are the same workload: solve the SAME grid on K row-subsets of one design
+matrix.  This module runs all K subset paths simultaneously, device-resident:
+
+  * **Masked-row embedding.**  Fold k's training problem is the full-size
+    problem with its held-out rows zeroed: every per-fold vector
+    (response, dual iterate, normal direction, residual) lives on the full
+    row index with zeros at the validation rows.  Zero rows contribute
+    nothing to any inner product, so the masked algebra IS the per-fold
+    algebra — and every fold shares the one (N, p) design matrix.
+
+  * **Fold-batched grid screening.**  At each segment boundary the K fold
+    ball geometries (Theorem 12 per fold) are stacked into a single
+    ``(K*L, N) x (N, p)`` GEMM against the shared design
+    (``tlfre_screen_grid_folds`` / ``dpc_screen_grid_folds``) — one MXU
+    launch screens every (fold, lambda) pair.  ``EngineStats.n_screens``
+    counts these stacked GEMMs: one per segment, NOT one per fold.
+
+  * **Fold-batched sweeps.**  The per-segment speculative ``lax.scan``
+    sweep of the single-fold engine (``path_engine.sweep_sgl_core``) is
+    vmapped over a leading fold axis on a COMMON feature bucket (the max
+    of the per-fold buckets), carrying each fold's warm-started
+    coefficients.  Every fold still certifies every accepted row against
+    its own full training problem, so per-fold results match independent
+    single-fold paths to solver precision.  With a multi-device mesh the
+    fold axis is sharded via ``shard_map``
+    (``launch.mesh.make_fold_mesh`` / ``shard_over_folds``); on one device
+    the vmap runs as-is.
+
+  * **Per-fold progress.**  Folds accept different certified prefixes and
+    advance through the grid at different rates; the host tracks one grid
+    cursor per fold and a fold drops out of the stacked screen/sweep once
+    its grid is exhausted.
+
+Under vmap the in-scan ``lax.cond`` row-kill lowers to ``select`` (both
+branches execute), so a failed certificate still gates *acceptance* but no
+longer saves the dead rows' compute — the price of lockstep fold batching.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .dpc import dpc_screen_grid_folds, gap_safe_screen_grid_nn, lambda_max_nn
+from .fenchel import shrink
+from .groups import GroupSpec, group_norms
+from .lambda_max import lambda_max_sgl
+from .linalg import group_spectral_norms, spectral_norm
+from .path import _bucket, default_lambda_grid
+from .path_engine import (EngineStats, _expand_set, _feature_bucket,
+                          _pow2_len, margin_fill_nn, margin_fill_sgl,
+                          sweep_nn_core, sweep_sgl_core)
+from .screening import (gap_safe_grid_radii, gap_safe_screen_grid_folds,
+                        tlfre_screen_grid_folds)
+
+
+# ---------------------------------------------------------------------------
+# Fold bookkeeping
+# ---------------------------------------------------------------------------
+
+def kfold_indices(n_samples: int, n_folds: int, seed: int = 0):
+    """Deterministic shuffled K-fold split.
+
+    Returns a list of ``(train_idx, val_idx)`` pairs.  Validation sets are
+    disjoint, cover ``range(n_samples)``, and their sizes differ by at most
+    one; the same ``(n_samples, n_folds, seed)`` always yields the same
+    split.
+    """
+    if not 2 <= n_folds <= n_samples:
+        raise ValueError(f"need 2 <= n_folds <= n_samples, got "
+                         f"{n_folds} / {n_samples}")
+    perm = np.random.default_rng(seed).permutation(n_samples)
+    sizes = np.full(n_folds, n_samples // n_folds, dtype=int)
+    sizes[: n_samples % n_folds] += 1
+    folds = []
+    off = 0
+    for s in sizes:
+        val = np.sort(perm[off:off + s])
+        off += s
+        train = np.setdiff1d(np.arange(n_samples), val)
+        folds.append((train, val))
+    return folds
+
+
+def subsample_masks(n_samples: int, n_subsamples: int, frac: float = 0.5,
+                    seed: int = 0) -> np.ndarray:
+    """(B, N) 0/1 masks of random row subsamples (stability selection)."""
+    rng = np.random.default_rng(seed)
+    m = max(1, int(round(frac * n_samples)))
+    masks = np.zeros((n_subsamples, n_samples))
+    for b in range(n_subsamples):
+        masks[b, rng.choice(n_samples, m, replace=False)] = 1.0
+    return masks
+
+
+def _masks_from_folds(folds, n_samples: int) -> np.ndarray:
+    masks = np.zeros((len(folds), n_samples))
+    for k, (train, _) in enumerate(folds):
+        masks[k, train] = 1.0
+    return masks
+
+
+@dataclasses.dataclass
+class CVResult:
+    lambdas: np.ndarray          # (J,) common grid (shared across folds)
+    fold_betas: np.ndarray       # (K, J, p) per-fold solutions on the grid
+    mse_path: np.ndarray         # (K, J) held-out MSE per fold
+    mean_mse: np.ndarray         # (J,)
+    se_mse: np.ndarray           # (J,) standard error over folds
+    best_index: int              # argmin of mean_mse
+    best_lambda: float
+    index_1se: int               # largest lambda within 1 SE of the min
+    lambda_1se: float
+    folds: list                  # [(train_idx, val_idx)] actually used
+    lam_max: float               # full-data lambda_max (grid anchor)
+    kept_features: np.ndarray    # (K, J) solver columns per fold/lambda
+    stats: EngineStats
+    screen_time: float
+    solve_time: float
+    setup_time: float
+
+    @property
+    def total_time(self):
+        return self.screen_time + self.solve_time + self.setup_time
+
+
+@dataclasses.dataclass
+class StabilityResult:
+    lambdas: np.ndarray          # (J,)
+    selection_probs: np.ndarray  # (J, p) P[feature active] over subsamples
+    max_probs: np.ndarray        # (p,) max over the grid (Meinshausen-
+    #                              Buhlmann stable set score)
+    n_subsamples: int
+    stats: EngineStats
+
+
+# ---------------------------------------------------------------------------
+# Jitted fold-batched screens (one stacked GEMM per call)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("screen",))
+def _screen_folds_sgl(X, Y, spec, alpha, rem, lam_bars, lam_maxs, theta_bars,
+                      n_bound, beta_prev, c_prev, masks, col_n_f, gspec_f,
+                      safety, *, screen: str):
+    """Stacked TLFre (+ optional Gap-Safe) screen for K folds x L lambdas.
+
+    All per-fold arrays are masked to their training rows.  Exactly one
+    ``(K*L, N) x (N, p)`` GEMM is issued (inside
+    ``tlfre_screen_grid_folds``); the Gap-Safe intersection adds only
+    GEMV-sized work because each fold's dynamic ball center is fixed
+    across the grid.  Returns feat_keep (K, L, p).
+    """
+    at_max = (lam_bars >= lam_maxs * (1.0 - 1e-12))[:, None]
+    n_vecs = jnp.where(at_max, n_bound, Y / lam_bars[:, None] - theta_bars)
+    _, fk, _ = tlfre_screen_grid_folds(X, Y, spec, alpha, rem, theta_bars,
+                                       n_vecs, col_n_f, gspec_f,
+                                       safety=safety)
+    if screen == "gapsafe":
+        resid = Y - masks * (beta_prev @ X.T)
+        pen = (alpha * jnp.sum(spec.weights[None, :]
+                               * jax.vmap(lambda b: group_norms(spec, b))(
+                                   beta_prev), axis=1)
+               + jnp.sum(jnp.abs(beta_prev), axis=1))
+        radii = jax.vmap(gap_safe_grid_radii)(Y, rem, theta_bars, resid,
+                                              pen) * (1.0 + safety)
+        _, fk_dyn = gap_safe_screen_grid_folds(spec, alpha, c_prev, radii,
+                                               col_n_f, gspec_f)
+        fk = fk & fk_dyn
+    return fk
+
+
+@functools.partial(jax.jit, static_argnames=("screen",))
+def _screen_folds_nn(X, Y, rem, lam_bars, lam_maxs, theta_bars, n_bound,
+                     beta_prev, c_prev, masks, col_n_f, safety, *,
+                     screen: str):
+    """Stacked DPC (+ optional Gap-Safe) screen; one GEMM for all folds."""
+    at_max = (lam_bars >= lam_maxs * (1.0 - 1e-12))[:, None]
+    n_vecs = jnp.where(at_max, n_bound, Y / lam_bars[:, None] - theta_bars)
+    fk, _ = dpc_screen_grid_folds(X, Y, rem, theta_bars, n_vecs, col_n_f,
+                                  safety=safety)
+    if screen == "gapsafe":
+        resid = Y - masks * (beta_prev @ X.T)
+        pen = jnp.sum(beta_prev, axis=1)         # beta >= 0 => l1 = sum
+        radii = jax.vmap(gap_safe_grid_radii)(Y, rem, theta_bars, resid,
+                                              pen) * (1.0 + safety)
+        fk = fk & jax.vmap(gap_safe_screen_grid_nn)(c_prev, radii, col_n_f)
+    return fk
+
+
+# ---------------------------------------------------------------------------
+# Fold-batched sweeps: vmap over the fold axis, shard_map across the mesh
+# ---------------------------------------------------------------------------
+
+_SGL_SWEEP_AXES = (None, 0, 0, None, 0, None, 0, 0, 0, 0, None, 0)
+_NN_SWEEP_AXES = (None, 0, 0, 0, 0, 0, 0, None, 0)
+_FOLD_SWEEPS: dict = {}
+
+
+def _fold_sweep(kind: str, mesh, n_folds: int, max_iter: int,
+                check_every: int):
+    """Jitted fold-batched sweep, cached per (kind, mesh, statics).
+
+    vmaps the single-fold segment sweep over a leading fold axis; when a
+    multi-device 'fold' mesh is supplied and it divides the fold count, the
+    fold axis is sharded across it with ``shard_map``.
+    """
+    core, axes = ((sweep_sgl_core, _SGL_SWEEP_AXES) if kind == "sgl"
+                  else (sweep_nn_core, _NN_SWEEP_AXES))
+    use_shard = (mesh is not None and mesh.size > 1
+                 and n_folds % mesh.size == 0)
+    # Mesh hashes by devices+axes, so equal meshes from repeated
+    # make_fold_mesh calls share one cache entry (id() would re-trace per
+    # call and pin dead meshes forever)
+    key = (kind, mesh if use_shard else None, max_iter, check_every)
+    fn = _FOLD_SWEEPS.get(key)
+    if fn is None:
+        f = jax.vmap(functools.partial(core, max_iter=max_iter,
+                                       check_every=check_every,
+                                       use_pallas=False), in_axes=axes)
+        if use_shard:
+            from ..launch.mesh import shard_over_folds
+            f = shard_over_folds(f, mesh, axes)
+        fn = _FOLD_SWEEPS[key] = jax.jit(f)
+    return fn
+
+
+def _stack_specs(specs):
+    return jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *specs)
+
+
+_spectral_norms_f = jax.jit(jax.vmap(
+    lambda A: spectral_norm(A, iters=25) ** 2))
+
+
+# ---------------------------------------------------------------------------
+# Segment-loop pieces shared by the SGL and NN fold drivers.  The two
+# drivers differ in screening math and sweep signature; the grid padding,
+# the fully-screened-prefix advance, the certified-prefix acceptance, and
+# the chunk-length adaptation are identical and correctness-critical, so
+# they live here exactly once.
+# ---------------------------------------------------------------------------
+
+def _build_rem(lambdas, j_pos, act):
+    """Per-active-fold remaining grids, padded to a common pow2 length by
+    repeating each fold's last lambda (extra rows are screened and
+    discarded on the host slice)."""
+    J = len(lambdas)
+    Lp = _pow2_len(int((J - j_pos[act]).max()))
+    rem = np.empty((len(act), Lp))
+    for i, k in enumerate(act):
+        r = lambdas[j_pos[k]:]
+        rem[i, :len(r)] = r
+        rem[i, len(r):] = r[-1]
+    return rem
+
+
+def _advance_zero_prefix(k, counts, lambdas, j_pos, lam_bar, Theta, Cprev,
+                         Beta, masks_np, y_np, xty_np):
+    """Fully-screened prefix for fold k: beta* = 0 on those grid points and
+    the exact dual optimum is y/lam, so the fold advances without solving."""
+    adv = int(np.argmax(counts > 0)) if counts.any() else len(counts)
+    lam_new = float(lambdas[j_pos[k] + adv - 1])
+    lam_bar[k] = lam_new
+    Theta[k] = masks_np[k] * y_np / lam_new
+    Cprev[k] = xty_np[k] / lam_new
+    Beta[k] = 0.0
+    j_pos[k] += adv
+
+
+def _accept_prefixes(sweep, m_ks, good_np, betas_np, thetas_np, cthetas_np,
+                     iters_np, col_idxs, lam_pads, p, j_pos, betas_out,
+                     iters_out, kept_out, Beta, Theta, Cprev, lam_bar,
+                     stats):
+    """Accept each fold's certified prefix and carry its exact dual forward.
+    Row 0 of every fold is solved on a provably safe superset, so kk >= 1
+    guarantees progress."""
+    accepted = []
+    for t, (i, k, _) in enumerate(sweep):
+        mk = m_ks[t]
+        good = good_np[t][:mk]
+        kk = int(np.argmin(good)) if not good.all() else mk
+        if kk == 0:
+            kk = 1
+        accepted.append((kk, mk))
+        stats.n_rejected += int(mk - kk)
+        col_idx = col_idxs[t]
+        rows = np.zeros((kk, p))
+        rows[:, col_idx] = betas_np[t, :kk, :len(col_idx)]
+        j0 = j_pos[k]
+        betas_out[k, j0:j0 + kk] = rows
+        iters_out[k, j0:j0 + kk] = iters_np[t, :kk]
+        kept_out[k, j0:j0 + kk] = len(col_idx)
+        Beta[k] = rows[-1]
+        Theta[k] = thetas_np[t, kk - 1]
+        Cprev[k] = cthetas_np[t, kk - 1]
+        lam_bar[k] = float(lam_pads[t, kk - 1])
+        j_pos[k] += kk
+    return accepted
+
+
+def _next_chunk_len(spec_m, accepted):
+    """Double the speculative chunk when every fold certified everything;
+    otherwise throttle to the slowest fold's accepted prefix."""
+    if all(a == b for a, b in accepted):
+        return min(2 * spec_m, 64)
+    return max(2, min(a for a, _ in accepted))
+
+
+# ---------------------------------------------------------------------------
+# Fold-batched SGL paths (the engine behind sgl_cv / stability_selection)
+# ---------------------------------------------------------------------------
+
+def sgl_fold_paths(X, y, spec: GroupSpec, alpha, masks, lambdas, *,
+                   screen: str = "tlfre", tol=1e-9, max_iter: int = 20000,
+                   safety: float = 0.0, specnorm_method: str = "power",
+                   check_every: int = 10, min_bucket: int = 64,
+                   min_group_bucket: int = 16, margin: float = 0.125,
+                   chunk_init: int = 8, mesh=None):
+    """Solve the SAME lambda grid on K masked row-subsets of (X, y).
+
+    ``masks``: (K, N) 0/1 — 1 marks rows in subset k's training problem.
+    Returns ``(betas (K, J, p), kept (K, J), iters (K, J), stats,
+    (screen_time, solve_time, setup_time))``.  Grid points at/above a
+    fold's own lambda_max get exact zeros.
+    """
+    if screen not in ("tlfre", "gapsafe", "none"):
+        raise ValueError(f"unknown screen mode {screen!r}")
+    X = jnp.asarray(X)
+    y = jnp.asarray(y)
+    N, p = X.shape
+    G = spec.num_groups
+    masks_np = np.asarray(masks, dtype=float)
+    K = masks_np.shape[0]
+    lambdas = np.asarray(lambdas, dtype=float)
+    J = len(lambdas)
+
+    # ---- per-fold geometry, batched into a handful of GEMMs ---------------
+    t0 = time.perf_counter()
+    masks_d = jnp.asarray(masks_np, X.dtype)
+    Y = masks_d * y[None, :]                                  # (K, N)
+    xty_f = Y @ X                                             # (K, p)
+    lam_max_f, g_star_f = jax.vmap(
+        lambda c: lambda_max_sgl(spec, c, alpha))(xty_f)
+    col2_f = masks_d @ (X * X)                                # (K, p)
+    col_n_f = jnp.sqrt(col2_f)
+    if specnorm_method == "power":
+        # one fold at a time: peak memory stays (N, p), not (K, N, p) —
+        # group_spectral_norms is jitted once and reused across folds
+        gspec_f = jnp.stack([
+            group_spectral_norms(masks_d[k][:, None] * X, spec)
+            for k in range(K)])
+    else:
+        gspec_f = jnp.sqrt(jax.vmap(lambda c2: jax.ops.segment_sum(
+            c2, spec.group_ids, num_segments=G))(col2_f))
+    # boundary normal of Theorem 12 at each fold's own lambda_max, masked
+    lam_max_np = np.asarray(lam_max_f, dtype=float)
+    lam_max_div = jnp.asarray(np.where(lam_max_np > 0, lam_max_np, 1.0),
+                              X.dtype)
+    W = shrink(xty_f / lam_max_div[:, None])
+    w_star = jnp.where(spec.group_ids[None, :] == g_star_f[:, None], W, 0.0)
+    n_bound = masks_d * (w_star @ X.T)                        # (K, N)
+    jax.block_until_ready((col_n_f, gspec_f, n_bound))
+    setup_time = time.perf_counter() - t0
+
+    # ---- host-side per-fold state -----------------------------------------
+    y_np = np.asarray(y)
+    X_np = np.asarray(X)
+    xty_np = np.asarray(xty_f)
+    gid = np.asarray(spec.group_ids)
+    sizes_np = np.asarray(spec.sizes)
+    weights_np = np.asarray(spec.weights)
+    lam_max_safe = np.where(lam_max_np > 0, lam_max_np, 1.0)
+    Theta = masks_np * y_np[None, :] / lam_max_safe[:, None]  # (K, N)
+    Cprev = xty_np / lam_max_safe[:, None]                    # (K, p)
+    lam_bar = lam_max_np.copy()
+    Beta = np.zeros((K, p))
+    betas_out = np.zeros((K, J, p))
+    iters_out = np.zeros((K, J), dtype=np.int64)
+    kept_out = np.zeros((K, J), dtype=np.int64)
+    gap_scales = np.maximum(0.5 * np.sum((masks_np * y_np) ** 2, axis=1),
+                            1e-30)
+    stats = EngineStats()
+    screen_time = 0.0
+    solve_time = 0.0
+    seen_keys: set = set()
+    spec_m = max(int(chunk_init), 1)
+
+    j_pos = np.zeros(K, dtype=int)
+    for k in range(K):
+        while (j_pos[k] < J
+               and lambdas[j_pos[k]] >= lam_max_np[k] * (1.0 - 1e-12)):
+            j_pos[k] += 1                    # beta* = 0 at/above fold lam_max
+
+    while (j_pos < J).any():
+        act = np.nonzero(j_pos < J)[0]
+        a_idx = jnp.asarray(act)
+        rem = _build_rem(lambdas, j_pos, act)
+
+        # ---- one stacked grid screen for every active fold ---------------
+        ts = time.perf_counter()
+        if screen == "none":
+            fk_np = np.ones((len(act), rem.shape[1], p), dtype=bool)
+        else:
+            fk = _screen_folds_sgl(
+                X, Y[a_idx], spec, alpha, jnp.asarray(rem, X.dtype),
+                jnp.asarray(lam_bar[act], X.dtype), lam_max_f[a_idx],
+                jnp.asarray(Theta[act], X.dtype), n_bound[a_idx],
+                jnp.asarray(Beta[act], X.dtype),
+                jnp.asarray(Cprev[act], X.dtype), masks_d[a_idx],
+                col_n_f[a_idx], gspec_f[a_idx], safety, screen=screen)
+            fk_np = np.asarray(fk)                       # one host sync
+            stats.n_screens += 1                         # ONE GEMM issued
+        screen_time += time.perf_counter() - ts
+
+        # ---- per-fold feature sets on a COMMON bucket ---------------------
+        sweep = []          # (act_row, fold, fkk) entering this segment's sweep
+        for i, k in enumerate(act):
+            fkk = fk_np[i][:J - j_pos[k]]
+            counts = fkk.sum(axis=1)
+            if counts[0] == 0:
+                _advance_zero_prefix(k, counts, lambdas, j_pos, lam_bar,
+                                     Theta, Cprev, Beta, masks_np, y_np,
+                                     xty_np)
+                continue
+            sweep.append((i, k, fkk))
+        if not sweep:
+            continue
+
+        p_b = max(_feature_bucket(int(fkk[0].sum()), p, min_bucket, margin)
+                  for _, _, fkk in sweep)
+        S_list = [_expand_set(fkk[0], fkk, p_b) for _, _, fkk in sweep]
+        g_b = min(max(_bucket(len(np.unique(gid[S])) + 2, min_group_bucket)
+                      for S in S_list), G + 1)
+        for (i, k, _), S in zip(sweep, S_list):
+            # same margin rule as the single-fold engine, per-fold c_prev
+            margin_fill_sgl(S, Cprev[k], gid, sizes_np, weights_np, p_b,
+                            g_b)
+
+        # ---- stacked bucketed subproblems + ONE fold-batched sweep --------
+        ts = time.perf_counter()
+        Ka = len(sweep)
+        m_ks = [min(J - j_pos[k], spec_m) for _, k, _ in sweep]
+        len2 = _pow2_len(max(m_ks))
+        X_subs = np.zeros((Ka, N, p_b), dtype=X_np.dtype)
+        beta0s = np.zeros((Ka, p_b), dtype=X_np.dtype)
+        lam_pads = np.zeros((Ka, len2))
+        valids = np.zeros((Ka, len2), dtype=bool)
+        sub_specs = []
+        col_idxs = []
+        for t, ((i, k, _), S) in enumerate(zip(sweep, S_list)):
+            sub_spec, col_idx = spec.bucketed_subset(S, p_b, g_b)
+            X_subs[t, :, :len(col_idx)] = (X_np[:, col_idx]
+                                           * masks_np[k][:, None])
+            beta0s[t, :len(col_idx)] = Beta[k][col_idx]
+            chunk = lambdas[j_pos[k]:j_pos[k] + m_ks[t]]
+            lam_pads[t, :m_ks[t]] = chunk
+            lam_pads[t, m_ks[t]:] = chunk[-1]
+            valids[t, :m_ks[t]] = True
+            sub_specs.append(sub_spec)
+            col_idxs.append(col_idx)
+        X_subs_d = jnp.asarray(X_subs)
+        L_subs = _spectral_norms_f(X_subs_d)
+        key = (Ka, p_b, g_b, spec.max_size, len2)
+        if key not in seen_keys:
+            seen_keys.add(key)
+            stats.n_compilations += 1
+        k_rows = jnp.asarray(np.asarray([k for _, k, _ in sweep]))
+        runner = _fold_sweep("sgl", mesh, Ka, max_iter, check_every)
+        betas_b, thetas_b, cthetas_b, good_b, iters_b = runner(
+            X, X_subs_d, Y[k_rows], spec, _stack_specs(sub_specs), alpha,
+            L_subs, jnp.asarray(lam_pads, X.dtype), jnp.asarray(valids),
+            jnp.asarray(beta0s), tol, jnp.asarray(gap_scales[[k for _, k, _
+                                                              in sweep]],
+                                                  X.dtype))
+        good_np = np.asarray(good_b)                     # one host sync
+        betas_np = np.asarray(betas_b)
+        thetas_np = np.asarray(thetas_b)
+        cthetas_np = np.asarray(cthetas_b)
+        iters_np = np.asarray(iters_b)
+        solve_time += time.perf_counter() - ts
+
+        accepted = _accept_prefixes(
+            sweep, m_ks, good_np, betas_np, thetas_np, cthetas_np, iters_np,
+            col_idxs, lam_pads, p, j_pos, betas_out, iters_out, kept_out,
+            Beta, Theta, Cprev, lam_bar, stats)
+        stats.n_segments += 1
+        stats.buckets.append((p_b, g_b, max(m_ks), min(a for a, _ in
+                                                       accepted)))
+        spec_m = _next_chunk_len(spec_m, accepted)
+
+    return betas_out, kept_out, iters_out, stats, (screen_time, solve_time,
+                                                   setup_time)
+
+
+# ---------------------------------------------------------------------------
+# Fold-batched nonnegative-Lasso paths
+# ---------------------------------------------------------------------------
+
+def nn_fold_paths(X, y, masks, lambdas, *, screen: str = "dpc", tol=1e-9,
+                  max_iter: int = 20000, safety: float = 0.0,
+                  check_every: int = 10, min_bucket: int = 64,
+                  margin: float = 0.125, chunk_init: int = 8, mesh=None):
+    """Nonnegative-Lasso analogue of ``sgl_fold_paths`` (DPC / Gap-Safe).
+
+    A fold whose ``max_i <x_i, y>`` is nonpositive has the all-zero path
+    and simply drops out (the single-path driver raises instead)."""
+    if screen not in ("dpc", "gapsafe", "none"):
+        raise ValueError(f"unknown screen mode {screen!r}")
+    X = jnp.asarray(X)
+    y = jnp.asarray(y)
+    N, p = X.shape
+    masks_np = np.asarray(masks, dtype=float)
+    K = masks_np.shape[0]
+    lambdas = np.asarray(lambdas, dtype=float)
+    J = len(lambdas)
+
+    t0 = time.perf_counter()
+    masks_d = jnp.asarray(masks_np, X.dtype)
+    Y = masks_d * y[None, :]
+    xty_f = Y @ X
+    lam_max_f, i_star_f = jax.vmap(lambda_max_nn)(xty_f)
+    col_n_f = jnp.sqrt(masks_d @ (X * X))
+    lam_max_np = np.asarray(lam_max_f, dtype=float)
+    n_bound = masks_d * X[:, np.asarray(i_star_f)].T          # (K, N)
+    jax.block_until_ready((col_n_f, n_bound))
+    setup_time = time.perf_counter() - t0
+
+    y_np = np.asarray(y)
+    X_np = np.asarray(X)
+    xty_np = np.asarray(xty_f)
+    lam_max_safe = np.where(lam_max_np > 0, lam_max_np, 1.0)
+    Theta = masks_np * y_np[None, :] / lam_max_safe[:, None]
+    Cprev = xty_np / lam_max_safe[:, None]
+    lam_bar = lam_max_safe.copy()
+    Beta = np.zeros((K, p))
+    betas_out = np.zeros((K, J, p))
+    iters_out = np.zeros((K, J), dtype=np.int64)
+    kept_out = np.zeros((K, J), dtype=np.int64)
+    gap_scales = np.maximum(0.5 * np.sum((masks_np * y_np) ** 2, axis=1),
+                            1e-30)
+    stats = EngineStats()
+    screen_time = 0.0
+    solve_time = 0.0
+    seen_keys: set = set()
+    spec_m = max(int(chunk_init), 1)
+
+    j_pos = np.zeros(K, dtype=int)
+    for k in range(K):
+        if lam_max_np[k] <= 0:
+            j_pos[k] = J                       # all-zero path for this fold
+            continue
+        while (j_pos[k] < J
+               and lambdas[j_pos[k]] >= lam_max_np[k] * (1.0 - 1e-12)):
+            j_pos[k] += 1
+
+    while (j_pos < J).any():
+        act = np.nonzero(j_pos < J)[0]
+        a_idx = jnp.asarray(act)
+        rem = _build_rem(lambdas, j_pos, act)
+
+        ts = time.perf_counter()
+        if screen == "none":
+            fk_np = np.ones((len(act), rem.shape[1], p), dtype=bool)
+        else:
+            fk = _screen_folds_nn(
+                X, Y[a_idx], jnp.asarray(rem, X.dtype),
+                jnp.asarray(lam_bar[act], X.dtype), lam_max_f[a_idx],
+                jnp.asarray(Theta[act], X.dtype), n_bound[a_idx],
+                jnp.asarray(Beta[act], X.dtype),
+                jnp.asarray(Cprev[act], X.dtype), masks_d[a_idx],
+                col_n_f[a_idx], safety, screen=screen)
+            fk_np = np.asarray(fk)
+            stats.n_screens += 1
+        screen_time += time.perf_counter() - ts
+
+        sweep = []
+        for i, k in enumerate(act):
+            fkk = fk_np[i][:J - j_pos[k]]
+            counts = fkk.sum(axis=1)
+            if counts[0] == 0:
+                _advance_zero_prefix(k, counts, lambdas, j_pos, lam_bar,
+                                     Theta, Cprev, Beta, masks_np, y_np,
+                                     xty_np)
+                continue
+            sweep.append((i, k, fkk))
+        if not sweep:
+            continue
+
+        p_b = max(_feature_bucket(int(fkk[0].sum()), p, min_bucket, margin)
+                  for _, _, fkk in sweep)
+        S_list = [_expand_set(fkk[0], fkk, p_b) for _, _, fkk in sweep]
+        for (i, k, _), S in zip(sweep, S_list):
+            margin_fill_nn(S, Cprev[k], p_b)
+
+        ts = time.perf_counter()
+        Ka = len(sweep)
+        m_ks = [min(J - j_pos[k], spec_m) for _, k, _ in sweep]
+        len2 = _pow2_len(max(m_ks))
+        X_subs = np.zeros((Ka, N, p_b), dtype=X_np.dtype)
+        beta0s = np.zeros((Ka, p_b), dtype=X_np.dtype)
+        lam_pads = np.zeros((Ka, len2))
+        valids = np.zeros((Ka, len2), dtype=bool)
+        col_idxs = []
+        for t, ((i, k, _), S) in enumerate(zip(sweep, S_list)):
+            col_idx = np.nonzero(S)[0]
+            X_subs[t, :, :len(col_idx)] = (X_np[:, col_idx]
+                                           * masks_np[k][:, None])
+            beta0s[t, :len(col_idx)] = Beta[k][col_idx]
+            chunk = lambdas[j_pos[k]:j_pos[k] + m_ks[t]]
+            lam_pads[t, :m_ks[t]] = chunk
+            lam_pads[t, m_ks[t]:] = chunk[-1]
+            valids[t, :m_ks[t]] = True
+            col_idxs.append(col_idx)
+        X_subs_d = jnp.asarray(X_subs)
+        L_subs = _spectral_norms_f(X_subs_d)
+        key = (Ka, p_b, len2)
+        if key not in seen_keys:
+            seen_keys.add(key)
+            stats.n_compilations += 1
+        k_rows = jnp.asarray(np.asarray([k for _, k, _ in sweep]))
+        runner = _fold_sweep("nn", mesh, Ka, max_iter, check_every)
+        betas_b, thetas_b, cthetas_b, good_b, iters_b = runner(
+            X, X_subs_d, Y[k_rows], L_subs,
+            jnp.asarray(lam_pads, X.dtype), jnp.asarray(valids),
+            jnp.asarray(beta0s), tol,
+            jnp.asarray(gap_scales[[k for _, k, _ in sweep]], X.dtype))
+        good_np = np.asarray(good_b)
+        betas_np = np.asarray(betas_b)
+        thetas_np = np.asarray(thetas_b)
+        cthetas_np = np.asarray(cthetas_b)
+        iters_np = np.asarray(iters_b)
+        solve_time += time.perf_counter() - ts
+
+        accepted = _accept_prefixes(
+            sweep, m_ks, good_np, betas_np, thetas_np, cthetas_np, iters_np,
+            col_idxs, lam_pads, p, j_pos, betas_out, iters_out, kept_out,
+            Beta, Theta, Cprev, lam_bar, stats)
+        stats.n_segments += 1
+        stats.buckets.append((p_b, 0, max(m_ks), min(a for a, _ in
+                                                     accepted)))
+        spec_m = _next_chunk_len(spec_m, accepted)
+
+    return betas_out, kept_out, iters_out, stats, (screen_time, solve_time,
+                                                   setup_time)
+
+
+# ---------------------------------------------------------------------------
+# K-fold cross-validation
+# ---------------------------------------------------------------------------
+
+def _cv_statistics(X_np, y_np, folds, lambdas, betas, lam_max, kept, stats,
+                   times):
+    K = len(folds)
+    J = len(lambdas)
+    mse = np.zeros((K, J))
+    for k, (_, val) in enumerate(folds):
+        err = y_np[val][None, :] - betas[k] @ X_np[val].T        # (J, |val|)
+        mse[k] = np.mean(err * err, axis=1)
+    mean_mse = mse.mean(axis=0)
+    se_mse = mse.std(axis=0, ddof=1) / np.sqrt(K) if K > 1 else \
+        np.zeros(J)
+    best = int(np.argmin(mean_mse))
+    # 1-SE rule: sparsest (largest-lambda) model within one SE of the best
+    within = np.nonzero(mean_mse <= mean_mse[best] + se_mse[best])[0]
+    idx_1se = int(within[np.argmax(lambdas[within])])
+    return CVResult(
+        lambdas=lambdas, fold_betas=betas, mse_path=mse, mean_mse=mean_mse,
+        se_mse=se_mse, best_index=best, best_lambda=float(lambdas[best]),
+        index_1se=idx_1se, lambda_1se=float(lambdas[idx_1se]), folds=folds,
+        lam_max=lam_max, kept_features=kept, stats=stats,
+        screen_time=times[0], solve_time=times[1], setup_time=times[2])
+
+
+def sgl_cv(X, y, spec: GroupSpec, alpha, *, n_folds: int = 5, folds=None,
+           lambdas=None, n_lambdas: int = 100, min_ratio: float = 0.01,
+           screen: str = "tlfre", tol=1e-9, max_iter: int = 20000,
+           safety: float = 0.0, specnorm_method: str = "power",
+           check_every: int = 10, seed: int = 0, mesh=None,
+           min_bucket: int = 64, min_group_bucket: int = 16,
+           margin: float = 0.125, chunk_init: int = 8) -> CVResult:
+    """K-fold cross-validation for SGL over a shared lambda grid.
+
+    All folds solve the SAME grid (anchored at the full-data lambda_max so
+    held-out errors are comparable per grid point) with the fold-batched
+    engine: one stacked screening GEMM per segment and one vmapped /
+    mesh-sharded sweep per segment.  Per-fold solutions carry the same
+    full-problem duality-gap certificates as the single-fold engine, so
+    they match independent per-fold ``sgl_path`` runs to solver precision.
+    ``folds`` overrides the deterministic ``kfold_indices`` split; ``mesh``
+    (from ``launch.mesh.make_fold_mesh``) shards the fold axis.
+    """
+    X_np = np.asarray(X)
+    y_np = np.asarray(y)
+    N = X_np.shape[0]
+    if folds is None:
+        folds = kfold_indices(N, n_folds, seed)
+    masks = _masks_from_folds(folds, N)
+    if lambdas is None:
+        lam_max = float(lambda_max_sgl(
+            spec, jnp.asarray(X).T @ jnp.asarray(y), alpha)[0])
+        lambdas = default_lambda_grid(lam_max, n_lambdas, min_ratio)
+    else:
+        lambdas = np.asarray(lambdas, dtype=float)
+        lam_max = float(lambdas.max())
+    betas, kept, _, stats, times = sgl_fold_paths(
+        X, y, spec, alpha, masks, lambdas, screen=screen, tol=tol,
+        max_iter=max_iter, safety=safety, specnorm_method=specnorm_method,
+        check_every=check_every, min_bucket=min_bucket,
+        min_group_bucket=min_group_bucket, margin=margin,
+        chunk_init=chunk_init, mesh=mesh)
+    return _cv_statistics(X_np, y_np, folds, np.asarray(lambdas, float),
+                          betas, lam_max, kept, stats, times)
+
+
+def nn_lasso_cv(X, y, *, n_folds: int = 5, folds=None, lambdas=None,
+                n_lambdas: int = 100, min_ratio: float = 0.01,
+                screen: str = "dpc", tol=1e-9, max_iter: int = 20000,
+                safety: float = 0.0, check_every: int = 10, seed: int = 0,
+                mesh=None, min_bucket: int = 64, margin: float = 0.125,
+                chunk_init: int = 8) -> CVResult:
+    """K-fold cross-validation for the nonnegative Lasso (DPC screening)."""
+    X_np = np.asarray(X)
+    y_np = np.asarray(y)
+    N = X_np.shape[0]
+    if folds is None:
+        folds = kfold_indices(N, n_folds, seed)
+    masks = _masks_from_folds(folds, N)
+    if lambdas is None:
+        lam_max = float(lambda_max_nn(jnp.asarray(X).T @ jnp.asarray(y))[0])
+        if lam_max <= 0:
+            raise ValueError("max_i <x_i, y> <= 0: nonnegative Lasso "
+                             "solution is identically zero")
+        lambdas = default_lambda_grid(lam_max, n_lambdas, min_ratio)
+    else:
+        lambdas = np.asarray(lambdas, dtype=float)
+        lam_max = float(lambdas.max())
+    betas, kept, _, stats, times = nn_fold_paths(
+        X, y, masks, lambdas, screen=screen, tol=tol, max_iter=max_iter,
+        safety=safety, check_every=check_every, min_bucket=min_bucket,
+        margin=margin, chunk_init=chunk_init, mesh=mesh)
+    return _cv_statistics(X_np, y_np, folds, np.asarray(lambdas, float),
+                          betas, lam_max, kept, stats, times)
+
+
+# ---------------------------------------------------------------------------
+# Stability selection (Meinshausen & Buhlmann, 2010)
+# ---------------------------------------------------------------------------
+
+def stability_selection(X, y, spec: GroupSpec, alpha, *,
+                        n_subsamples: int = 50, frac: float = 0.5,
+                        lambdas=None, n_lambdas: int = 30,
+                        min_ratio: float = 0.05, active_tol: float = 1e-8,
+                        screen: str = "tlfre", tol=1e-7,
+                        max_iter: int = 20000, safety: float = 0.0,
+                        check_every: int = 10, seed: int = 0, mesh=None,
+                        batch_size: int = 10,
+                        specnorm_method: str = "fro") -> StabilityResult:
+    """Selection probabilities over random row-subsamples, fold-batched.
+
+    Runs the SGL grid on ``n_subsamples`` random ``frac``-subsamples
+    (``batch_size`` at a time through the fold-batched engine) and reports
+    the fraction of subsamples in which each feature is active at each
+    lambda.  ``specnorm_method`` defaults to the Frobenius bound: the
+    per-subsample power iterations are the only setup cost that scales
+    with B, and the bound only loosens screening, never correctness.
+    """
+    X_np = np.asarray(X)
+    y_np = np.asarray(y)
+    N, p = X_np.shape
+    if lambdas is None:
+        lam_max = float(lambda_max_sgl(
+            spec, jnp.asarray(X).T @ jnp.asarray(y), alpha)[0])
+        lambdas = default_lambda_grid(lam_max, n_lambdas, min_ratio)
+    lambdas = np.asarray(lambdas, dtype=float)
+    masks = subsample_masks(N, n_subsamples, frac, seed)
+    counts = np.zeros((len(lambdas), p))
+    agg = EngineStats()
+    for b0 in range(0, n_subsamples, batch_size):
+        betas, _, _, stats, _ = sgl_fold_paths(
+            X, y, spec, alpha, masks[b0:b0 + batch_size], lambdas,
+            screen=screen, tol=tol, max_iter=max_iter, safety=safety,
+            specnorm_method=specnorm_method, check_every=check_every,
+            mesh=mesh)
+        counts += (np.abs(betas) > active_tol).sum(axis=0)
+        agg.n_segments += stats.n_segments
+        agg.n_screens += stats.n_screens
+        agg.n_compilations += stats.n_compilations
+        agg.n_rejected += stats.n_rejected
+    probs = counts / n_subsamples
+    return StabilityResult(lambdas=lambdas, selection_probs=probs,
+                           max_probs=probs.max(axis=0),
+                           n_subsamples=n_subsamples, stats=agg)

@@ -59,6 +59,24 @@ def dpc_screen_grid(X, y, lambdas, theta_bar, n_vec, col_norms,
     return omega >= 1.0, radii
 
 
+def dpc_screen_grid_folds(X, Y, lambdas, Theta_bar, N_vecs, col_norms_f,
+                          safety: float = 0.0):
+    """Fold-batched Theorem 22: K folds x L lambdas in ONE GEMM.
+
+    Same masked-row convention as ``screening.tlfre_screen_grid_folds``:
+    per-fold vectors are (K, N) with held-out rows zeroed, ``lambdas`` is
+    (K, L), ``col_norms_f`` (K, p).  Returns (feat_keep (K, L, p),
+    radii (K, L))."""
+    from .screening import grid_ball_geometry_folds
+    K, L = lambdas.shape
+    N = Y.shape[1]
+    centers, radii = grid_ball_geometry_folds(Y, lambdas, Theta_bar, N_vecs)
+    radii = radii * (1.0 + safety)
+    omega = (centers.reshape(K * L, N) @ X).reshape(K, L, X.shape[1])
+    omega = omega + radii[:, :, None] * col_norms_f[:, None, :]
+    return omega >= 1.0, radii
+
+
 def gap_safe_screen_grid_nn(c_theta, radii, col_norms):
     """Gap-Safe DPC grid rules for a fixed feasible center: one GEMV, radii
     vary per lambda.  Returns feat_keep (L, p)."""

@@ -34,6 +34,23 @@ class DualBall:
         return cls(*children)
 
 
+def project_out_normal(v, n_vec):
+    """``v_perp``: the component of ``v`` orthogonal to ``n_vec``.
+
+    Shared zero-normal guard for Theorem 12(ii) and its grid form
+    (``screening.grid_ball_geometry``): when ``n_vec == 0`` (or its squared
+    norm underflows) the normal-cone constraint is vacuous and ``v_perp = v``
+    exactly — no NaN and no division by a clamped denominator, in float32 as
+    well as float64.  At ``lam == lam_bar`` we have ``v == 0`` and hence a
+    ball of radius exactly 0.  ``v`` may be (N,) or batched (..., N) against
+    a single (N,) normal.
+    """
+    n2 = jnp.vdot(n_vec, n_vec)
+    coef = jnp.where(n2 > 0, jnp.tensordot(v, n_vec, axes=(-1, 0))
+                     / jnp.where(n2 > 0, n2, 1.0), 0.0)
+    return v - coef[..., None] * n_vec if v.ndim > 1 else v - coef * n_vec
+
+
 def normal_vector_sgl(X, y, spec: GroupSpec, lam_bar, lam_max, theta_bar,
                       g_star) -> jnp.ndarray:
     """n_alpha(lam_bar) of Theorem 12.
@@ -53,9 +70,7 @@ def normal_vector_sgl(X, y, spec: GroupSpec, lam_bar, lam_max, theta_bar,
 def estimate_dual_ball(y, lam, lam_bar, theta_bar, n_vec) -> DualBall:
     """Theorem 12(ii) (identical algebra for Theorem 21)."""
     v = y / lam - theta_bar
-    n2 = jnp.vdot(n_vec, n_vec)
-    coef = jnp.where(n2 > 0, jnp.vdot(v, n_vec) / jnp.where(n2 > 0, n2, 1.0), 0.0)
-    v_perp = v - coef * n_vec
+    v_perp = project_out_normal(v, n_vec)
     return DualBall(center=theta_bar + 0.5 * v_perp,
                     radius=0.5 * jnp.linalg.norm(v_perp))
 

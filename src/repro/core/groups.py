@@ -105,20 +105,20 @@ class GroupSpec:
         kept_groups, inv, counts = np.unique(gid_kept, return_inverse=True,
                                              return_counts=True)
         G_kept = len(kept_groups)
-        if G_kept >= g_bucket:
+        pad = p_bucket - p_kept
+        # an exact fit (every bucket slot holds a real group, no padding
+        # columns) needs no garbage bin; only reject when a non-empty bin
+        # would have nowhere to live
+        if G_kept > g_bucket or (G_kept == g_bucket and pad > 0):
             raise ValueError("g_bucket too small")
         w_full = np.asarray(self.weights)
 
-        pad = p_bucket - p_kept
         # fixed padded width: bucket shape must not depend on which groups
         # survived, so reuse the parent's max_size
         n_max = self.max_size
 
         sizes = np.zeros(g_bucket, dtype=np.int32)
         sizes[:G_kept] = counts
-        sizes[g_bucket - 1] = pad            # garbage bin (may exceed n_max;
-        #                                     its columns are all-zero so the
-        #                                     truncated padded view is exact)
         weights = np.ones(g_bucket, dtype=np.float64)
         weights[:G_kept] = w_full[kept_groups]
 
@@ -129,7 +129,11 @@ class GroupSpec:
         col_idx = col_idx[order]
         starts = np.zeros(g_bucket, dtype=np.int32)
         starts[:G_kept] = np.concatenate([[0], np.cumsum(counts)[:-1]])
-        starts[g_bucket - 1] = p_kept
+        if G_kept < g_bucket:
+            sizes[g_bucket - 1] = pad        # garbage bin (may exceed n_max;
+            #                                 its columns are all-zero so the
+            #                                 truncated padded view is exact)
+            starts[g_bucket - 1] = p_kept
 
         pad_idx = starts[:, None] + np.arange(n_max, dtype=np.int32)[None, :]
         pad_mask = np.arange(n_max)[None, :] < np.minimum(sizes, n_max)[:, None]

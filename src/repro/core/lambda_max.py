@@ -47,12 +47,19 @@ def _padded_segment_roots(z: jnp.ndarray, target_sq: jnp.ndarray) -> jnp.ndarray
     r_minus = (-b - sq) / (2.0 * safe_a)
     # a -> 0 degenerates to the linear equation -2*cs1*rho + cs2 = 0.
     r_lin = jnp.where(cs1 > 0, cs2 / (2.0 * cs1), 0.0)
-    lin = jnp.abs(a) <= 1e-9 * jnp.maximum(k[None, :], target_sq[:, None])
+    # segment / degeneracy tolerances scale with the dtype: 1e-9 is fine
+    # under float64 but far below float32 rounding, where it silently drops
+    # roots that land a few ULPs outside their segment (rho -> 0, breaking
+    # dual feasibility downstream).  Dropping a root is the unsafe direction;
+    # admitting a slightly out-of-segment one only loosens the gap.
+    seg_tol = jnp.maximum(jnp.asarray(1e-9, z.dtype),
+                          128.0 * jnp.finfo(z.dtype).eps)
+    lin = jnp.abs(a) <= seg_tol * jnp.maximum(k[None, :], target_sq[:, None])
 
     hi = z                                           # segment upper bound z_k
     lo = jnp.concatenate([z[:, 1:], jnp.zeros_like(z[:, :1])], axis=1)  # z_{k+1}
     span = jnp.maximum(hi[:, :1], 1.0)
-    eps = 1e-9 * span                                # tolerance ~ problem scale
+    eps = seg_tol * span                             # tolerance ~ problem scale
 
     def in_seg(r):
         return (r >= lo - eps) & (r <= hi + eps) & (r > 0)

@@ -68,7 +68,6 @@ import jax.numpy as jnp
 from .dpc import (dpc_screen_grid, dual_scaling_nn, gap_safe_screen_grid_nn,
                   lambda_max_nn, normal_vector_nn)
 from .estimation import normal_vector_sgl
-from .fenchel import shrink
 from .groups import GroupSpec, group_norms
 from .lambda_max import dual_scaling_sgl, lambda_max_sgl
 from .linalg import (column_norms, group_frobenius_norms,
@@ -180,17 +179,53 @@ def _expand_set(base, fk_np, cap: int):
     return S
 
 
+def margin_fill_sgl(S, c_prev_np, gid, sizes_np, weights_np, p_b: int,
+                    g_b: int):
+    """Fill spare bucket capacity with whole groups ranked by their dual
+    correlation (Lemma-9 margin at the latest exact dual ``c_prev``).
+
+    Shared by the single-fold engine and the fold-batched CV drivers so the
+    speculative-set rule cannot drift between them.  Mutates ``S``."""
+    if S.all():
+        return
+    G = len(sizes_np)
+    shr = np.sign(c_prev_np) * np.maximum(np.abs(c_prev_np) - 1.0, 0.0)
+    score = np.sqrt(np.bincount(gid, weights=shr * shr,
+                                minlength=G)) / weights_np
+    g_S = np.unique(gid[S])
+    in_S = np.zeros(G, dtype=bool)
+    in_S[g_S] = True
+    n_S, n_grp = int(S.sum()), len(g_S)
+    for g in np.argsort(-score):
+        if in_S[g]:
+            continue
+        if n_grp + 1 >= g_b or n_S + int(sizes_np[g]) > p_b:
+            continue
+        S[gid == g] = True
+        in_S[g] = True
+        n_S += int(sizes_np[g])
+        n_grp += 1
+
+
+def margin_fill_nn(S, c_prev_np, p_b: int):
+    """Fill spare capacity with the top features by dual correlation
+    (nonnegative-Lasso analogue of ``margin_fill_sgl``).  Mutates ``S``."""
+    spare = p_b - int(S.sum())
+    if spare > 0 and not S.all():
+        cand = np.asarray(c_prev_np, dtype=float).copy()
+        cand[S] = -np.inf
+        S[np.argpartition(-cand, spare - 1)[:spare]] = True
+
+
 # ---------------------------------------------------------------------------
 # Jitted sweeps: lax.scan over a lambda chunk, carry = (beta, alive).
 # Each row certifies itself against the FULL problem right after its solve;
 # a failed certificate kills the remaining rows on device.
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit,
-                   static_argnames=("max_iter", "check_every", "use_pallas"))
-def _sweep_sgl(X, X_sub, y, spec: GroupSpec, sub_spec: GroupSpec, alpha,
-               lipschitz, lams, valid, beta0, tol, gap_scale, *,
-               max_iter: int, check_every: int, use_pallas: bool):
+def sweep_sgl_core(X, X_sub, y, spec: GroupSpec, sub_spec: GroupSpec, alpha,
+                   lipschitz, lams, valid, beta0, tol, gap_scale, *,
+                   max_iter: int, check_every: int, use_pallas: bool):
     prox = _padded_prox(sub_spec) if use_pallas else None
     N = y.shape[0]
     p = X.shape[1]
@@ -235,10 +270,14 @@ def _sweep_sgl(X, X_sub, y, spec: GroupSpec, sub_spec: GroupSpec, alpha,
     return out   # (betas, thetas, cthetas, good, iters)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("max_iter", "check_every", "use_pallas"))
-def _sweep_nn(X, X_sub, y, lipschitz, lams, valid, beta0, tol, gap_scale, *,
-              max_iter: int, check_every: int, use_pallas: bool):
+_sweep_sgl = functools.partial(
+    jax.jit, static_argnames=("max_iter", "check_every", "use_pallas"))(
+        sweep_sgl_core)
+
+
+def sweep_nn_core(X, X_sub, y, lipschitz, lams, valid, beta0, tol,
+                  gap_scale, *, max_iter: int, check_every: int,
+                  use_pallas: bool):
     N = y.shape[0]
     p = X.shape[1]
 
@@ -275,6 +314,11 @@ def _sweep_nn(X, X_sub, y, lipschitz, lams, valid, beta0, tol, gap_scale, *,
     _, out = jax.lax.scan(step, (beta0, jnp.asarray(True)),
                           (lams, valid, idxs))
     return out
+
+
+_sweep_nn = functools.partial(
+    jax.jit, static_argnames=("max_iter", "check_every", "use_pallas"))(
+        sweep_nn_core)
 
 
 # ---------------------------------------------------------------------------
@@ -397,22 +441,8 @@ def sgl_path_batched(X, y, spec: GroupSpec, alpha, *, lambdas=None,
         S = _expand_set(base, fk_np, p_b)
         g_S = np.unique(gid[S])
         g_b = min(_bucket(len(g_S) + 2, min_group_bucket), G + 1)
-        if not S.all():
-            # fill spare bucket capacity with whole groups ranked by their
-            # dual correlation (Lemma-9 margin at the latest exact dual)
-            score = np.asarray(group_norms(spec, shrink(c_prev))) / weights_np
-            in_S = np.zeros(G, dtype=bool)
-            in_S[g_S] = True
-            n_S, n_grp = int(S.sum()), len(g_S)
-            for g in np.argsort(-score):
-                if in_S[g]:
-                    continue
-                if n_grp + 1 >= g_b or n_S + int(sizes_np[g]) > p_b:
-                    continue
-                S[gid == g] = True
-                in_S[g] = True
-                n_S += int(sizes_np[g])
-                n_grp += 1
+        margin_fill_sgl(S, np.asarray(c_prev), gid, sizes_np, weights_np,
+                        p_b, g_b)
 
         m = min(J - j, spec_m)
 
@@ -576,14 +606,7 @@ def nn_lasso_path_batched(X, y, *, lambdas=None, n_lambdas: int = 100,
         n_base = int(base.sum())
         p_b = _feature_bucket(n_base, p, min_bucket, margin)
         S = _expand_set(base, fk_np, p_b)
-        if not S.all():
-            # margin: fill spare capacity with top features by correlation
-            spare = p_b - int(S.sum())
-            if spare > 0:
-                cand = np.asarray(c_prev).copy()
-                cand[S] = -np.inf
-                top = np.argpartition(-cand, spare - 1)[:spare]
-                S[top] = True
+        margin_fill_nn(S, np.asarray(c_prev), p_b)
 
         m = min(J - j, spec_m)
 

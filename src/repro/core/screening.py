@@ -19,7 +19,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from .estimation import DualBall
+from .estimation import DualBall, project_out_normal
 from .fenchel import shrink
 from .groups import (GroupSpec, broadcast_to_features, group_max_abs,
                      group_norms)
@@ -121,9 +121,7 @@ def grid_ball_geometry(y, lambdas, theta_bar, n_vec):
     """
     lambdas = jnp.asarray(lambdas)
     v = y[None, :] / lambdas[:, None] - theta_bar[None, :]        # (L, N)
-    n2 = jnp.maximum(jnp.vdot(n_vec, n_vec), 1e-30)
-    coef = (v @ n_vec) / n2                                        # (L,)
-    v_perp = v - coef[:, None] * n_vec[None, :]
+    v_perp = project_out_normal(v, n_vec)   # shared zero-normal guard
     centers = theta_bar[None, :] + 0.5 * v_perp                   # (L, N)
     radii = 0.5 * jnp.linalg.norm(v_perp, axis=1)
     return centers, radii
@@ -148,6 +146,49 @@ def tlfre_screen_grid(X, y, spec: GroupSpec, alpha, lambdas, lam_bar,
     group_keep, feat_keep = _grid_rules(spec, alpha, C, radii, col_norms,
                                         group_specnorms, use_pallas)
     return group_keep, feat_keep, radii
+
+
+def grid_ball_geometry_folds(Y, lambdas, Theta_bar, N_vecs):
+    """Theorem-12 ball geometry for K folds x L lambdas at once.
+
+    Per-fold quantities live on the FULL row index with held-out rows zeroed
+    (zero rows contribute nothing to any inner product, so the masked algebra
+    is exactly the per-fold algebra).  ``Y``/``Theta_bar``/``N_vecs``:
+    (K, N); ``lambdas``: (K, L) — per-fold grids may differ (folds progress
+    at different rates).  Returns (centers (K, L, N), radii (K, L))."""
+    return jax.vmap(grid_ball_geometry)(Y, lambdas, Theta_bar, N_vecs)
+
+
+def tlfre_screen_grid_folds(X, Y, spec: GroupSpec, alpha, lambdas, Theta_bar,
+                            N_vecs, col_norms_f, group_specnorms_f,
+                            safety: float = 0.0):
+    """Fold-batched TLFre grid screen: K folds x L lambdas in ONE GEMM.
+
+    Stacks the K fold ball geometries into a single
+    ``(K*L, N) x (N, p)`` product against the SHARED full design matrix —
+    fold-k centers are zero on fold-k's validation rows, so the full-X
+    product equals the fold's own ``centers @ X_train``.  ``col_norms_f`` /
+    ``group_specnorms_f`` are per-fold (K, p) / (K, G) norms of the masked
+    design.  Returns (group_keep (K, L, G), feat_keep (K, L, p),
+    radii (K, L))."""
+    K, L = lambdas.shape
+    N = Y.shape[1]
+    centers, radii = grid_ball_geometry_folds(Y, lambdas, Theta_bar, N_vecs)
+    radii = radii * (1.0 + safety)
+    C = (centers.reshape(K * L, N) @ X).reshape(K, L, X.shape[1])
+    group_keep, feat_keep = jax.vmap(
+        _grid_rules, in_axes=(None, None, 0, 0, 0, 0))(
+            spec, alpha, C, radii, col_norms_f, group_specnorms_f)
+    return group_keep, feat_keep, radii
+
+
+def gap_safe_screen_grid_folds(spec: GroupSpec, alpha, c_thetas, radii,
+                               col_norms_f, group_specnorms_f):
+    """Fold-batched Gap-Safe grid rules: per-fold fixed centers ``c_thetas``
+    (K, p), per-(fold, lambda) radii (K, L).  No GEMM — the K centers are
+    already reduced to K GEMVs by the caller."""
+    return jax.vmap(gap_safe_screen_grid, in_axes=(None, None, 0, 0, 0, 0))(
+        spec, alpha, c_thetas, radii, col_norms_f, group_specnorms_f)
 
 
 def gap_safe_screen_grid(spec: GroupSpec, alpha, c_theta, radii, col_norms,

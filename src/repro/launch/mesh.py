@@ -31,3 +31,42 @@ def make_local_mesh():
     """Whatever devices exist, as a 1-D 'data' mesh (CPU tests)."""
     n = len(jax.devices())
     return jax.make_mesh((n, 1), ("data", "model"), **_axis_type_kwargs(2))
+
+
+# ---------------------------------------------------------------------------
+# Fold parallelism (cross-validation / stability selection)
+# ---------------------------------------------------------------------------
+
+def make_fold_mesh(n_folds: int):
+    """1-D 'fold' mesh for K-fold model selection.
+
+    Uses the largest device count that divides ``n_folds`` so every shard
+    carries the same number of folds (shard_map needs an even split); on a
+    single-device host this degenerates to a 1-chip mesh and the fold sweep
+    runs as a plain vmap over the lone shard."""
+    n_dev = len(jax.devices())
+    d = 1
+    for c in range(min(n_folds, n_dev), 0, -1):
+        if n_folds % c == 0:
+            d = c
+            break
+    return jax.make_mesh((d,), ("fold",), **_axis_type_kwargs(1))
+
+
+def shard_over_folds(fn, mesh, example_args):
+    """Wrap a fold-batched function so its leading fold axis is sharded
+    across the mesh's 'fold' axis via ``shard_map``.
+
+    ``example_args`` marks which positional arguments carry a fold axis:
+    an entry of 0 shards the leading axis, ``None`` replicates.  Falls back
+    to ``fn`` unchanged on a 1-device mesh (shard_map over one shard adds
+    tracing overhead for nothing)."""
+    if mesh is None or mesh.size == 1:
+        return fn
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+
+    specs = tuple(PartitionSpec("fold") if a == 0 else PartitionSpec()
+                  for a in example_args)
+    return shard_map(fn, mesh=mesh, in_specs=specs,
+                     out_specs=PartitionSpec("fold"), check_rep=False)

@@ -1,0 +1,446 @@
+"""Fold-batched cross-validation & model selection: correctness suite.
+
+The CV acceptance criteria: fold splits are deterministic and disjoint;
+``sgl_cv`` per-fold paths match INDEPENDENT legacy-driver solves of each
+fold's training problem to 1e-8 under float64 across screening modes; the
+fold-batched screen issues one stacked grid GEMM per segment (counted via
+``EngineStats``), not one per fold.  Plus the satellite regressions:
+float32 segment tolerances in ``_padded_segment_roots`` and the exact-fit
+``bucketed_subset`` bucket.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import rand_cases
+
+from repro.core import (GroupSpec, estimate_dual_ball, kfold_indices,
+                        grid_ball_geometry, nn_lasso_cv, nn_lasso_path,
+                        sgl_cv, sgl_path, stability_selection)
+from repro.core.lambda_max import _padded_segment_roots, group_shrink_roots
+
+
+def _sgl_problem(seed=7, N=60, G=30, n=5, k_active=4):
+    rng = np.random.default_rng(seed)
+    p = G * n
+    X = rng.standard_normal((N, p))
+    beta = np.zeros(p)
+    for g in rng.choice(G, k_active, replace=False):
+        beta[g * n + rng.choice(n, 2, replace=False)] = rng.standard_normal(2)
+    y = X @ beta + 0.01 * rng.standard_normal(N)
+    return X, y, GroupSpec.uniform_groups(G, n)
+
+
+def _nn_problem(seed=3, N=50, p=160):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((N, p))
+    beta = np.zeros(p)
+    beta[rng.choice(p, 10, replace=False)] = np.abs(rng.standard_normal(10))
+    y = X @ beta + 0.01 * rng.standard_normal(N)
+    return X, y
+
+
+# ---------------------------------------------------------------------------
+# Fold splits
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("N,K", [(10, 3), (50, 5), (17, 4)])
+def test_kfold_deterministic_and_disjoint(N, K):
+    folds = kfold_indices(N, K, seed=0)
+    again = kfold_indices(N, K, seed=0)
+    assert all((a[0] == b[0]).all() and (a[1] == b[1]).all()
+               for a, b in zip(folds, again))
+    vals = np.concatenate([v for _, v in folds])
+    assert sorted(vals.tolist()) == list(range(N))     # disjoint + covering
+    for train, val in folds:
+        assert len(np.intersect1d(train, val)) == 0
+        assert len(train) + len(val) == N
+    sizes = [len(v) for _, v in folds]
+    assert max(sizes) - min(sizes) <= 1
+    assert kfold_indices(N, K, seed=1)[0][1].tolist() != \
+        folds[0][1].tolist() or N <= K  # different seed, different split
+
+
+def test_kfold_rejects_bad_counts():
+    with pytest.raises(ValueError):
+        kfold_indices(10, 1)
+    with pytest.raises(ValueError):
+        kfold_indices(3, 4)
+
+
+# ---------------------------------------------------------------------------
+# sgl_cv parity: per-fold paths == independent legacy-driver solves
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("screen", ["tlfre", "gapsafe"])
+def test_sgl_cv_matches_independent_fold_paths(screen):
+    X, y, spec = _sgl_problem()
+    res = sgl_cv(X, y, spec, 1.0, n_folds=3, n_lambdas=10, screen=screen,
+                 tol=1e-13, max_iter=200_000, min_bucket=32)
+    assert res.fold_betas.shape == (3, 10, spec.num_features)
+    for k, (train, _) in enumerate(res.folds):
+        ref = sgl_path(X[train], y[train], spec, 1.0, lambdas=res.lambdas,
+                       tol=1e-13, max_iter=200_000)
+        np.testing.assert_allclose(res.fold_betas[k], ref.betas, atol=1e-8)
+
+
+def test_sgl_cv_one_stacked_screen_gemm_per_segment():
+    """The fold-batched screen is ONE (K*L, N) x (N, p) GEMM per segment —
+    EngineStats must count far fewer screens than K independent engine runs
+    would issue, and never more than one per host round-trip."""
+    X, y, spec = _sgl_problem()
+    K = 4
+    res = sgl_cv(X, y, spec, 1.0, n_folds=K, n_lambdas=12, tol=1e-10,
+                 max_iter=100_000, min_bucket=32)
+    st = res.stats
+    # one stacked screen per grid-advancing host round-trip
+    assert st.n_screens <= st.n_segments + K
+    # an independent engine run per fold issues >= 1 screen per fold
+    per_fold = [sgl_path(X[tr], y[tr], spec, 1.0, lambdas=res.lambdas,
+                         engine="batched", tol=1e-10, max_iter=100_000,
+                         min_bucket=32).stats for tr, _ in res.folds]
+    assert st.n_screens < sum(s.n_screens for s in per_fold)
+    # fold-batched solver compilations stay O(log p), not O(K log p)
+    assert st.n_compilations <= max(s.n_compilations for s in per_fold) + 4
+
+
+def test_sgl_cv_statistics_and_selection():
+    X, y, spec = _sgl_problem(seed=11)
+    res = sgl_cv(X, y, spec, 1.0, n_folds=4, n_lambdas=12, tol=1e-10,
+                 max_iter=100_000, min_bucket=32)
+    assert res.mse_path.shape == (4, 12)
+    np.testing.assert_allclose(res.mean_mse, res.mse_path.mean(axis=0))
+    assert res.best_index == int(np.argmin(res.mean_mse))
+    assert res.best_lambda == res.lambdas[res.best_index]
+    # 1-SE rule picks a no-smaller lambda within one SE of the minimum
+    assert res.lambda_1se >= res.best_lambda
+    assert res.mean_mse[res.index_1se] <= (res.mean_mse[res.best_index]
+                                           + res.se_mse[res.best_index]
+                                           + 1e-12)
+    # held-out MSE is recomputable from the returned betas
+    k, (_, val) = 0, res.folds[0]
+    err = y[val][None, :] - res.fold_betas[0] @ X[val].T
+    np.testing.assert_allclose(res.mse_path[0], np.mean(err * err, axis=1))
+
+
+def test_sgl_cv_custom_folds_and_grid():
+    X, y, spec = _sgl_problem(seed=2, N=40, G=16, n=4)
+    folds = kfold_indices(40, 4, seed=9)[:2]       # explicit 2-fold subset
+    lam_max = float(sgl_path(X, y, spec, 1.0, n_lambdas=2).lam_max)
+    lambdas = lam_max * np.asarray([0.9, 0.5, 0.2, 0.1])
+    res = sgl_cv(X, y, spec, 1.0, folds=folds, lambdas=lambdas, tol=1e-12,
+                 max_iter=200_000, min_bucket=32)
+    assert len(res.folds) == 2 and res.fold_betas.shape[:2] == (2, 4)
+    for k, (train, _) in enumerate(folds):
+        ref = sgl_path(X[train], y[train], spec, 1.0, lambdas=lambdas,
+                       tol=1e-12, max_iter=200_000)
+        np.testing.assert_allclose(res.fold_betas[k], ref.betas, atol=1e-8)
+
+
+@pytest.mark.slow
+def test_sgl_cv_acceptance_scale():
+    """The PR acceptance run: K=5, N=250, p=2000, 40 lambdas — per-fold
+    betas match independent legacy solves to <= 1e-8 under float64, with
+    one stacked screening GEMM per segment."""
+    rng = np.random.default_rng(1)
+    N, G, n = 250, 200, 10
+    p = G * n
+    X = rng.standard_normal((N, p))
+    beta = np.zeros(p)
+    for g in rng.choice(G, 20, replace=False):
+        beta[g * n + rng.choice(n, 3, replace=False)] = \
+            rng.standard_normal(3)
+    y = X @ beta + 0.01 * rng.standard_normal(N)
+    spec = GroupSpec.uniform_groups(G, n)
+    res = sgl_cv(X, y, spec, 1.0, n_folds=5, n_lambdas=40, tol=1e-13,
+                 max_iter=300_000)
+    st = res.stats
+    assert st.n_screens <= st.n_segments + 5     # one stacked GEMM/segment
+    for k, (train, _) in enumerate(res.folds):
+        ref = sgl_path(X[train], y[train], spec, 1.0, lambdas=res.lambdas,
+                       tol=1e-13, max_iter=300_000)
+        np.testing.assert_allclose(res.fold_betas[k], ref.betas, atol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# Nonnegative Lasso CV
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("screen", ["dpc", "gapsafe"])
+def test_nn_cv_matches_independent_fold_paths(screen):
+    X, y = _nn_problem()
+    res = nn_lasso_cv(X, y, n_folds=3, n_lambdas=10, screen=screen,
+                      tol=1e-13, max_iter=200_000, min_bucket=32)
+    for k, (train, _) in enumerate(res.folds):
+        ref = nn_lasso_path(X[train], y[train], lambdas=res.lambdas,
+                            tol=1e-13, max_iter=200_000)
+        # both sides carry duality-gap certificates; at these problem
+        # scales the certificate bounds coefficients to ~1e-7
+        np.testing.assert_allclose(res.fold_betas[k], ref.betas, atol=1e-7)
+    assert res.stats.n_screens <= res.stats.n_segments + 3
+
+
+# ---------------------------------------------------------------------------
+# Fold-sharded sweep (mesh plumbing; single-device mesh degenerates to vmap)
+# ---------------------------------------------------------------------------
+
+def test_sgl_cv_with_fold_mesh_matches_plain():
+    from repro.launch.mesh import make_fold_mesh
+    X, y, spec = _sgl_problem(seed=4, N=40, G=16, n=4)
+    mesh = make_fold_mesh(3)
+    assert mesh.axis_names == ("fold",)
+    r_mesh = sgl_cv(X, y, spec, 1.0, n_folds=3, n_lambdas=8, tol=1e-11,
+                    max_iter=100_000, min_bucket=32, mesh=mesh)
+    r_plain = sgl_cv(X, y, spec, 1.0, n_folds=3, n_lambdas=8, tol=1e-11,
+                     max_iter=100_000, min_bucket=32)
+    np.testing.assert_allclose(r_mesh.fold_betas, r_plain.fold_betas,
+                               atol=1e-10)
+
+
+def test_shard_over_folds_passthrough_on_single_device():
+    from repro.launch.mesh import make_fold_mesh, shard_over_folds
+    mesh = make_fold_mesh(5)
+    f = lambda x: x + 1
+    if mesh.size == 1:
+        assert shard_over_folds(f, mesh, (0,)) is f
+    assert shard_over_folds(f, None, (0,)) is f
+
+
+@pytest.mark.slow
+def test_fold_shard_map_multi_device_subprocess():
+    """The sharded sweep path needs >1 device, so force 4 host CPU devices
+    in a subprocess and check sgl_cv(mesh=4-dev fold mesh) == plain vmap."""
+    import os
+    import subprocess
+    import sys
+    code = """
+import numpy as np, jax
+jax.config.update('jax_enable_x64', True)
+assert len(jax.devices()) == 4
+from repro.core import GroupSpec, sgl_cv
+from repro.launch.mesh import make_fold_mesh
+rng = np.random.default_rng(7)
+N, G, n = 40, 16, 4
+X = rng.standard_normal((N, G * n))
+beta = np.zeros(G * n)
+beta[:6] = rng.standard_normal(6)
+y = X @ beta + 0.01 * rng.standard_normal(N)
+spec = GroupSpec.uniform_groups(G, n)
+mesh = make_fold_mesh(4)
+assert mesh.size == 4
+a = sgl_cv(X, y, spec, 1.0, n_folds=4, n_lambdas=6, tol=1e-11,
+           max_iter=100000, min_bucket=32, mesh=mesh)
+b = sgl_cv(X, y, spec, 1.0, n_folds=4, n_lambdas=6, tol=1e-11,
+           max_iter=100000, min_bucket=32)
+np.testing.assert_allclose(a.fold_betas, b.fold_betas, atol=1e-10)
+print('SHARDED-OK')
+"""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=os.path.join(root, "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env, cwd=root,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SHARDED-OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Stability selection
+# ---------------------------------------------------------------------------
+
+def test_stability_selection_separates_signal_from_null():
+    rng = np.random.default_rng(1)
+    G, n, N = 20, 5, 40
+    spec = GroupSpec.uniform_groups(G, n)
+    X = rng.standard_normal((N, G * n))
+    beta = np.zeros(G * n)
+    beta[:4] = 2.0                           # group 0 carries the signal
+    y = X @ beta + 0.05 * rng.standard_normal(N)
+    st = stability_selection(X, y, spec, 1.0, n_subsamples=8, n_lambdas=6,
+                             tol=1e-7, batch_size=4, seed=1)
+    assert st.selection_probs.shape == (6, G * n)
+    assert np.all(st.selection_probs >= 0) and np.all(
+        st.selection_probs <= 1)
+    assert st.max_probs[:4].min() >= 0.9     # true features always selected
+    assert st.max_probs[n:].mean() < 0.5     # null features mostly not
+
+
+# ---------------------------------------------------------------------------
+# API facade
+# ---------------------------------------------------------------------------
+
+def test_api_sglcv_fit_predict_score():
+    from repro.api import SGLCV, SGLRegressor
+    rng = np.random.default_rng(0)
+    N, G, n = 60, 20, 5
+    p = G * n
+    X = rng.standard_normal((N, p))
+    b = np.zeros(p)
+    b[:5] = [1.5, -2.0, 1.0, 0.5, -1.0]
+    y = X @ b + 3.0 + 0.05 * rng.standard_normal(N)
+    est = SGLCV(alpha=1.0, groups=[n] * G, n_folds=4, n_lambdas=10,
+                tol=1e-10, max_iter=50_000).fit(X, y)
+    assert est.score(X, y) > 0.99
+    assert abs(est.intercept_ - 3.0) < 0.5
+    assert est.mse_path_.shape == (4, 10)
+    assert est.lambda_ in est.lambdas_
+    # refit at the selected lambda reproduces the one-shot estimator
+    ref = SGLRegressor(lam=est.lambda_, alpha=1.0, groups=[n] * G,
+                       tol=1e-10).fit(X, y)
+    np.testing.assert_allclose(ref.coef_, est.coef_, atol=1e-6)
+    # 1-SE selection never picks a smaller lambda than the minimizer
+    est1 = SGLCV(alpha=1.0, groups=[n] * G, n_folds=4, n_lambdas=10,
+                 selection="1se", tol=1e-10, max_iter=50_000).fit(X, y)
+    assert est1.lambda_ >= est.lambda_
+
+
+def test_api_nn_lasso_cv():
+    from repro.api import NNLassoCV
+    rng = np.random.default_rng(5)
+    N, p = 50, 120
+    X = rng.standard_normal((N, p))
+    b = np.zeros(p)
+    b[:5] = np.abs(rng.standard_normal(5)) + 0.5
+    y = X @ b + 0.05 * rng.standard_normal(N)
+    est = NNLassoCV(n_folds=4, n_lambdas=10, tol=1e-10,
+                    max_iter=50_000).fit(X, y)
+    assert est.score(X, y) > 0.98
+    assert est.coef_.min() >= 0.0
+
+
+def test_api_group_spec_validation():
+    from repro.api import SGLRegressor
+    X = np.zeros((10, 6))
+    with pytest.raises(ValueError):
+        SGLRegressor(groups=[4, 4]).fit(X, np.zeros(10))   # sums to 8 != 6
+
+
+# ---------------------------------------------------------------------------
+# Satellite regressions
+# ---------------------------------------------------------------------------
+
+def test_bucketed_subset_accepts_exact_fit():
+    """G_kept == g_bucket with zero padding columns is a legal exact fit —
+    it must NOT raise (previously forced a spurious next-power-of-two
+    recompile)."""
+    spec = GroupSpec.uniform_groups(4, 3)          # p = 12
+    keep = np.ones(12, dtype=bool)
+    sub, col_idx = spec.bucketed_subset(keep, 12, 4)
+    assert sub.num_groups == 4 and sub.num_features == 12
+    np.testing.assert_array_equal(col_idx, np.arange(12))
+    np.testing.assert_array_equal(np.asarray(sub.sizes), [3, 3, 3, 3])
+    np.testing.assert_array_equal(np.asarray(sub.group_ids),
+                                  np.asarray(spec.group_ids))
+    np.testing.assert_allclose(np.asarray(sub.weights),
+                               np.asarray(spec.weights))
+    # partial exact fit: 2 groups fully kept into a 2-slot bucket
+    keep = np.zeros(12, dtype=bool)
+    keep[0:3] = keep[6:9] = True
+    sub, col_idx = spec.bucketed_subset(keep, 6, 2)
+    assert sub.num_groups == 2
+    np.testing.assert_array_equal(np.asarray(sub.sizes), [3, 3])
+    # a non-empty garbage bin still requires its slot
+    with pytest.raises(ValueError):
+        spec.bucketed_subset(keep, 8, 2)           # pad=2 but no bin slot
+    with pytest.raises(ValueError):
+        spec.bucketed_subset(np.ones(12, bool), 16, 4)
+
+
+def test_bucketed_subset_exact_fit_solves_identically():
+    """Solving on the exact-fit bucket equals solving on the unreduced
+    problem (the garbage bin is genuinely optional)."""
+    from repro.core import solve_sgl, spectral_norm
+    X, y, spec = _sgl_problem(seed=8, N=30, G=4, n=3)
+    keep = np.ones(spec.num_features, dtype=bool)
+    sub, col_idx = spec.bucketed_subset(keep, spec.num_features,
+                                        spec.num_groups)
+    Xj, yj = jnp.asarray(X), jnp.asarray(y)
+    L = spectral_norm(Xj) ** 2
+    a = solve_sgl(Xj, yj, spec, 0.5, 1.0, L, tol=1e-12, max_iter=100_000)
+    b = solve_sgl(Xj[:, col_idx], yj, sub, 0.5, 1.0, L, tol=1e-12,
+                  max_iter=100_000)
+    np.testing.assert_allclose(a.beta, b.beta, atol=1e-9)
+
+
+def test_dual_ball_zero_normal_and_lam_bar_consistency():
+    """Shared helper: radius exactly 0 at lam == lam_bar, no NaN for a zero
+    normal, grid and scalar paths agree — float32 and float64."""
+    rng = np.random.default_rng(0)
+    for dtype in (jnp.float64, jnp.float32):
+        y = jnp.asarray(rng.standard_normal(20), dtype)
+        theta = y / 2.0
+        n_vec = jnp.asarray(rng.standard_normal(20), dtype)
+        lams = jnp.asarray([2.0, 1.0, 0.5], dtype)
+        # zero normal: v_perp == v, everything finite
+        ball0 = estimate_dual_ball(y, 1.0, 2.0, theta, jnp.zeros(20, dtype))
+        assert bool(jnp.isfinite(ball0.radius))
+        v = y / 1.0 - theta
+        np.testing.assert_allclose(np.asarray(ball0.center),
+                                   np.asarray(theta + 0.5 * v), rtol=1e-6)
+        centers, radii = grid_ball_geometry(y, lams, theta,
+                                            jnp.zeros(20, dtype))
+        assert np.isfinite(np.asarray(radii)).all()
+        # underflowing (but nonzero) normal must behave like zero, not blow up
+        tiny = jnp.full(20, 1e-25, dtype)
+        ball_t = estimate_dual_ball(y, 1.0, 2.0, theta, tiny)
+        _, radii_t = grid_ball_geometry(y, lams, theta, tiny)
+        assert bool(jnp.isfinite(ball_t.radius))
+        assert np.isfinite(np.asarray(radii_t)).all()
+        # lam == lam_bar: radius exactly zero on BOTH paths
+        ball_eq = estimate_dual_ball(y, 2.0, 2.0, theta, n_vec)
+        assert float(ball_eq.radius) == 0.0
+        centers, radii = grid_ball_geometry(y, jnp.asarray([2.0], dtype),
+                                            theta, n_vec)
+        assert float(radii[0]) == 0.0
+        np.testing.assert_allclose(np.asarray(centers[0]),
+                                   np.asarray(theta), rtol=1e-6)
+        # scalar and grid paths agree at a generic lambda
+        ball = estimate_dual_ball(y, 1.0, 2.0, theta, n_vec)
+        centers, radii = grid_ball_geometry(y, jnp.asarray([1.0], dtype),
+                                            theta, n_vec)
+        np.testing.assert_allclose(np.asarray(radii[0]),
+                                   np.asarray(ball.radius), rtol=1e-5)
+
+
+@pytest.mark.parametrize("seed", rand_cases(8, ("int", 0, 10_000)))
+def test_padded_segment_roots_float32_keeps_roots(seed):
+    """Property: under float32 the segment tolerance must not drop roots —
+    phi(rho) = ||S_1(z/rho)||^2 is strictly decreasing, so the (unique)
+    root found in f32 must stay close to the f64 root and never collapse
+    to 0 for a nonzero row with attainable target."""
+    rng = np.random.default_rng(seed)
+    G, n_max = 12, 6
+    z64 = np.abs(rng.standard_normal((G, n_max))) * \
+        (10.0 ** rng.integers(-2, 3, (G, 1)))
+    # random invalid tails (padded slots are zero)
+    for g in range(G):
+        z64[g, rng.integers(1, n_max + 1):] = 0.0
+    target = (rng.uniform(0.3, 3.0, G)) ** 2
+    r64 = np.asarray(_padded_segment_roots(
+        jnp.asarray(z64, jnp.float64), jnp.asarray(target, jnp.float64)))
+    r32 = np.asarray(_padded_segment_roots(
+        jnp.asarray(z64, jnp.float32), jnp.asarray(target, jnp.float32)))
+    nz = z64.max(axis=1) > 0
+    assert (r64[nz] > 0).all()               # f64 finds every root
+    assert (r32[nz] > 0).all()               # f32 must not drop any
+    np.testing.assert_allclose(r32[nz], r64[nz], rtol=2e-4)
+    # verify the f64 roots actually solve the equation
+    for g in np.nonzero(nz)[0]:
+        phi = np.sum(np.maximum(z64[g] / r64[g] - 1.0, 0.0) ** 2)
+        np.testing.assert_allclose(phi, target[g], rtol=1e-6)
+
+
+def test_group_shrink_roots_float32_matches_float64():
+    """End-to-end: lambda_max machinery keeps f32/f64 agreement (the
+    1e-9-literal regression surfaced as dropped roots => rho == 0)."""
+    rng = np.random.default_rng(0)
+    spec = GroupSpec.from_sizes([3, 5, 2, 7, 4])
+    c = rng.standard_normal(21) * 10.0
+    r64 = np.asarray(group_shrink_roots(spec, jnp.asarray(c, jnp.float64),
+                                        1.0))
+    r32 = np.asarray(group_shrink_roots(spec, jnp.asarray(c, jnp.float32),
+                                        1.0))
+    assert (r32 > 0).all()
+    np.testing.assert_allclose(r32, r64, rtol=1e-4)
