@@ -2,8 +2,9 @@
 
 Usage::
 
-    python -m benchmarks.run [SUITE_FILTER] [--engine {legacy,batched}]
-                             [--folds K] [--smoke]
+    python -m benchmarks.run [SUITE_FILTER] [--suite NAME]
+                             [--engine {legacy,batched}] [--folds K]
+                             [--smoke]
 
 Prints ``name,us_per_call,derived`` CSV.  ``derived`` is the headline metric
 of the corresponding table (speedup x, rejection ratio, roofline fraction).
@@ -20,8 +21,14 @@ each other and reports the engine's host-sync / compilation counters.
 benchmarks the fold-batched ``sgl_cv`` (one stacked screening GEMM per
 segment) against K sequential per-fold path solves.
 
-``--smoke`` runs only the fast engine + cv comparison suites at reduced
-dimensions — the CI perf-regression gate.
+``--suite NAME`` filters to one suite by name (equivalent to the
+positional SUITE_FILTER).  The ``session`` suite benchmarks the
+Problem/Plan/Session warm two-stage refinement (``session.refine``: coarse
+CV, then a fine grid seeded from the coarse certified duals on the same
+session) against a cold fine-grid CV — the model-selection serving regime.
+
+``--smoke`` runs only the fast engine + cv + session comparison suites at
+reduced dimensions — the CI perf-regression gate.
 
 REPRO_BENCH_FULL=1 switches to the paper's full dimensions.
 """
@@ -109,17 +116,21 @@ def main() -> None:
     argv = sys.argv[1:]
     engine = _pop_flag(argv, "--engine", "legacy")
     folds = int(_pop_flag(argv, "--folds", "5"))
+    suite_flag = _pop_flag(argv, "--suite", None)
     smoke = _pop_flag(argv, "--smoke", False, has_value=False)
     if engine not in ("legacy", "batched"):
         raise SystemExit(f"unknown --engine {engine!r}")
     if smoke:
-        # CI perf-regression gate: fast engine + fold-batched CV comparison
+        # CI perf-regression gate: fast engine + fold-batched CV + session
+        # refinement comparisons
         paper_tables.SGL_DIMS = dict(N=120, G=60, n=5)
         paper_tables.N_LAMBDA = 16
         suites = [
             ("engine", paper_tables.engine_bench),
             ("cv", functools.partial(paper_tables.cv_bench, engine="batched",
                                      n_folds=min(folds, 3))),
+            ("session", functools.partial(paper_tables.session_bench,
+                                          n_folds=min(folds, 3))),
         ]  # smoke always baselines against the batched engine (CI gate)
     else:
         # ordered so the claim-critical rejection figures and the roofline
@@ -139,8 +150,11 @@ def main() -> None:
             ("engine", paper_tables.engine_bench),
             ("cv", functools.partial(paper_tables.cv_bench, engine=engine,
                                      n_folds=folds)),
+            ("session", functools.partial(paper_tables.session_bench,
+                                          n_folds=folds)),
         ]
-    only = argv[0] if argv else None
+    only = suite_flag if suite_flag is not None else (argv[0] if argv
+                                                     else None)
     print("name,us_per_call,derived", flush=True)
     failures = 0
     for name, fn in suites:

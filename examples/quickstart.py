@@ -2,16 +2,18 @@
 
 Solves a 40-point lambda path on a synthetic problem three ways — the
 device-resident batched engine (grid screening + speculative on-device
-sweeps + in-scan certification), the legacy per-lambda driver, and the
-unscreened baseline — and prints per-lambda rejection, the speedups, and
-the engine's host-interaction counters.  This is the paper's headline
-experiment (Section 6.1) in ~50 lines of user code.
+sweeps + in-scan certification) through the Problem/Plan/Session API, the
+legacy per-lambda driver, and the unscreened baseline — and prints
+per-lambda rejection, the speedups, and the engine's host-interaction
+counters.  This is the paper's headline experiment (Section 6.1) in ~50
+lines of user code.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import GroupSpec, sgl_path, lambda_max_sgl
+from repro.core import (GroupSpec, Plan, Problem, SGLSession, sgl_path,
+                        lambda_max_sgl)
 
 # --- synthetic problem (paper Section 6.1.1 protocol, scaled for CPU) -----
 rng = np.random.default_rng(0)
@@ -28,8 +30,9 @@ spec = GroupSpec.uniform_groups(G, n)
 alpha = 1.0                                               # tan(45 deg)
 kw = dict(n_lambdas=40, tol=1e-6, safety=1e-6, max_iter=6000, check_every=50)
 
-# --- batched engine vs legacy driver vs unscreened baseline ---------------
-res = sgl_path(X, y, spec, alpha, engine="batched", **kw)
+# --- batched engine (session API) vs legacy driver vs baseline ------------
+session = SGLSession(Problem.sgl(X, y, spec))
+res = session.path(Plan(alpha=alpha, **kw))
 legacy = sgl_path(X, y, spec, alpha, **kw)
 base = sgl_path(X, y, spec, alpha, screen="none", **kw)
 

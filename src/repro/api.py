@@ -1,4 +1,4 @@
-"""sklearn-style estimator facade over the TLFre/DPC path machinery.
+"""sklearn-style estimator facade over the Problem/Plan/Session API.
 
 The AFQ-Insight-shaped workload: fit/predict/score estimators whose ``fit``
 runs K-fold model selection over a lambda grid and refits at the selected
@@ -11,35 +11,30 @@ on duck typing.
   SGLCV          fold-batched K-fold CV over the grid, then refit
   NNLassoCV      the nonnegative-Lasso analogue (DPC screening)
 
-Grids are anchored at the full-data lambda_max (``lambda_max_sgl`` /
+Each CV estimator builds a ``core.Problem`` + ``core.Plan`` and runs them
+through a ``core.SGLSession`` (exposed after ``fit`` as ``session_``, so
+``est.session_.refine(...)`` continues warm from the CV state).  Grids are
+anchored at the full-data lambda_max (``lambda_max_sgl`` /
 ``lambda_max_nn``); each CV fold additionally gets exact zeros above its own
-per-fold lambda_max inside the fold-batched engine.  With ``fit_intercept``
-the data is centered once on the full sample before CV (cheap and standard;
-for leakage-free per-fold centering, center per fold and pass explicit
-``folds``).
+per-fold lambda_max inside the fold-batched engine.
+
+Centering: with ``fit_intercept`` the data is centered once on the full
+sample before CV (``center='global'``, cheap and standard, but the held-out
+rows leak into the fold means).  ``center='per-fold'`` instead scores
+leakage-free models — each fold is centered by its own train-row means,
+threaded through the masked-row embedding as rank-one corrections (the
+final refit intercept still comes from the full sample).
 """
 from __future__ import annotations
 
 import numpy as np
 import jax.numpy as jnp
 
-from .core import (GroupSpec, lambda_max_nn, lambda_max_sgl, nn_lasso_cv,
-                   sgl_cv, solve_nn_lasso, solve_sgl, spectral_norm)
+from .core import (Plan, Problem, SGLSession, as_group_spec, solve_nn_lasso,
+                   solve_sgl, spectral_norm)
 
-
-def _as_spec(groups, p: int) -> GroupSpec:
-    """Accept a GroupSpec, a list of group sizes, or None (singletons)."""
-    if isinstance(groups, GroupSpec):
-        if groups.num_features != p:
-            raise ValueError(f"GroupSpec covers {groups.num_features} "
-                             f"features, X has {p}")
-        return groups
-    if groups is None:
-        return GroupSpec.from_sizes([1] * p)
-    spec = GroupSpec.from_sizes(groups)
-    if spec.num_features != p:
-        raise ValueError(f"group sizes sum to {spec.num_features}, X has {p}")
-    return spec
+# Backwards-compatible alias (pre-Problem/Plan name of the helper)
+_as_spec = as_group_spec
 
 
 def _center(X, y, fit_intercept: bool):
@@ -91,7 +86,7 @@ class SGLRegressor(_LinearBase):
 
     def fit(self, X, y):
         Xc, yc, x_mean, y_mean = _center(X, y, self.fit_intercept)
-        spec = _as_spec(self.groups, Xc.shape[1])
+        spec = as_group_spec(self.groups, Xc.shape[1])
         L = float(spectral_norm(jnp.asarray(Xc))) ** 2
         res = solve_sgl(jnp.asarray(Xc), jnp.asarray(yc), spec,
                         float(self.lam), float(self.alpha), L,
@@ -107,20 +102,24 @@ class SGLRegressor(_LinearBase):
 class SGLCV(_LinearBase):
     """Fold-batched K-fold cross-validated Sparse-Group Lasso.
 
-    ``fit`` runs ``core.cv.sgl_cv`` (one stacked screening GEMM per
+    ``fit`` runs ``SGLSession.cv`` (one stacked screening GEMM per
     segment, vmapped / mesh-sharded fold sweeps), selects lambda by mean
     held-out MSE (``selection='min'``) or the 1-SE rule
     (``selection='1se'``), and refits on the full sample at the selected
-    lambda.  Exposes ``lambdas_``, ``mse_path_``, ``lambda_``,
-    ``cv_result_``.
+    lambda.  ``center='per-fold'`` scores leakage-free per-fold-centered
+    models (see the module docstring).  Exposes ``lambdas_``,
+    ``mse_path_``, ``lambda_``, ``cv_result_``, and the live ``session_``
+    (e.g. ``est.session_.refine(factor=10)`` for warm two-stage grid
+    refinement).
     """
 
     def __init__(self, alpha: float = 1.0, groups=None, n_folds: int = 5,
                  n_lambdas: int = 100, min_ratio: float = 0.01,
                  lambdas=None, screen: str = "tlfre",
                  selection: str = "min", fit_intercept: bool = True,
-                 tol: float = 1e-9, max_iter: int = 20000,
-                 safety: float = 0.0, seed: int = 0, mesh=None):
+                 center: str = "global", tol: float = 1e-9,
+                 max_iter: int = 20000, safety: float = 0.0, seed: int = 0,
+                 mesh=None):
         self.alpha = alpha
         self.groups = groups
         self.n_folds = n_folds
@@ -130,6 +129,7 @@ class SGLCV(_LinearBase):
         self.screen = screen
         self.selection = selection
         self.fit_intercept = fit_intercept
+        self.center = center
         self.tol = tol
         self.max_iter = max_iter
         self.safety = safety
@@ -137,15 +137,17 @@ class SGLCV(_LinearBase):
         self.mesh = mesh
 
     def fit(self, X, y):
-        if self.selection not in ("min", "1se"):
-            raise ValueError(f"unknown selection rule {self.selection!r}")
         Xc, yc, x_mean, y_mean = _center(X, y, self.fit_intercept)
-        spec = _as_spec(self.groups, Xc.shape[1])
-        cv = sgl_cv(Xc, yc, spec, float(self.alpha), n_folds=self.n_folds,
-                    lambdas=self.lambdas, n_lambdas=self.n_lambdas,
-                    min_ratio=self.min_ratio, screen=self.screen,
-                    tol=self.tol, max_iter=self.max_iter,
-                    safety=self.safety, seed=self.seed, mesh=self.mesh)
+        spec = as_group_spec(self.groups, Xc.shape[1])
+        plan = Plan(alpha=float(self.alpha), lambdas=self.lambdas,
+                    n_lambdas=self.n_lambdas, min_ratio=self.min_ratio,
+                    screen=self.screen, tol=self.tol,
+                    max_iter=self.max_iter, safety=self.safety,
+                    n_folds=self.n_folds, seed=self.seed,
+                    center=self.center, selection=self.selection,
+                    mesh=self.mesh)
+        session = SGLSession(Problem.sgl(Xc, yc, spec), plan)
+        cv = session.cv()
         idx = cv.best_index if self.selection == "min" else cv.index_1se
         lam = float(cv.lambdas[idx])
         L = float(spectral_norm(jnp.asarray(Xc))) ** 2
@@ -153,6 +155,7 @@ class SGLCV(_LinearBase):
                         float(self.alpha), L, max_iter=self.max_iter,
                         tol=self.tol)
         self.spec_ = spec
+        self.session_ = session
         self.cv_result_ = cv
         self.lambdas_ = cv.lambdas
         self.mse_path_ = cv.mse_path
@@ -186,20 +189,22 @@ class NNLassoCV(_LinearBase):
         # no fit_intercept: centering X breaks the nonnegativity geometry
 
     def fit(self, X, y):
-        if self.selection not in ("min", "1se"):
-            raise ValueError(f"unknown selection rule {self.selection!r}")
         X = np.asarray(X, dtype=float)
         y = np.asarray(y, dtype=float)
-        cv = nn_lasso_cv(X, y, n_folds=self.n_folds, lambdas=self.lambdas,
-                         n_lambdas=self.n_lambdas, min_ratio=self.min_ratio,
-                         screen=self.screen, tol=self.tol,
-                         max_iter=self.max_iter, safety=self.safety,
-                         seed=self.seed, mesh=self.mesh)
+        plan = Plan(lambdas=self.lambdas, n_lambdas=self.n_lambdas,
+                    min_ratio=self.min_ratio, screen=self.screen,
+                    tol=self.tol, max_iter=self.max_iter,
+                    safety=self.safety, n_folds=self.n_folds,
+                    seed=self.seed, selection=self.selection,
+                    mesh=self.mesh)
+        session = SGLSession(Problem.nn_lasso(X, y), plan)
+        cv = session.cv()
         idx = cv.best_index if self.selection == "min" else cv.index_1se
         lam = float(cv.lambdas[idx])
         L = float(spectral_norm(jnp.asarray(X))) ** 2
         res = solve_nn_lasso(jnp.asarray(X), jnp.asarray(y), lam, L,
                              max_iter=self.max_iter, tol=self.tol)
+        self.session_ = session
         self.cv_result_ = cv
         self.lambdas_ = cv.lambdas
         self.mse_path_ = cv.mse_path

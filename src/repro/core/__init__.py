@@ -1,12 +1,19 @@
 """TLFre / DPC — the paper's contribution as a composable JAX library.
 
-Public surface:
+Public surface (declarative API — preferred):
+  Problem, Plan        immutable problem spec + declarative run config
+  SGLSession           persistent device-resident session:
+                       .path / .cv / .refine / .stability
+
+Building blocks:
   GroupSpec            group bookkeeping (ragged + padded-dense views)
   shrink, proj_binf    the decomposition operators (Lemma 3 / Remark 2)
   lambda_max_sgl, lambda1_max, lambda2_max, lambda_max_nn
   estimate_dual_ball, gap_safe_ball
   tlfre_screen, dpc_screen
   solve_sgl, solve_nn_lasso
+
+Legacy entry points (thin shims over Problem/Plan/Session, bit-identical):
   sgl_path, nn_lasso_path
   sgl_cv, nn_lasso_cv, stability_selection   (fold-batched model selection)
 """
@@ -33,8 +40,10 @@ from .path import (PathResult, sgl_path, nn_lasso_path, default_lambda_grid,
                    rejection_ratios_sgl)
 from .path_engine import (EngineStats, sgl_path_batched,
                           nn_lasso_path_batched)
-from .cv import (CVResult, StabilityResult, kfold_indices, nn_lasso_cv,
-                 sgl_cv, sgl_fold_paths, nn_fold_paths, stability_selection,
-                 subsample_masks)
+from .cv import (CVResult, FoldState, StabilityResult, kfold_indices,
+                 nn_lasso_cv, sgl_cv, sgl_fold_paths, nn_fold_paths,
+                 stability_selection, subsample_masks)
+from .problem import Plan, Problem, as_group_spec
+from .session import RefineResult, SGLSession
 
 __all__ = [n for n in dir() if not n.startswith("_")]

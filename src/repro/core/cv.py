@@ -56,7 +56,7 @@ from .fenchel import shrink
 from .groups import GroupSpec, group_norms
 from .lambda_max import lambda_max_sgl
 from .linalg import group_spectral_norms, spectral_norm
-from .path import _bucket, default_lambda_grid
+from .path import _bucket
 from .path_engine import (EngineStats, _expand_set, _feature_bucket,
                           _pow2_len, margin_fill_nn, margin_fill_sgl,
                           sweep_nn_core, sweep_sgl_core)
@@ -110,6 +110,20 @@ def _masks_from_folds(folds, n_samples: int) -> np.ndarray:
     return masks
 
 
+def per_fold_centering(X_np, y_np, masks):
+    """Leakage-free per-fold centering statistics on the masked embedding.
+
+    Returns ``(mus (K, p), y_means (K,), y_rows (K, N))``: each fold's
+    train-row column means, response mean, and the response centered by its
+    own fold mean.  One definition shared by ``SGLSession.cv`` and the
+    serving front-end so the centering algebra cannot drift between them.
+    """
+    n_train = masks.sum(axis=1)
+    mus = (masks @ X_np) / n_train[:, None]
+    y_means = (masks @ y_np) / n_train
+    return mus, y_means, y_np[None, :] - y_means[:, None]
+
+
 @dataclasses.dataclass
 class CVResult:
     lambdas: np.ndarray          # (J,) common grid (shared across folds)
@@ -128,10 +142,24 @@ class CVResult:
     screen_time: float
     solve_time: float
     setup_time: float
+    fold_iters: np.ndarray = None  # (K, J) FISTA iterations per fold/lambda
 
     @property
     def total_time(self):
         return self.screen_time + self.solve_time + self.setup_time
+
+
+@dataclasses.dataclass
+class FoldState:
+    """Exact per-fold warm state at a reference lambda (one row per fold).
+
+    This is the carry the fold-batched engine threads between segments,
+    exported so ``SGLSession.refine`` can seed a second, finer grid from a
+    coarse run's certified duals instead of refitting from lambda_max."""
+    lam_bar: np.ndarray          # (K,) reference lambda per fold
+    theta: np.ndarray            # (K, N) exact dual at lam_bar, masked
+    c_theta: np.ndarray          # (K, p) X_train^T theta (centered design)
+    beta: np.ndarray             # (K, p) primal optimum at lam_bar
 
 
 @dataclasses.dataclass
@@ -151,22 +179,27 @@ class StabilityResult:
 @functools.partial(jax.jit, static_argnames=("screen",))
 def _screen_folds_sgl(X, Y, spec, alpha, rem, lam_bars, lam_maxs, theta_bars,
                       n_bound, beta_prev, c_prev, masks, col_n_f, gspec_f,
-                      safety, *, screen: str):
+                      safety, mus, *, screen: str):
     """Stacked TLFre (+ optional Gap-Safe) screen for K folds x L lambdas.
 
     All per-fold arrays are masked to their training rows.  Exactly one
     ``(K*L, N) x (N, p)`` GEMM is issued (inside
     ``tlfre_screen_grid_folds``); the Gap-Safe intersection adds only
     GEMV-sized work because each fold's dynamic ball center is fixed
-    across the grid.  Returns feat_keep (K, L, p).
+    across the grid.  ``mus`` (None, or (K, p) per-fold column means)
+    applies the leakage-free centering rank-one corrections without
+    breaking the shared-design GEMM.  Returns feat_keep (K, L, p).
     """
     at_max = (lam_bars >= lam_maxs * (1.0 - 1e-12))[:, None]
     n_vecs = jnp.where(at_max, n_bound, Y / lam_bars[:, None] - theta_bars)
     _, fk, _ = tlfre_screen_grid_folds(X, Y, spec, alpha, rem, theta_bars,
                                        n_vecs, col_n_f, gspec_f,
-                                       safety=safety)
+                                       safety=safety, mus=mus)
     if screen == "gapsafe":
-        resid = Y - masks * (beta_prev @ X.T)
+        fit = beta_prev @ X.T
+        if mus is not None:     # centered fit: (X - 1 mu^T) beta
+            fit = fit - jnp.sum(beta_prev * mus, axis=1)[:, None]
+        resid = Y - masks * fit
         pen = (alpha * jnp.sum(spec.weights[None, :]
                                * jax.vmap(lambda b: group_norms(spec, b))(
                                    beta_prev), axis=1)
@@ -207,21 +240,26 @@ _FOLD_SWEEPS: dict = {}
 
 
 def _fold_sweep(kind: str, mesh, n_folds: int, max_iter: int,
-                check_every: int):
+                check_every: int, centered: bool = False):
     """Jitted fold-batched sweep, cached per (kind, mesh, statics).
 
     vmaps the single-fold segment sweep over a leading fold axis; when a
     multi-device 'fold' mesh is supplied and it divides the fold count, the
-    fold axis is sharded across it with ``shard_map``.
+    fold axis is sharded across it with ``shard_map``.  ``centered`` adds
+    the per-fold column-mean argument (axis 0) for leakage-free per-fold
+    centering.
     """
     core, axes = ((sweep_sgl_core, _SGL_SWEEP_AXES) if kind == "sgl"
                   else (sweep_nn_core, _NN_SWEEP_AXES))
+    if centered:
+        axes = axes + (0,)
     use_shard = (mesh is not None and mesh.size > 1
                  and n_folds % mesh.size == 0)
     # Mesh hashes by devices+axes, so equal meshes from repeated
     # make_fold_mesh calls share one cache entry (id() would re-trace per
     # call and pin dead meshes forever)
-    key = (kind, mesh if use_shard else None, max_iter, check_every)
+    key = (kind, mesh if use_shard else None, max_iter, check_every,
+           centered)
     fn = _FOLD_SWEEPS.get(key)
     if fn is None:
         f = jax.vmap(functools.partial(core, max_iter=max_iter,
@@ -265,13 +303,14 @@ def _build_rem(lambdas, j_pos, act):
 
 
 def _advance_zero_prefix(k, counts, lambdas, j_pos, lam_bar, Theta, Cprev,
-                         Beta, masks_np, y_np, xty_np):
+                         Beta, masks_np, y_rows_np, xty_np):
     """Fully-screened prefix for fold k: beta* = 0 on those grid points and
-    the exact dual optimum is y/lam, so the fold advances without solving."""
+    the exact dual optimum is y/lam, so the fold advances without solving.
+    ``y_rows_np`` is (K, N): per-fold responses on the full row index."""
     adv = int(np.argmax(counts > 0)) if counts.any() else len(counts)
     lam_new = float(lambdas[j_pos[k] + adv - 1])
     lam_bar[k] = lam_new
-    Theta[k] = masks_np[k] * y_np / lam_new
+    Theta[k] = masks_np[k] * y_rows_np[k] / lam_new
     Cprev[k] = xty_np[k] / lam_new
     Beta[k] = 0.0
     j_pos[k] += adv
@@ -325,39 +364,70 @@ def sgl_fold_paths(X, y, spec: GroupSpec, alpha, masks, lambdas, *,
                    safety: float = 0.0, specnorm_method: str = "power",
                    check_every: int = 10, min_bucket: int = 64,
                    min_group_bucket: int = 16, margin: float = 0.125,
-                   chunk_init: int = 8, mesh=None):
+                   chunk_init: int = 8, mesh=None, mus=None, init=None,
+                   compile_keys=None):
     """Solve the SAME lambda grid on K masked row-subsets of (X, y).
 
     ``masks``: (K, N) 0/1 — 1 marks rows in subset k's training problem.
-    Returns ``(betas (K, J, p), kept (K, J), iters (K, J), stats,
-    (screen_time, solve_time, setup_time))``.  Grid points at/above a
-    fold's own lambda_max get exact zeros.
+    ``y`` is (N,) — one response shared by every subset — or (K, N) —
+    per-fold responses on the full row index (stacked multi-job serving,
+    per-fold-centered CV).  Returns ``(betas (K, J, p), kept (K, J),
+    iters (K, J), stats, (screen_time, solve_time, setup_time))``.  Grid
+    points at/above a fold's own lambda_max get exact zeros.
+
+    ``mus`` (optional, (K, p)): per-fold train-row column means for
+    leakage-free centering.  Fold k then solves on the centered design
+    ``M_k (X - 1 mu_k^T)`` — threaded through the shared-X algebra as
+    rank-one corrections (xty, column/spectral norms, screening GEMM,
+    certification GEMV), so the stacked screens and the vmapped sweep
+    survive centering with the ONE shared (N, p) design.  The caller
+    supplies ``y`` rows already centered by the per-fold train means.
+
+    ``init`` (optional ``FoldState``): exact warm state at a common
+    reference lambda (``SGLSession.refine``) — the engine starts its
+    screening/warm-start chain there instead of at each fold's lambda_max.
+    ``compile_keys`` (optional set): persistent sweep-shape cache shared
+    across calls, as in ``sgl_path_batched``.
     """
     if screen not in ("tlfre", "gapsafe", "none"):
         raise ValueError(f"unknown screen mode {screen!r}")
     X = jnp.asarray(X)
-    y = jnp.asarray(y)
     N, p = X.shape
     G = spec.num_groups
     masks_np = np.asarray(masks, dtype=float)
     K = masks_np.shape[0]
+    y_rows_np = np.asarray(y, dtype=float)
+    if y_rows_np.ndim == 1:
+        y_rows_np = np.broadcast_to(y_rows_np, (K, N))
     lambdas = np.asarray(lambdas, dtype=float)
     J = len(lambdas)
+    centered = mus is not None
 
     # ---- per-fold geometry, batched into a handful of GEMMs ---------------
     t0 = time.perf_counter()
     masks_d = jnp.asarray(masks_np, X.dtype)
-    Y = masks_d * y[None, :]                                  # (K, N)
-    xty_f = Y @ X                                             # (K, p)
+    Y = masks_d * jnp.asarray(y_rows_np, X.dtype)             # (K, N)
+    col2_f = masks_d @ (X * X)                                # (K, p)
+    if centered:
+        mus_d = jnp.asarray(mus, X.dtype)
+        # centered correlations / norms via rank-one corrections:
+        # (X - 1 mu^T)^T v = X^T v - mu (1^T v);  sum m (x-mu)^2 = col2 - n mu^2
+        xty_f = Y @ X - jnp.sum(Y, axis=1)[:, None] * mus_d
+        n_train = jnp.sum(masks_d, axis=1)
+        col2_f = jnp.maximum(col2_f - n_train[:, None] * mus_d ** 2, 0.0)
+    else:
+        mus_d = None
+        xty_f = Y @ X                                         # (K, p)
     lam_max_f, g_star_f = jax.vmap(
         lambda c: lambda_max_sgl(spec, c, alpha))(xty_f)
-    col2_f = masks_d @ (X * X)                                # (K, p)
     col_n_f = jnp.sqrt(col2_f)
     if specnorm_method == "power":
         # one fold at a time: peak memory stays (N, p), not (K, N, p) —
         # group_spectral_norms is jitted once and reused across folds
         gspec_f = jnp.stack([
-            group_spectral_norms(masks_d[k][:, None] * X, spec)
+            group_spectral_norms(
+                masks_d[k][:, None] * (X - mus_d[k][None, :] if centered
+                                       else X), spec)
             for k in range(K)])
     else:
         gspec_f = jnp.sqrt(jax.vmap(lambda c2: jax.ops.segment_sum(
@@ -368,31 +438,39 @@ def sgl_fold_paths(X, y, spec: GroupSpec, alpha, masks, lambdas, *,
                               X.dtype)
     W = shrink(xty_f / lam_max_div[:, None])
     w_star = jnp.where(spec.group_ids[None, :] == g_star_f[:, None], W, 0.0)
-    n_bound = masks_d * (w_star @ X.T)                        # (K, N)
+    n_bound = w_star @ X.T                                    # (K, N)
+    if centered:
+        n_bound = n_bound - jnp.sum(w_star * mus_d, axis=1)[:, None]
+    n_bound = masks_d * n_bound
     jax.block_until_ready((col_n_f, gspec_f, n_bound))
     setup_time = time.perf_counter() - t0
 
     # ---- host-side per-fold state -----------------------------------------
-    y_np = np.asarray(y)
     X_np = np.asarray(X)
+    mus_np = np.asarray(mus, dtype=float) if centered else None
     xty_np = np.asarray(xty_f)
     gid = np.asarray(spec.group_ids)
     sizes_np = np.asarray(spec.sizes)
     weights_np = np.asarray(spec.weights)
     lam_max_safe = np.where(lam_max_np > 0, lam_max_np, 1.0)
-    Theta = masks_np * y_np[None, :] / lam_max_safe[:, None]  # (K, N)
+    Theta = masks_np * y_rows_np / lam_max_safe[:, None]      # (K, N)
     Cprev = xty_np / lam_max_safe[:, None]                    # (K, p)
     lam_bar = lam_max_np.copy()
     Beta = np.zeros((K, p))
+    if init is not None:
+        lam_bar = np.asarray(init.lam_bar, dtype=float).copy()
+        Theta = np.asarray(init.theta, dtype=float).copy()
+        Cprev = np.asarray(init.c_theta, dtype=float).copy()
+        Beta = np.asarray(init.beta, dtype=float).copy()
     betas_out = np.zeros((K, J, p))
     iters_out = np.zeros((K, J), dtype=np.int64)
     kept_out = np.zeros((K, J), dtype=np.int64)
-    gap_scales = np.maximum(0.5 * np.sum((masks_np * y_np) ** 2, axis=1),
-                            1e-30)
+    gap_scales = np.maximum(0.5 * np.sum((masks_np * y_rows_np) ** 2,
+                                         axis=1), 1e-30)
     stats = EngineStats()
     screen_time = 0.0
     solve_time = 0.0
-    seen_keys: set = set()
+    seen_keys = compile_keys if compile_keys is not None else set()
     spec_m = max(int(chunk_init), 1)
 
     j_pos = np.zeros(K, dtype=int)
@@ -417,7 +495,8 @@ def sgl_fold_paths(X, y, spec: GroupSpec, alpha, masks, lambdas, *,
                 jnp.asarray(Theta[act], X.dtype), n_bound[a_idx],
                 jnp.asarray(Beta[act], X.dtype),
                 jnp.asarray(Cprev[act], X.dtype), masks_d[a_idx],
-                col_n_f[a_idx], gspec_f[a_idx], safety, screen=screen)
+                col_n_f[a_idx], gspec_f[a_idx], safety,
+                mus_d[a_idx] if centered else None, screen=screen)
             fk_np = np.asarray(fk)                       # one host sync
             stats.n_screens += 1                         # ONE GEMM issued
         screen_time += time.perf_counter() - ts
@@ -429,8 +508,8 @@ def sgl_fold_paths(X, y, spec: GroupSpec, alpha, masks, lambdas, *,
             counts = fkk.sum(axis=1)
             if counts[0] == 0:
                 _advance_zero_prefix(k, counts, lambdas, j_pos, lam_bar,
-                                     Theta, Cprev, Beta, masks_np, y_np,
-                                     xty_np)
+                                     Theta, Cprev, Beta, masks_np,
+                                     y_rows_np, xty_np)
                 continue
             sweep.append((i, k, fkk))
         if not sweep:
@@ -459,8 +538,10 @@ def sgl_fold_paths(X, y, spec: GroupSpec, alpha, masks, lambdas, *,
         col_idxs = []
         for t, ((i, k, _), S) in enumerate(zip(sweep, S_list)):
             sub_spec, col_idx = spec.bucketed_subset(S, p_b, g_b)
-            X_subs[t, :, :len(col_idx)] = (X_np[:, col_idx]
-                                           * masks_np[k][:, None])
+            cols = X_np[:, col_idx]
+            if centered:
+                cols = cols - mus_np[k][col_idx][None, :]
+            X_subs[t, :, :len(col_idx)] = cols * masks_np[k][:, None]
             beta0s[t, :len(col_idx)] = Beta[k][col_idx]
             chunk = lambdas[j_pos[k]:j_pos[k] + m_ks[t]]
             lam_pads[t, :m_ks[t]] = chunk
@@ -470,18 +551,25 @@ def sgl_fold_paths(X, y, spec: GroupSpec, alpha, masks, lambdas, *,
             col_idxs.append(col_idx)
         X_subs_d = jnp.asarray(X_subs)
         L_subs = _spectral_norms_f(X_subs_d)
-        key = (Ka, p_b, g_b, spec.max_size, len2)
+        # cover every jit-cache-discriminating dim: persistent compile_keys
+        # sets span calls (and, in serving, problems of different N/dtype)
+        key = ("sgl-folds", Ka, N, p, G, str(X.dtype), max_iter,
+               check_every, mesh, p_b, g_b, spec.max_size, len2, centered)
         if key not in seen_keys:
             seen_keys.add(key)
             stats.n_compilations += 1
         k_rows = jnp.asarray(np.asarray([k for _, k, _ in sweep]))
-        runner = _fold_sweep("sgl", mesh, Ka, max_iter, check_every)
-        betas_b, thetas_b, cthetas_b, good_b, iters_b = runner(
+        runner = _fold_sweep("sgl", mesh, Ka, max_iter, check_every,
+                             centered)
+        sweep_args = [
             X, X_subs_d, Y[k_rows], spec, _stack_specs(sub_specs), alpha,
             L_subs, jnp.asarray(lam_pads, X.dtype), jnp.asarray(valids),
             jnp.asarray(beta0s), tol, jnp.asarray(gap_scales[[k for _, k, _
                                                               in sweep]],
-                                                  X.dtype))
+                                                  X.dtype)]
+        if centered:
+            sweep_args.append(mus_d[k_rows])
+        betas_b, thetas_b, cthetas_b, good_b, iters_b = runner(*sweep_args)
         good_np = np.asarray(good_b)                     # one host sync
         betas_np = np.asarray(betas_b)
         thetas_np = np.asarray(thetas_b)
@@ -509,24 +597,30 @@ def sgl_fold_paths(X, y, spec: GroupSpec, alpha, masks, lambdas, *,
 def nn_fold_paths(X, y, masks, lambdas, *, screen: str = "dpc", tol=1e-9,
                   max_iter: int = 20000, safety: float = 0.0,
                   check_every: int = 10, min_bucket: int = 64,
-                  margin: float = 0.125, chunk_init: int = 8, mesh=None):
+                  margin: float = 0.125, chunk_init: int = 8, mesh=None,
+                  init=None, compile_keys=None):
     """Nonnegative-Lasso analogue of ``sgl_fold_paths`` (DPC / Gap-Safe).
 
-    A fold whose ``max_i <x_i, y>`` is nonpositive has the all-zero path
-    and simply drops out (the single-path driver raises instead)."""
+    ``y`` is (N,) or per-fold (K, N) rows; ``init`` / ``compile_keys`` as
+    in ``sgl_fold_paths`` (no centering — it breaks the nonnegativity
+    geometry).  A fold whose ``max_i <x_i, y>`` is nonpositive has the
+    all-zero path and simply drops out (the single-path driver raises
+    instead)."""
     if screen not in ("dpc", "gapsafe", "none"):
         raise ValueError(f"unknown screen mode {screen!r}")
     X = jnp.asarray(X)
-    y = jnp.asarray(y)
     N, p = X.shape
     masks_np = np.asarray(masks, dtype=float)
     K = masks_np.shape[0]
+    y_rows_np = np.asarray(y, dtype=float)
+    if y_rows_np.ndim == 1:
+        y_rows_np = np.broadcast_to(y_rows_np, (K, N))
     lambdas = np.asarray(lambdas, dtype=float)
     J = len(lambdas)
 
     t0 = time.perf_counter()
     masks_d = jnp.asarray(masks_np, X.dtype)
-    Y = masks_d * y[None, :]
+    Y = masks_d * jnp.asarray(y_rows_np, X.dtype)
     xty_f = Y @ X
     lam_max_f, i_star_f = jax.vmap(lambda_max_nn)(xty_f)
     col_n_f = jnp.sqrt(masks_d @ (X * X))
@@ -535,23 +629,27 @@ def nn_fold_paths(X, y, masks, lambdas, *, screen: str = "dpc", tol=1e-9,
     jax.block_until_ready((col_n_f, n_bound))
     setup_time = time.perf_counter() - t0
 
-    y_np = np.asarray(y)
     X_np = np.asarray(X)
     xty_np = np.asarray(xty_f)
     lam_max_safe = np.where(lam_max_np > 0, lam_max_np, 1.0)
-    Theta = masks_np * y_np[None, :] / lam_max_safe[:, None]
+    Theta = masks_np * y_rows_np / lam_max_safe[:, None]
     Cprev = xty_np / lam_max_safe[:, None]
     lam_bar = lam_max_safe.copy()
     Beta = np.zeros((K, p))
+    if init is not None:
+        lam_bar = np.asarray(init.lam_bar, dtype=float).copy()
+        Theta = np.asarray(init.theta, dtype=float).copy()
+        Cprev = np.asarray(init.c_theta, dtype=float).copy()
+        Beta = np.asarray(init.beta, dtype=float).copy()
     betas_out = np.zeros((K, J, p))
     iters_out = np.zeros((K, J), dtype=np.int64)
     kept_out = np.zeros((K, J), dtype=np.int64)
-    gap_scales = np.maximum(0.5 * np.sum((masks_np * y_np) ** 2, axis=1),
-                            1e-30)
+    gap_scales = np.maximum(0.5 * np.sum((masks_np * y_rows_np) ** 2,
+                                         axis=1), 1e-30)
     stats = EngineStats()
     screen_time = 0.0
     solve_time = 0.0
-    seen_keys: set = set()
+    seen_keys = compile_keys if compile_keys is not None else set()
     spec_m = max(int(chunk_init), 1)
 
     j_pos = np.zeros(K, dtype=int)
@@ -589,8 +687,8 @@ def nn_fold_paths(X, y, masks, lambdas, *, screen: str = "dpc", tol=1e-9,
             counts = fkk.sum(axis=1)
             if counts[0] == 0:
                 _advance_zero_prefix(k, counts, lambdas, j_pos, lam_bar,
-                                     Theta, Cprev, Beta, masks_np, y_np,
-                                     xty_np)
+                                     Theta, Cprev, Beta, masks_np,
+                                     y_rows_np, xty_np)
                 continue
             sweep.append((i, k, fkk))
         if not sweep:
@@ -623,7 +721,8 @@ def nn_fold_paths(X, y, masks, lambdas, *, screen: str = "dpc", tol=1e-9,
             col_idxs.append(col_idx)
         X_subs_d = jnp.asarray(X_subs)
         L_subs = _spectral_norms_f(X_subs_d)
-        key = (Ka, p_b, len2)
+        key = ("nn-folds", Ka, N, p, str(X.dtype), max_iter, check_every,
+               mesh, p_b, len2)
         if key not in seen_keys:
             seen_keys.add(key)
             stats.n_compilations += 1
@@ -659,12 +758,20 @@ def nn_fold_paths(X, y, masks, lambdas, *, screen: str = "dpc", tol=1e-9,
 # ---------------------------------------------------------------------------
 
 def _cv_statistics(X_np, y_np, folds, lambdas, betas, lam_max, kept, stats,
-                   times):
+                   times, iters=None, mus=None, y_means=None):
+    """Held-out MSE / selection statistics from per-fold grid solutions.
+
+    ``mus`` / ``y_means`` (per-fold centering): fold k's betas solve the
+    centered training problem, so its held-out prediction is
+    ``X beta - mu_k . beta + ybar_k``."""
     K = len(folds)
     J = len(lambdas)
     mse = np.zeros((K, J))
     for k, (_, val) in enumerate(folds):
-        err = y_np[val][None, :] - betas[k] @ X_np[val].T        # (J, |val|)
+        pred = betas[k] @ X_np[val].T                            # (J, |val|)
+        if mus is not None:
+            pred = pred - (betas[k] @ mus[k])[:, None] + y_means[k]
+        err = y_np[val][None, :] - pred
         mse[k] = np.mean(err * err, axis=1)
     mean_mse = mse.mean(axis=0)
     se_mse = mse.std(axis=0, ddof=1) / np.sqrt(K) if K > 1 else \
@@ -678,7 +785,8 @@ def _cv_statistics(X_np, y_np, folds, lambdas, betas, lam_max, kept, stats,
         se_mse=se_mse, best_index=best, best_lambda=float(lambdas[best]),
         index_1se=idx_1se, lambda_1se=float(lambdas[idx_1se]), folds=folds,
         lam_max=lam_max, kept_features=kept, stats=stats,
-        screen_time=times[0], solve_time=times[1], setup_time=times[2])
+        screen_time=times[0], solve_time=times[1], setup_time=times[2],
+        fold_iters=iters)
 
 
 def sgl_cv(X, y, spec: GroupSpec, alpha, *, n_folds: int = 5, folds=None,
@@ -687,8 +795,14 @@ def sgl_cv(X, y, spec: GroupSpec, alpha, *, n_folds: int = 5, folds=None,
            safety: float = 0.0, specnorm_method: str = "power",
            check_every: int = 10, seed: int = 0, mesh=None,
            min_bucket: int = 64, min_group_bucket: int = 16,
-           margin: float = 0.125, chunk_init: int = 8) -> CVResult:
+           margin: float = 0.125, chunk_init: int = 8,
+           center: str = "global") -> CVResult:
     """K-fold cross-validation for SGL over a shared lambda grid.
+
+    Legacy entry point, kept as a thin (bit-identical) shim over the
+    declarative API: builds a one-shot ``Problem``/``Plan`` and runs
+    ``SGLSession.cv`` — a persistent session additionally reuses compiled
+    buckets and feeds ``session.refine``.
 
     All folds solve the SAME grid (anchored at the full-data lambda_max so
     held-out errors are comparable per grid point) with the fold-batched
@@ -697,29 +811,20 @@ def sgl_cv(X, y, spec: GroupSpec, alpha, *, n_folds: int = 5, folds=None,
     full-problem duality-gap certificates as the single-fold engine, so
     they match independent per-fold ``sgl_path`` runs to solver precision.
     ``folds`` overrides the deterministic ``kfold_indices`` split; ``mesh``
-    (from ``launch.mesh.make_fold_mesh``) shards the fold axis.
+    (from ``launch.mesh.make_fold_mesh``) shards the fold axis;
+    ``center='per-fold'`` scores leakage-free per-fold-centered models.
     """
-    X_np = np.asarray(X)
-    y_np = np.asarray(y)
-    N = X_np.shape[0]
-    if folds is None:
-        folds = kfold_indices(N, n_folds, seed)
-    masks = _masks_from_folds(folds, N)
-    if lambdas is None:
-        lam_max = float(lambda_max_sgl(
-            spec, jnp.asarray(X).T @ jnp.asarray(y), alpha)[0])
-        lambdas = default_lambda_grid(lam_max, n_lambdas, min_ratio)
-    else:
-        lambdas = np.asarray(lambdas, dtype=float)
-        lam_max = float(lambdas.max())
-    betas, kept, _, stats, times = sgl_fold_paths(
-        X, y, spec, alpha, masks, lambdas, screen=screen, tol=tol,
-        max_iter=max_iter, safety=safety, specnorm_method=specnorm_method,
-        check_every=check_every, min_bucket=min_bucket,
-        min_group_bucket=min_group_bucket, margin=margin,
-        chunk_init=chunk_init, mesh=mesh)
-    return _cv_statistics(X_np, y_np, folds, np.asarray(lambdas, float),
-                          betas, lam_max, kept, stats, times)
+    from .problem import Plan, Problem, warn_legacy_entry_point
+    from .session import SGLSession
+    warn_legacy_entry_point("sgl_cv", "SGLSession.cv")
+    plan = Plan(alpha=alpha, lambdas=lambdas, n_lambdas=n_lambdas,
+                min_ratio=min_ratio, screen=screen, tol=tol,
+                max_iter=max_iter, safety=safety,
+                specnorm_method=specnorm_method, check_every=check_every,
+                min_bucket=min_bucket, min_group_bucket=min_group_bucket,
+                margin=margin, chunk_init=chunk_init, n_folds=n_folds,
+                folds=folds, seed=seed, center=center, mesh=mesh)
+    return SGLSession(Problem.sgl(X, y, spec)).cv(plan)
 
 
 def nn_lasso_cv(X, y, *, n_folds: int = 5, folds=None, lambdas=None,
@@ -728,28 +833,18 @@ def nn_lasso_cv(X, y, *, n_folds: int = 5, folds=None, lambdas=None,
                 safety: float = 0.0, check_every: int = 10, seed: int = 0,
                 mesh=None, min_bucket: int = 64, margin: float = 0.125,
                 chunk_init: int = 8) -> CVResult:
-    """K-fold cross-validation for the nonnegative Lasso (DPC screening)."""
-    X_np = np.asarray(X)
-    y_np = np.asarray(y)
-    N = X_np.shape[0]
-    if folds is None:
-        folds = kfold_indices(N, n_folds, seed)
-    masks = _masks_from_folds(folds, N)
-    if lambdas is None:
-        lam_max = float(lambda_max_nn(jnp.asarray(X).T @ jnp.asarray(y))[0])
-        if lam_max <= 0:
-            raise ValueError("max_i <x_i, y> <= 0: nonnegative Lasso "
-                             "solution is identically zero")
-        lambdas = default_lambda_grid(lam_max, n_lambdas, min_ratio)
-    else:
-        lambdas = np.asarray(lambdas, dtype=float)
-        lam_max = float(lambdas.max())
-    betas, kept, _, stats, times = nn_fold_paths(
-        X, y, masks, lambdas, screen=screen, tol=tol, max_iter=max_iter,
-        safety=safety, check_every=check_every, min_bucket=min_bucket,
-        margin=margin, chunk_init=chunk_init, mesh=mesh)
-    return _cv_statistics(X_np, y_np, folds, np.asarray(lambdas, float),
-                          betas, lam_max, kept, stats, times)
+    """K-fold cross-validation for the nonnegative Lasso (DPC screening).
+
+    Legacy shim over ``SGLSession.cv`` (see ``sgl_cv``)."""
+    from .problem import Plan, Problem, warn_legacy_entry_point
+    from .session import SGLSession
+    warn_legacy_entry_point("nn_lasso_cv", "SGLSession.cv")
+    plan = Plan(lambdas=lambdas, n_lambdas=n_lambdas, min_ratio=min_ratio,
+                screen=screen, tol=tol, max_iter=max_iter, safety=safety,
+                check_every=check_every, min_bucket=min_bucket,
+                margin=margin, chunk_init=chunk_init, n_folds=n_folds,
+                folds=folds, seed=seed, mesh=mesh)
+    return SGLSession(Problem.nn_lasso(X, y)).cv(plan)
 
 
 # ---------------------------------------------------------------------------
@@ -767,36 +862,22 @@ def stability_selection(X, y, spec: GroupSpec, alpha, *,
                         specnorm_method: str = "fro") -> StabilityResult:
     """Selection probabilities over random row-subsamples, fold-batched.
 
-    Runs the SGL grid on ``n_subsamples`` random ``frac``-subsamples
-    (``batch_size`` at a time through the fold-batched engine) and reports
-    the fraction of subsamples in which each feature is active at each
-    lambda.  ``specnorm_method`` defaults to the Frobenius bound: the
-    per-subsample power iterations are the only setup cost that scales
-    with B, and the bound only loosens screening, never correctness.
+    Legacy shim over ``SGLSession.stability``: runs the SGL grid on
+    ``n_subsamples`` random ``frac``-subsamples (``batch_size`` at a time
+    through the fold-batched engine) and reports the fraction of
+    subsamples in which each feature is active at each lambda.
+    ``specnorm_method`` defaults to the Frobenius bound: the per-subsample
+    power iterations are the only setup cost that scales with B, and the
+    bound only loosens screening, never correctness.
     """
-    X_np = np.asarray(X)
-    y_np = np.asarray(y)
-    N, p = X_np.shape
-    if lambdas is None:
-        lam_max = float(lambda_max_sgl(
-            spec, jnp.asarray(X).T @ jnp.asarray(y), alpha)[0])
-        lambdas = default_lambda_grid(lam_max, n_lambdas, min_ratio)
-    lambdas = np.asarray(lambdas, dtype=float)
-    masks = subsample_masks(N, n_subsamples, frac, seed)
-    counts = np.zeros((len(lambdas), p))
-    agg = EngineStats()
-    for b0 in range(0, n_subsamples, batch_size):
-        betas, _, _, stats, _ = sgl_fold_paths(
-            X, y, spec, alpha, masks[b0:b0 + batch_size], lambdas,
-            screen=screen, tol=tol, max_iter=max_iter, safety=safety,
-            specnorm_method=specnorm_method, check_every=check_every,
-            mesh=mesh)
-        counts += (np.abs(betas) > active_tol).sum(axis=0)
-        agg.n_segments += stats.n_segments
-        agg.n_screens += stats.n_screens
-        agg.n_compilations += stats.n_compilations
-        agg.n_rejected += stats.n_rejected
-    probs = counts / n_subsamples
-    return StabilityResult(lambdas=lambdas, selection_probs=probs,
-                           max_probs=probs.max(axis=0),
-                           n_subsamples=n_subsamples, stats=agg)
+    from .problem import Plan, Problem, warn_legacy_entry_point
+    from .session import SGLSession
+    warn_legacy_entry_point("stability_selection", "SGLSession.stability")
+    plan = Plan(alpha=alpha, lambdas=lambdas, n_lambdas=n_lambdas,
+                min_ratio=min_ratio, screen=screen, tol=tol,
+                max_iter=max_iter, safety=safety,
+                specnorm_method=specnorm_method, check_every=check_every,
+                seed=seed, mesh=mesh, n_subsamples=n_subsamples,
+                subsample_frac=frac, active_tol=active_tol,
+                batch_size=batch_size)
+    return SGLSession(Problem.sgl(X, y, spec)).stability(plan)

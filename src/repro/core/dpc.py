@@ -65,8 +65,9 @@ def dpc_screen_grid_folds(X, Y, lambdas, Theta_bar, N_vecs, col_norms_f,
 
     Same masked-row convention as ``screening.tlfre_screen_grid_folds``:
     per-fold vectors are (K, N) with held-out rows zeroed, ``lambdas`` is
-    (K, L), ``col_norms_f`` (K, p).  Returns (feat_keep (K, L, p),
-    radii (K, L))."""
+    (K, L), ``col_norms_f`` (K, p).  (No centering support here — per-fold
+    centering is an SGL-only feature; centering X breaks the nonnegativity
+    geometry.)  Returns (feat_keep (K, L, p), radii (K, L))."""
     from .screening import grid_ball_geometry_folds
     K, L = lambdas.shape
     N = Y.shape[1]

@@ -76,16 +76,23 @@ def sgl_path(X, y, spec: GroupSpec, alpha, *, lambdas=None, n_lambdas=100,
              specnorm_method: str = "power", check_every: int = 10,
              engine: str = "legacy", **engine_kwargs) -> PathResult:
     """``engine='legacy'`` is the paper-protocol per-lambda driver below;
-    ``engine='batched'`` delegates to the device-resident grid engine
-    (``path_engine.sgl_path_batched``), which accepts the extra knobs
-    ``use_pallas`` / ``min_bucket`` / ``min_group_bucket``."""
+    ``engine='batched'`` is a thin shim over the declarative API — it
+    builds a one-shot ``Problem``/``Plan`` and runs ``SGLSession.path``
+    (same engine, same arguments, bit-identical results; a persistent
+    session additionally reuses compiled buckets across calls).  The
+    batched engine accepts the extra knobs ``use_pallas`` / ``min_bucket``
+    / ``min_group_bucket`` / ``margin`` / ``chunk_init``."""
     if engine == "batched":
-        from .path_engine import sgl_path_batched
-        return sgl_path_batched(
-            X, y, spec, alpha, lambdas=lambdas, n_lambdas=n_lambdas,
-            min_ratio=min_ratio, screen=screen, tol=tol, max_iter=max_iter,
-            safety=safety, specnorm_method=specnorm_method,
-            check_every=check_every, **engine_kwargs)
+        from .problem import Plan, Problem, warn_legacy_entry_point
+        from .session import SGLSession
+        warn_legacy_entry_point("sgl_path(engine='batched')",
+                                "SGLSession.path")
+        plan = Plan(alpha=alpha, lambdas=lambdas, n_lambdas=n_lambdas,
+                    min_ratio=min_ratio, screen=screen, tol=tol,
+                    max_iter=max_iter, safety=safety,
+                    specnorm_method=specnorm_method,
+                    check_every=check_every, **engine_kwargs)
+        return SGLSession(Problem.sgl(X, y, spec)).path(plan)
     if engine != "legacy":
         raise ValueError(f"unknown engine {engine!r}")
     if engine_kwargs:
@@ -211,11 +218,15 @@ def nn_lasso_path(X, y, *, lambdas=None, n_lambdas=100, min_ratio=0.01,
                   safety: float = 0.0, check_every: int = 10,
                   engine: str = "legacy", **engine_kwargs) -> PathResult:
     if engine == "batched":
-        from .path_engine import nn_lasso_path_batched
-        return nn_lasso_path_batched(
-            X, y, lambdas=lambdas, n_lambdas=n_lambdas, min_ratio=min_ratio,
-            screen=screen, tol=tol, max_iter=max_iter, safety=safety,
-            check_every=check_every, **engine_kwargs)
+        from .problem import Plan, Problem, warn_legacy_entry_point
+        from .session import SGLSession
+        warn_legacy_entry_point("nn_lasso_path(engine='batched')",
+                                "SGLSession.path")
+        plan = Plan(lambdas=lambdas, n_lambdas=n_lambdas,
+                    min_ratio=min_ratio, screen=screen, tol=tol,
+                    max_iter=max_iter, safety=safety,
+                    check_every=check_every, **engine_kwargs)
+        return SGLSession(Problem.nn_lasso(X, y)).path(plan)
     if engine != "legacy":
         raise ValueError(f"unknown engine {engine!r}")
     if engine_kwargs:

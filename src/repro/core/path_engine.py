@@ -94,6 +94,17 @@ class EngineStats:
     n_rejected: int = 0
     buckets: list = dataclasses.field(default_factory=list)  # (p_b, g_b, m, k)
 
+    def merge(self, other: "EngineStats", *, buckets: bool = True) -> None:
+        """Accumulate another run's counters into this one (session /
+        server aggregation).  ``buckets=False`` keeps the bucket log out of
+        aggregates where per-run bucket tuples would be meaningless."""
+        self.n_segments += other.n_segments
+        self.n_screens += other.n_screens
+        self.n_compilations += other.n_compilations
+        self.n_rejected += other.n_rejected
+        if buckets:
+            self.buckets.extend(other.buckets)
+
 
 def _pallas_active(use_pallas: Optional[bool], dtype) -> bool:
     """The Pallas kernels are float32; never engage them for float64 runs."""
@@ -224,8 +235,14 @@ def margin_fill_nn(S, c_prev_np, p_b: int):
 # ---------------------------------------------------------------------------
 
 def sweep_sgl_core(X, X_sub, y, spec: GroupSpec, sub_spec: GroupSpec, alpha,
-                   lipschitz, lams, valid, beta0, tol, gap_scale, *,
+                   lipschitz, lams, valid, beta0, tol, gap_scale, mu=None, *,
                    max_iter: int, check_every: int, use_pallas: bool):
+    """``mu`` (optional, (p,)): per-fold column means for leakage-free
+    centering — the certification GEMV runs against the SHARED design, so
+    the centered full-problem correlation is the rank-one correction
+    ``X^T rho - mu * sum(rho)`` (``X_sub`` is already materialized
+    centered+masked by the caller).  ``mu=None`` keeps the exact
+    uncentered graph."""
     prox = _padded_prox(sub_spec) if use_pallas else None
     N = y.shape[0]
     p = X.shape[1]
@@ -241,6 +258,8 @@ def sweep_sgl_core(X, X_sub, y, spec: GroupSpec, sub_spec: GroupSpec, alpha,
             resid = y - X_sub @ res.beta
             rho = resid / lam
             c = _xtv(X, rho, use_pallas).astype(b.dtype)   # full-X GEMV
+            if mu is not None:
+                c = c - (mu * jnp.sum(rho)).astype(b.dtype)
             s = dual_scaling_sgl(spec, c, alpha)
             theta = (s * rho).astype(b.dtype)
             pen = (alpha * jnp.sum(sub_spec.weights
@@ -331,8 +350,8 @@ def sgl_path_batched(X, y, spec: GroupSpec, alpha, *, lambdas=None,
                      safety: float = 0.0, specnorm_method: str = "power",
                      check_every: int = 10, use_pallas: Optional[bool] = None,
                      min_bucket: int = 64, min_group_bucket: int = 16,
-                     margin: float = 0.125,
-                     chunk_init: int = 8) -> PathResult:
+                     margin: float = 0.125, chunk_init: int = 8,
+                     compile_keys: Optional[set] = None) -> PathResult:
     """Batched SGL path: grid screening, speculative bucketed sweeps with
     in-scan certification.
 
@@ -340,6 +359,12 @@ def sgl_path_batched(X, y, spec: GroupSpec, alpha, *, lambdas=None,
     starts, and every accepted solution carries a full-problem duality-gap
     certificate at the solver tolerance, so the betas agree with the legacy
     driver to solver precision.
+
+    ``compile_keys`` is an optional persistent set of sweep-shape keys
+    (owned by ``SGLSession``): jax's jit cache is process-global, so a
+    shape seen in ANY earlier call never recompiles — threading one set
+    across calls makes ``EngineStats.n_compilations`` count compilations
+    actually paid, not shapes per call.
     """
     if screen not in ("tlfre", "gapsafe", "none"):
         raise ValueError(f"unknown screen mode {screen!r}")
@@ -385,7 +410,7 @@ def sgl_path_batched(X, y, spec: GroupSpec, alpha, *, lambdas=None,
     lam_bar = lam_max
     beta_dev = jnp.zeros(p, X.dtype)
     beta_full = np.zeros(p)
-    seen_keys: set = set()
+    seen_keys = compile_keys if compile_keys is not None else set()
     spec_m = max(int(chunk_init), 1)
 
     j = 0
@@ -468,7 +493,11 @@ def sgl_path_batched(X, y, spec: GroupSpec, alpha, *, lambdas=None,
         lam_pad = np.concatenate(
             [lam_chunk, np.full(len2 - m, lam_chunk[-1])])
         valid = np.arange(len2) < m
-        key = (p_b, sub_spec.num_groups, sub_spec.max_size, len2)
+        # the key must cover every dim jax's jit cache discriminates on —
+        # a persistent compile_keys set spans problems (serving), so shape
+        # and static args belong in it, not just the bucket dims
+        key = ("sgl", N, p, G, str(X.dtype), max_iter, check_every, pallas,
+               p_b, sub_spec.num_groups, sub_spec.max_size, len2)
         if key not in seen_keys:
             seen_keys.add(key)
             stats.n_compilations += 1
@@ -522,9 +551,11 @@ def nn_lasso_path_batched(X, y, *, lambdas=None, n_lambdas: int = 100,
                           safety: float = 0.0, check_every: int = 10,
                           use_pallas: Optional[bool] = None,
                           min_bucket: int = 64, margin: float = 0.125,
-                          chunk_init: int = 8) -> PathResult:
+                          chunk_init: int = 8,
+                          compile_keys: Optional[set] = None) -> PathResult:
     """Batched nonnegative-Lasso path: whole-grid DPC / Gap-Safe rules,
-    speculative bucketed sweeps with in-scan certification."""
+    speculative bucketed sweeps with in-scan certification.
+    ``compile_keys`` as in ``sgl_path_batched``."""
     if screen not in ("dpc", "gapsafe", "none"):
         raise ValueError(f"unknown screen mode {screen!r}")
     X = jnp.asarray(X)
@@ -563,7 +594,7 @@ def nn_lasso_path_batched(X, y, *, lambdas=None, n_lambdas: int = 100,
     lam_bar = lam_max
     beta_dev = jnp.zeros(p, X.dtype)
     beta_full = np.zeros(p)
-    seen_keys: set = set()
+    seen_keys = compile_keys if compile_keys is not None else set()
     spec_m = max(int(chunk_init), 1)
 
     j = 0
@@ -629,7 +660,8 @@ def nn_lasso_path_batched(X, y, *, lambdas=None, n_lambdas: int = 100,
         lam_pad = np.concatenate(
             [lam_chunk, np.full(len2 - m, lam_chunk[-1])])
         valid = np.arange(len2) < m
-        key = (p_b, len2)
+        key = ("nn", N, p, str(X.dtype), max_iter, check_every, pallas,
+               p_b, len2)
         if key not in seen_keys:
             seen_keys.add(key)
             stats.n_compilations += 1

@@ -1,0 +1,210 @@
+"""Declarative problem / plan specification — the data half of the
+Problem / Plan / Session API.
+
+The paper sells TLFre as a layer that composes with any solver; the public
+surface had instead grown four disjoint entry points re-deriving grids,
+buckets, and compilations from scratch.  This module defines the two
+immutable value objects the redesigned surface is built on:
+
+  * ``Problem`` — WHAT is being solved: the design matrix, the response,
+    the group structure, and the penalty family (``sgl`` or ``nn_lasso``).
+    A Problem is data; it never runs anything.
+
+  * ``Plan`` — HOW to solve it: lambda grid (explicit or auto-anchored),
+    alpha, screening rule, engine knobs, fold/subsample configuration,
+    centering policy, and mesh.  A Plan is declarative and reusable across
+    problems; ``plan.with_(...)`` derives variants.
+
+``SGLSession`` (``core.session``) binds a Problem to device state and
+executes Plans against it, persisting compiled buckets and warm duals
+across calls.  The legacy entry points (``sgl_path(engine='batched')``,
+``sgl_cv``, ...) are thin shims over these objects.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from .groups import GroupSpec
+
+PENALTIES = ("sgl", "nn_lasso")
+
+# screening rules per penalty family; "auto" resolves to the first entry
+_SCREENS = {"sgl": ("tlfre", "gapsafe", "none"),
+            "nn_lasso": ("dpc", "gapsafe", "none")}
+
+_WARNED: set = set()
+
+
+def warn_legacy_entry_point(name: str, replacement: str) -> None:
+    """One ``DeprecationWarning`` per legacy entry point per process.
+
+    The old surface stays working (and bit-identical — the shims call the
+    same engine with the same arguments), so a warning per call would be
+    pure noise; one per entry point documents the migration path without
+    drowning test output."""
+    if name in _WARNED:
+        return
+    _WARNED.add(name)
+    warnings.warn(
+        f"{name} is a legacy entry point kept as a thin shim; prefer "
+        f"{replacement} (see the Problem/Plan/Session migration guide in "
+        f"README.md)", DeprecationWarning, stacklevel=3)
+
+
+def as_group_spec(groups, p: int) -> GroupSpec:
+    """Accept a GroupSpec, a list of group sizes, or None (singletons)."""
+    if isinstance(groups, GroupSpec):
+        if groups.num_features != p:
+            raise ValueError(f"GroupSpec covers {groups.num_features} "
+                             f"features, X has {p}")
+        return groups
+    if groups is None:
+        return GroupSpec.from_sizes([1] * p)
+    spec = GroupSpec.from_sizes(groups)
+    if spec.num_features != p:
+        raise ValueError(f"group sizes sum to {spec.num_features}, X has {p}")
+    return spec
+
+
+@dataclasses.dataclass(frozen=True)
+class Problem:
+    """Immutable problem spec: (X, y, groups, penalty family, dtype).
+
+    Construct via ``Problem.sgl(X, y, groups)`` or
+    ``Problem.nn_lasso(X, y)``; the arrays are converted once (``dtype``
+    pins the compute precision — float64 for exactness runs, float32 for
+    TPU kernels) and shared by every session bound to the problem.
+    """
+    X: jnp.ndarray               # (N, p) design
+    y: jnp.ndarray               # (N,) response
+    spec: Optional[GroupSpec]    # group structure (None only for nn_lasso)
+    penalty: str                 # "sgl" | "nn_lasso"
+
+    def __post_init__(self):
+        if self.penalty not in PENALTIES:
+            raise ValueError(f"unknown penalty {self.penalty!r}; "
+                             f"expected one of {PENALTIES}")
+        if self.X.ndim != 2 or self.y.ndim != 1:
+            raise ValueError("X must be (N, p) and y (N,)")
+        if self.X.shape[0] != self.y.shape[0]:
+            raise ValueError(f"X has {self.X.shape[0]} rows, "
+                             f"y has {self.y.shape[0]}")
+        if self.penalty == "sgl" and self.spec is None:
+            raise ValueError("penalty='sgl' requires a GroupSpec")
+
+    @classmethod
+    def sgl(cls, X, y, groups=None, dtype=None) -> "Problem":
+        X = jnp.asarray(X, dtype)
+        y = jnp.asarray(y, X.dtype)
+        return cls(X=X, y=y, spec=as_group_spec(groups, X.shape[1]),
+                   penalty="sgl")
+
+    @classmethod
+    def nn_lasso(cls, X, y, dtype=None) -> "Problem":
+        X = jnp.asarray(X, dtype)
+        y = jnp.asarray(y, X.dtype)
+        return cls(X=X, y=y, spec=None, penalty="nn_lasso")
+
+    @property
+    def n_samples(self) -> int:
+        return int(self.X.shape[0])
+
+    @property
+    def n_features(self) -> int:
+        return int(self.X.shape[1])
+
+    @property
+    def dtype(self):
+        return self.X.dtype
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Declarative run configuration, replacing the scattered kwargs and
+    string flags of the legacy entry points.
+
+    One Plan drives every session verb: ``session.path(plan)`` reads the
+    grid/screen/engine fields, ``session.cv(plan)`` additionally the
+    fold/centering fields, ``session.stability(plan)`` the subsample
+    fields.  Plans are frozen — derive variants with ``plan.with_(...)``.
+    """
+    # ---- penalty / grid ---------------------------------------------------
+    alpha: float = 1.0           # group/l1 mix (ignored by nn_lasso)
+    lambdas: Optional[np.ndarray] = None   # explicit grid, else auto-anchor:
+    n_lambdas: int = 100                   # paper protocol — n log-spaced
+    min_ratio: float = 0.01                # points from lambda_max down
+    # ---- screening / solver ----------------------------------------------
+    screen: str = "auto"         # tlfre|gapsafe|none (sgl), dpc|... (nn)
+    engine: str = "batched"      # batched | legacy
+    tol: float = 1e-9
+    max_iter: int = 20000
+    safety: float = 0.0
+    specnorm_method: str = "power"
+    check_every: int = 10
+    # ---- batched-engine knobs --------------------------------------------
+    use_pallas: Optional[bool] = None
+    min_bucket: int = 64
+    min_group_bucket: int = 16
+    margin: float = 0.125
+    chunk_init: int = 8
+    # ---- model selection (cv / refine) -----------------------------------
+    n_folds: int = 5
+    folds: Optional[list] = None           # explicit [(train, val)] pairs
+    seed: int = 0
+    center: str = "global"       # "global" (legacy behaviour: caller
+    #                              centers once on the full sample) or
+    #                              "per-fold" (leakage-free: each fold is
+    #                              centered by its own train-row means,
+    #                              threaded through the masked embedding)
+    selection: str = "min"       # "min" | "1se"
+    # ---- stability selection ---------------------------------------------
+    n_subsamples: int = 50
+    subsample_frac: float = 0.5
+    active_tol: float = 1e-8
+    batch_size: int = 10
+    # ---- execution --------------------------------------------------------
+    mesh: object = None          # launch.mesh.make_fold_mesh(...) or None
+
+    def with_(self, **overrides) -> "Plan":
+        """A copy with the given fields replaced (a Plan is immutable)."""
+        return dataclasses.replace(self, **overrides)
+
+    def resolved_screen(self, penalty: str) -> str:
+        allowed = _SCREENS[penalty]
+        screen = allowed[0] if self.screen == "auto" else self.screen
+        if screen not in allowed:
+            raise ValueError(f"screen={screen!r} is not valid for "
+                             f"penalty={penalty!r}; expected one of "
+                             f"{('auto',) + allowed}")
+        return screen
+
+    def validate_for_penalty(self, penalty: str) -> None:
+        """Penalty-level validation (no Problem instance needed — used by
+        the serving front-end, which batches jobs by penalty)."""
+        self.resolved_screen(penalty)
+        if self.engine not in ("batched", "legacy"):
+            raise ValueError(f"unknown engine {self.engine!r}")
+        if self.center not in ("global", "per-fold"):
+            raise ValueError(f"unknown center mode {self.center!r}")
+        if self.selection not in ("min", "1se"):
+            raise ValueError(f"unknown selection rule {self.selection!r}")
+        if penalty == "nn_lasso" and self.center == "per-fold":
+            raise ValueError("per-fold centering is not defined for the "
+                             "nonnegative Lasso (centering X breaks the "
+                             "nonnegativity geometry)")
+
+    def validate(self, problem: Problem) -> None:
+        self.validate_for_penalty(problem.penalty)
+
+    def grid(self, lam_max: float) -> np.ndarray:
+        """The lambda grid this plan runs: explicit, or the paper protocol
+        anchored at ``lam_max``."""
+        from .path import default_lambda_grid
+        if self.lambdas is not None:
+            return np.asarray(self.lambdas, dtype=float)
+        return default_lambda_grid(lam_max, self.n_lambdas, self.min_ratio)

@@ -161,7 +161,7 @@ def grid_ball_geometry_folds(Y, lambdas, Theta_bar, N_vecs):
 
 def tlfre_screen_grid_folds(X, Y, spec: GroupSpec, alpha, lambdas, Theta_bar,
                             N_vecs, col_norms_f, group_specnorms_f,
-                            safety: float = 0.0):
+                            safety: float = 0.0, mus=None):
     """Fold-batched TLFre grid screen: K folds x L lambdas in ONE GEMM.
 
     Stacks the K fold ball geometries into a single
@@ -169,13 +169,19 @@ def tlfre_screen_grid_folds(X, Y, spec: GroupSpec, alpha, lambdas, Theta_bar,
     fold-k centers are zero on fold-k's validation rows, so the full-X
     product equals the fold's own ``centers @ X_train``.  ``col_norms_f`` /
     ``group_specnorms_f`` are per-fold (K, p) / (K, G) norms of the masked
-    design.  Returns (group_keep (K, L, G), feat_keep (K, L, p),
-    radii (K, L))."""
+    design.  ``mus`` (optional, (K, p)): per-fold train-row column means;
+    fold k's centered design is ``M_k X - m_k mu_k^T``, so every center/X
+    inner product needs only the rank-one correction
+    ``C -= sum(center) * mu_k`` — the shared GEMM survives leakage-free
+    per-fold centering untouched.  Returns (group_keep (K, L, G),
+    feat_keep (K, L, p), radii (K, L))."""
     K, L = lambdas.shape
     N = Y.shape[1]
     centers, radii = grid_ball_geometry_folds(Y, lambdas, Theta_bar, N_vecs)
     radii = radii * (1.0 + safety)
     C = (centers.reshape(K * L, N) @ X).reshape(K, L, X.shape[1])
+    if mus is not None:
+        C = C - centers.sum(axis=2)[:, :, None] * mus[:, None, :]
     group_keep, feat_keep = jax.vmap(
         _grid_rules, in_axes=(None, None, 0, 0, 0, 0))(
             spec, alpha, C, radii, col_norms_f, group_specnorms_f)

@@ -1,0 +1,426 @@
+"""Problem/Plan/Session API: correctness, reuse, and serving suite.
+
+The tentpole acceptance criteria live here:
+
+  * a second ``session.path(plan)`` over the same buckets pays ZERO new
+    solver compilations (``EngineStats.n_compilations`` does not grow);
+  * ``session.refine`` (warm two-stage grid refinement seeded from the
+    fold-batched path's certified duals) selects the same lambda as an
+    exhaustive fine-grid ``sgl_cv`` to grid resolution, with zero new
+    solver compilations and measurably fewer total FISTA iterations;
+  * the legacy entry points are bit-identical shims (<= 1e-12 under
+    float64 — in fact exactly equal) and emit a single
+    ``DeprecationWarning`` per process;
+  * ``center='per-fold'`` matches explicitly per-fold-centered legacy
+    solves (leakage-free CV);
+  * ``launch/sgl_serve.py`` round-trips a batch of jobs through the
+    fold-stacked engine and matches independent per-job CV.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (GroupSpec, Plan, Problem, SGLSession, nn_lasso_cv,
+                        sgl_cv, sgl_path, stability_selection)
+from repro.core import problem as problem_mod
+from repro.core.path import default_lambda_grid
+
+
+def _sgl_problem(seed=7, N=60, G=30, n=5, k_active=4, noise=0.01):
+    rng = np.random.default_rng(seed)
+    p = G * n
+    X = rng.standard_normal((N, p))
+    beta = np.zeros(p)
+    for g in rng.choice(G, k_active, replace=False):
+        beta[g * n + rng.choice(n, 2, replace=False)] = rng.standard_normal(2)
+    y = X @ beta + noise * rng.standard_normal(N)
+    return X, y, GroupSpec.uniform_groups(G, n)
+
+
+# ---------------------------------------------------------------------------
+# Problem / Plan validation
+# ---------------------------------------------------------------------------
+
+def test_problem_validation():
+    X = np.zeros((10, 6))
+    with pytest.raises(ValueError):
+        Problem.sgl(X, np.zeros(9), [3, 3])          # row mismatch
+    with pytest.raises(ValueError):
+        Problem.sgl(X, np.zeros(10), [4, 4])         # groups sum to 8 != 6
+    prob = Problem.sgl(X, np.zeros(10), [3, 3])
+    assert prob.n_samples == 10 and prob.n_features == 6
+    assert prob.penalty == "sgl" and prob.spec.num_groups == 2
+    nn = Problem.nn_lasso(X, np.zeros(10))
+    assert nn.spec is None and nn.penalty == "nn_lasso"
+
+
+def test_plan_validation_and_with():
+    prob = Problem.sgl(np.zeros((8, 4)), np.zeros(8), [2, 2])
+    nn = Problem.nn_lasso(np.zeros((8, 4)), np.zeros(8))
+    plan = Plan()
+    assert plan.resolved_screen("sgl") == "tlfre"
+    assert plan.resolved_screen("nn_lasso") == "dpc"
+    plan.validate(prob)
+    with pytest.raises(ValueError):
+        plan.with_(screen="dpc").validate(prob)       # dpc is nn-only
+    with pytest.raises(ValueError):
+        plan.with_(screen="tlfre").validate(nn)
+    with pytest.raises(ValueError):
+        plan.with_(center="per-fold").validate(nn)    # nn cannot center
+    with pytest.raises(ValueError):
+        plan.with_(engine="warp").validate(prob)
+    with pytest.raises(ValueError):
+        plan.with_(selection="median").validate(prob)
+    with pytest.raises(TypeError):
+        plan.with_(not_a_field=1)
+    p2 = plan.with_(alpha=0.5, n_lambdas=7)
+    assert (p2.alpha, p2.n_lambdas) == (0.5, 7)
+    assert (plan.alpha, plan.n_lambdas) == (1.0, 100)  # original untouched
+
+
+# ---------------------------------------------------------------------------
+# Session reuse: compiled buckets persist across calls
+# ---------------------------------------------------------------------------
+
+def test_session_path_zero_recompilation_on_reuse():
+    X, y, spec = _sgl_problem()
+    sess = SGLSession(Problem.sgl(X, y, spec))
+    plan = Plan(n_lambdas=12, tol=1e-10, max_iter=100_000, min_bucket=32)
+    r1 = sess.path(plan)
+    assert r1.stats.n_compilations > 0                # cold call compiles
+    r2 = sess.path(plan)
+    assert r2.stats.n_compilations == 0               # warm: same buckets
+    np.testing.assert_array_equal(r1.betas, r2.betas)  # and identical math
+    # the session aggregates engine counters across calls
+    assert sess.stats.n_segments == r1.stats.n_segments + r2.stats.n_segments
+    assert sess.stats.n_compilations == r1.stats.n_compilations
+    # cv reuses the same persistent key set (fold shapes are new, but a
+    # repeated cv is warm again)
+    c1 = sess.cv(plan)
+    c2 = sess.cv(plan)
+    assert c2.stats.n_compilations == 0
+    np.testing.assert_array_equal(c1.fold_betas, c2.fold_betas)
+
+
+def test_session_stability_reuses_buckets():
+    X, y, spec = _sgl_problem(seed=1, N=40, G=16, n=4)
+    sess = SGLSession(Problem.sgl(X, y, spec))
+    plan = Plan(n_subsamples=6, batch_size=3, n_lambdas=6, min_ratio=0.05,
+                tol=1e-7, specnorm_method="fro")
+    s1 = sess.stability(plan)
+    s2 = sess.stability(plan)
+    assert s1.selection_probs.shape == s2.selection_probs.shape
+    assert s2.stats.n_compilations == 0
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims: bit-identical + a single warning
+# ---------------------------------------------------------------------------
+
+def test_legacy_entry_points_warn_once_and_match_bitwise():
+    X, y, spec = _sgl_problem(seed=3)
+    kw = dict(n_lambdas=10, tol=1e-10, max_iter=100_000)
+
+    problem_mod._WARNED.clear()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        legacy1 = sgl_path(X, y, spec, 1.0, engine="batched", **kw)
+        legacy2 = sgl_path(X, y, spec, 1.0, engine="batched", **kw)
+    deps = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(deps) == 1                     # once per process, not per call
+    assert "SGLSession.path" in str(deps[0].message)
+
+    sess = SGLSession(Problem.sgl(X, y, spec))
+    new = sess.path(Plan(**kw))
+    # bit-identical under float64 (the shim calls the same engine with the
+    # same arguments) — stronger than the 1e-12 acceptance bound
+    np.testing.assert_array_equal(legacy1.betas, new.betas)
+    np.testing.assert_array_equal(legacy1.betas, legacy2.betas)
+
+    problem_mod._WARNED.clear()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        legacy_cv = sgl_cv(X, y, spec, 1.0, n_folds=3, **kw)
+        sgl_cv(X, y, spec, 1.0, n_folds=3, **kw)
+    deps = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(deps) == 1
+    new_cv = sess.cv(Plan(n_folds=3, **kw))
+    np.testing.assert_array_equal(legacy_cv.fold_betas, new_cv.fold_betas)
+    np.testing.assert_array_equal(legacy_cv.mean_mse, new_cv.mean_mse)
+    assert legacy_cv.best_lambda == new_cv.best_lambda
+    assert legacy_cv.fold_iters is not None   # shims carry the new fields
+
+
+def test_nn_shims_match_bitwise():
+    rng = np.random.default_rng(5)
+    N, p = 40, 96
+    X = rng.standard_normal((N, p))
+    b = np.zeros(p)
+    b[:6] = np.abs(rng.standard_normal(6)) + 0.5
+    y = X @ b + 0.01 * rng.standard_normal(N)
+    kw = dict(n_lambdas=8, tol=1e-10, max_iter=100_000)
+    legacy = nn_lasso_cv(X, y, n_folds=3, **kw)
+    sess = SGLSession(Problem.nn_lasso(X, y))
+    new = sess.cv(Plan(n_folds=3, **kw))
+    np.testing.assert_array_equal(legacy.fold_betas, new.fold_betas)
+    assert legacy.best_lambda == new.best_lambda
+
+
+def test_stability_shim_matches():
+    X, y, spec = _sgl_problem(seed=1, N=40, G=16, n=4)
+    kw = dict(n_subsamples=4, n_lambdas=5, min_ratio=0.05, tol=1e-7,
+              batch_size=2, seed=1)
+    legacy = stability_selection(X, y, spec, 1.0, **kw)
+    sess = SGLSession(Problem.sgl(X, y, spec))
+    new = sess.stability(Plan(n_subsamples=4, n_lambdas=5, min_ratio=0.05,
+                              tol=1e-7, batch_size=2, seed=1,
+                              specnorm_method="fro"))
+    np.testing.assert_array_equal(legacy.selection_probs,
+                                  new.selection_probs)
+
+
+# ---------------------------------------------------------------------------
+# Warm two-stage refinement (the ROADMAP item / PR acceptance)
+# ---------------------------------------------------------------------------
+
+def test_refine_matches_exhaustive_fine_cv_warm():
+    """session.refine == exhaustive fine-grid CV to grid resolution, with
+    ZERO new solver compilations and fewer total FISTA iterations."""
+    X, y, spec = _sgl_problem(seed=11, N=80, G=24, n=5, noise=0.5)
+    p, G = spec.num_features, spec.num_groups
+    # pin the buckets (min_bucket >= p, min_group_bucket > G) so the
+    # fine-window sweep shapes are exactly the coarse run's shapes — the
+    # zero-new-compilations claim is about bucket reuse, not luck
+    plan = Plan(n_lambdas=16, tol=1e-10, max_iter=200_000, min_bucket=256,
+                min_group_bucket=32, n_folds=4)
+    sess = SGLSession(Problem.sgl(X, y, spec))
+    coarse = sess.cv(plan)
+    ref = sess.refine(factor=10.0, n_lambdas=16)
+
+    # exhaustive cold CV on the same fine grid, fresh session
+    cold = SGLSession(Problem.sgl(X, y, spec)).cv(
+        plan.with_(lambdas=ref.fine.lambdas))
+
+    # same betas => same curve => same selected lambda (to grid resolution)
+    np.testing.assert_allclose(ref.fine.fold_betas, cold.fold_betas,
+                               atol=1e-8)
+    assert abs(ref.index - cold.best_index) <= 1
+    step = abs(np.log(ref.fine.lambdas[1] / ref.fine.lambdas[0]))
+    assert abs(np.log(ref.lambda_ / cold.best_lambda)) <= step + 1e-12
+
+    # warm accounting: no new sweep shapes, measurably fewer iterations
+    assert ref.new_compilations == 0
+    assert ref.total_iters < int(cold.fold_iters.sum())
+    # the refinement window brackets the coarse selection
+    assert ref.fine.lambdas.min() <= coarse.best_lambda
+    assert coarse.best_lambda <= ref.fine.lambdas.max()
+    # seeded from a coarse grid point at/above the window
+    assert ref.warm_start_lambda >= ref.fine.lambdas.max() * (1 - 1e-12)
+
+
+def test_refine_composes_and_requires_cv():
+    X, y, spec = _sgl_problem(seed=2, N=50, G=16, n=4)
+    sess = SGLSession(Problem.sgl(X, y, spec))
+    with pytest.raises(RuntimeError):
+        sess.refine(factor=10)
+    plan = Plan(n_lambdas=10, tol=1e-9, max_iter=100_000, min_bucket=128,
+                min_group_bucket=32, n_folds=3)
+    sess.cv(plan)
+    r1 = sess.refine(factor=25.0, n_lambdas=10)
+    r2 = sess.refine(factor=5.0, n_lambdas=10)   # refines the refinement
+    # the second window re-centers on the first selection and is narrower
+    # in log-width (it may shift outside r1's window if the selection hit
+    # r1's boundary)
+    width = lambda r: np.log(r.fine.lambdas.max() / r.fine.lambdas.min())
+    assert width(r2) <= width(r1) + 1e-9
+    assert r2.fine.lambdas.min() <= r1.lambda_ <= r2.fine.lambdas.max()
+    with pytest.raises(ValueError):
+        sess.refine(factor=1.0)
+    # the warm state is only exact for the coarse run's geometry: plans
+    # that change alpha / folds / centering must be rejected, not silently
+    # half-applied (the reconstructed duals would be infeasible for a new
+    # alpha's dual set, and masks/centering are reused from the coarse run)
+    for bad in (dict(alpha=0.5), dict(n_folds=4), dict(seed=1),
+                dict(center="per-fold")):
+        with pytest.raises(ValueError, match="refine cannot change"):
+            sess.refine(factor=5.0, **bad)
+
+
+# ---------------------------------------------------------------------------
+# Leakage-free per-fold centering
+# ---------------------------------------------------------------------------
+
+def test_per_fold_centering_matches_explicit_fold_solves():
+    """center='per-fold' through the masked embedding == explicitly
+    centering each fold's training data and solving independently."""
+    X, y, spec = _sgl_problem(seed=9, N=60, G=20, n=4)
+    X = X + 1.5                                   # nonzero means matter
+    y = y + 3.0
+    sess = SGLSession(Problem.sgl(X, y, spec))
+    plan = Plan(n_lambdas=8, tol=1e-12, max_iter=300_000, min_bucket=32,
+                n_folds=3, center="per-fold")
+    res = sess.cv(plan)
+    from repro.core import sgl_path as _path
+    for k, (train, val) in enumerate(res.folds):
+        mu = X[train].mean(axis=0)
+        ym = float(y[train].mean())
+        ref = _path(X[train] - mu, y[train] - ym, spec, 1.0,
+                    lambdas=res.lambdas, tol=1e-12, max_iter=300_000)
+        np.testing.assert_allclose(res.fold_betas[k], ref.betas, atol=1e-8)
+        # held-out MSE uses the fold intercept (leakage-free prediction)
+        pred = X[val] @ ref.betas.T - (ref.betas @ mu)[None, :] + ym
+        mse = np.mean((y[val][:, None] - pred) ** 2, axis=0)
+        np.testing.assert_allclose(res.mse_path[k], mse, atol=1e-8)
+
+
+@pytest.mark.parametrize("screen", ["gapsafe", "none"])
+def test_per_fold_centering_screen_modes_agree(screen):
+    """Centered screening rules stay safe: every screen mode returns the
+    same certified solutions."""
+    X, y, spec = _sgl_problem(seed=4, N=50, G=16, n=4)
+    X = X - 0.8
+    y = y + 2.0
+    plan = Plan(n_lambdas=6, tol=1e-11, max_iter=200_000, min_bucket=32,
+                n_folds=3, center="per-fold")
+    base = SGLSession(Problem.sgl(X, y, spec)).cv(plan)
+    other = SGLSession(Problem.sgl(X, y, spec)).cv(
+        plan.with_(screen=screen))
+    np.testing.assert_allclose(base.fold_betas, other.fold_betas,
+                               atol=1e-8)
+
+
+def test_sglcv_estimator_center_per_fold():
+    from repro.api import SGLCV
+    rng = np.random.default_rng(0)
+    N, G, n = 60, 20, 5
+    p = G * n
+    X = rng.standard_normal((N, p)) + 0.5
+    b = np.zeros(p)
+    b[:5] = [1.5, -2.0, 1.0, 0.5, -1.0]
+    y = X @ b + 3.0 + 0.05 * rng.standard_normal(N)
+    est = SGLCV(alpha=1.0, groups=[n] * G, n_folds=4, n_lambdas=10,
+                center="per-fold", tol=1e-10, max_iter=50_000).fit(X, y)
+    assert est.score(X, y) > 0.99
+    assert abs(est.intercept_ - 3.0) < 0.5
+    # the live session continues warm from the CV state
+    ref = est.session_.refine(factor=10, n_lambdas=10)
+    assert ref.fine.lambdas.min() <= est.lambda_ <= ref.fine.lambdas.max()
+
+
+# ---------------------------------------------------------------------------
+# Serving front-end
+# ---------------------------------------------------------------------------
+
+def test_sgl_serve_fold_stacked_batches_match_independent_cv():
+    from repro.launch.sgl_serve import SGLServer
+    rng = np.random.default_rng(0)
+    N, G, n = 48, 12, 4
+    p = G * n
+    plan = Plan(n_folds=3, n_lambdas=8, tol=1e-10, max_iter=100_000,
+                min_bucket=32)
+    server = SGLServer(plan)
+    X1 = rng.standard_normal((N, p))
+    X2 = rng.standard_normal((N, p))
+    jobs = []
+    for X in (X1, X1, X2):                     # two jobs share design X1
+        b = np.zeros(p)
+        b[rng.choice(p, 5, replace=False)] = rng.standard_normal(5)
+        y = X @ b + 0.01 * rng.standard_normal(N)
+        jobs.append((X, y))
+        server.submit(X, y, groups=[n] * G)
+    assert server.pending == 3
+    results = server.drain()
+    assert server.pending == 0 and len(results) == 3
+    # same-design jobs ran in ONE fold-stacked engine call
+    assert results[0].batched_with == [0, 1]
+    assert results[2].batched_with == [2]
+    for jid, (X, y) in enumerate(jobs):
+        r = results[jid]
+        ref = sgl_cv(X, y, GroupSpec.uniform_groups(G, n), 1.0, n_folds=3,
+                     lambdas=r.lambdas, tol=1e-10, max_iter=100_000,
+                     min_bucket=32)
+        np.testing.assert_allclose(r.mean_mse, ref.mean_mse, atol=1e-8)
+        assert r.best_lambda == ref.best_lambda
+        assert r.coef.shape == (p,)
+        assert np.isfinite(r.latency) and r.latency > 0
+    # identical resubmission is fully warm: no new sweep shapes
+    for X, y in jobs:
+        server.submit(X, y, groups=[n] * G)
+    warm = server.drain()
+    assert all(r.new_compilations == 0 for r in warm.values())
+    for jid in range(3):
+        np.testing.assert_array_equal(warm[jid + 3].coef, results[jid].coef)
+
+
+def test_sgl_serve_validates_plan_and_distinguishes_specs():
+    from repro.launch.sgl_serve import SGLServer, _spec_key
+    with pytest.raises(ValueError):
+        SGLServer(Plan(selection="mim")).submit(np.zeros((4, 2)),
+                                                np.zeros(4))
+    with pytest.raises(ValueError):
+        SGLServer(Plan(center="per-fold")).submit(
+            np.zeros((4, 2)), np.zeros(4), penalty="nn_lasso")
+    with pytest.raises(ValueError):
+        SGLServer().submit(np.zeros((4, 2)), np.zeros(4), penalty="ridge")
+    # spec keys hash the FULL group structure, not a truncated prefix:
+    # same p, same G, identical first 64 sizes, swapped sizes past 64
+    c = [1] * 64 + [2, 1] + [1] * 62
+    d = [1] * 64 + [1, 2] + [1] * 62
+    assert _spec_key(GroupSpec.from_sizes(c)) != \
+        _spec_key(GroupSpec.from_sizes(d))
+    assert _spec_key(GroupSpec.from_sizes(c)) == \
+        _spec_key(GroupSpec.from_sizes(list(c)))
+
+
+def test_sgl_serve_isolates_failing_batches_and_honors_folds():
+    from repro.core import kfold_indices
+    from repro.launch.sgl_serve import SGLServer
+    rng = np.random.default_rng(1)
+    N, p = 40, 60
+    folds = kfold_indices(N, 3, seed=7)
+    server = SGLServer(Plan(folds=folds, n_lambdas=6, tol=1e-9,
+                            max_iter=50_000, min_bucket=32))
+    X = rng.standard_normal((N, p))
+    b = np.zeros(p)
+    b[:4] = np.abs(rng.standard_normal(4)) + 0.5
+    y = X @ b + 0.01 * rng.standard_normal(N)
+    good = server.submit(X, y, groups=[4] * (p // 4))
+    # nn_lasso with max_i <x_i, y> <= 0 makes its batch raise
+    bad = server.submit(-np.abs(rng.standard_normal((N, p))) - 0.1,
+                        np.abs(y) + 0.1, penalty="nn_lasso")
+    results = server.drain()
+    assert results[bad].error is not None
+    assert results[good].error is None           # other batch unaffected
+    assert np.isfinite(results[good].best_lambda)
+    # the explicit CV split was used, not a fresh kfold_indices split
+    ref = sgl_cv(X, y, GroupSpec.from_sizes([4] * (p // 4)), 1.0,
+                 folds=folds, lambdas=results[good].lambdas, tol=1e-9,
+                 max_iter=50_000, min_bucket=32)
+    np.testing.assert_allclose(results[good].mean_mse, ref.mean_mse,
+                               atol=1e-8)
+
+
+def test_engine_stats_merge():
+    from repro.core import EngineStats
+    a = EngineStats(n_segments=1, n_screens=2, n_compilations=3,
+                    n_rejected=4, buckets=[(64, 16, 8, 8)])
+    b = EngineStats(n_segments=10, n_screens=20, n_compilations=30,
+                    n_rejected=40, buckets=[(128, 32, 4, 2)])
+    a.merge(b)
+    assert (a.n_segments, a.n_screens, a.n_compilations, a.n_rejected) == \
+        (11, 22, 33, 44)
+    assert a.buckets == [(64, 16, 8, 8), (128, 32, 4, 2)]
+    a.merge(b, buckets=False)
+    assert len(a.buckets) == 2
+
+
+def test_sgl_serve_smoke_cli():
+    from repro.launch import sgl_serve
+    res = sgl_serve.main(["--smoke", "--designs", "1",
+                          "--jobs-per-design", "2", "--rows", "40",
+                          "--groups", "8", "--group-size", "4",
+                          "--folds", "2", "--lambdas", "6"])
+    assert len(res) == 2
+    for r in res.values():
+        assert np.isfinite(r.best_lambda) and r.latency > 0
