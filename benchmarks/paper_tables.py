@@ -253,6 +253,64 @@ def cv_bench(engine="batched", n_folds=5):
     ]
 
 
+def cv_pallas_bench(n_folds=3):
+    """Elastic vs lockstep fold scheduling, and fused fold-stack Pallas
+    screening vs the jnp fallback, at float32 — the TPU serving dtype
+    (kernels run in interpret mode on this CPU container, so the pallas
+    wall-clock row is a correctness gate, not a speed claim there).
+
+    Rows: warm wall-clock for elastic and lockstep schedules (derived =
+    lockstep/elastic speedup), the fast folds' sweep-launch saving
+    (derived = lockstep/elastic launch-count ratio over the non-slowest
+    folds), the pallas-vs-jnp agreement at f32 tolerance, and the fused
+    screen counter (``EngineStats.n_pallas_screens`` must be 0 on the jnp
+    side and every screen on the pallas side)."""
+    from repro.core import Plan, Problem, SGLSession
+    X, y, _ = data_synth.synthetic_sgl(1, gamma1=0.1, gamma2=0.1, seed=1,
+                                       **SGL_DIMS)
+    X = np.asarray(X, np.float32)
+    y = np.asarray(y, np.float32)
+    spec = GroupSpec.uniform_groups(SGL_DIMS["G"], SGL_DIMS["n"])
+    prob = Problem.sgl(X, y, spec)
+    base = Plan(alpha=1.0, n_lambdas=N_LAMBDA, tol=3 * TOL, safety=1e-5,
+                max_iter=MAX_ITER, check_every=CHECK_EVERY, n_folds=n_folds)
+    res = {}
+    wall = {}
+    # pin use_pallas on the baselines: on TPU _pallas_active auto-enables
+    # the kernels for float32, which would turn the jnp baseline rows into
+    # a pallas-vs-pallas comparison (and trip the n_pallas_screens assert)
+    for name, plan in (
+            ("elastic", base.with_(use_pallas=False)),
+            ("lockstep", base.with_(schedule="lockstep",
+                                    use_pallas=False)),
+            ("pallas", base.with_(use_pallas=True))):
+        sess = SGLSession(prob)
+        for _ in range(2):              # first pass absorbs per-shape jits
+            t0 = time.perf_counter()
+            res[name] = sess.cv(plan)
+            wall[name] = time.perf_counter() - t0
+    n_lam = N_LAMBDA * n_folds
+    sw_el = np.asarray(res["elastic"].stats.fold_sweeps)
+    sw_lk = np.asarray(res["lockstep"].stats.fold_sweeps)
+    slow = int(np.argmax(sw_el))        # the pace-setting fold
+    fast = [k for k in range(n_folds) if k != slow]
+    agree = float(np.max(np.abs(res["pallas"].fold_betas
+                                - res["elastic"].fold_betas)))
+    assert res["elastic"].stats.n_pallas_screens == 0
+    assert res["pallas"].stats.n_pallas_screens > 0
+    return [
+        ("cv_pallas_elastic_warm", wall["elastic"] / n_lam * 1e6,
+         round(wall["lockstep"] / max(wall["elastic"], 1e-9), 2)),
+        ("cv_pallas_lockstep_warm", wall["lockstep"] / n_lam * 1e6, 1.0),
+        ("cv_pallas_fastfold_sweep_saving", 0.0,
+         round(float(sw_lk[fast].sum()) / max(float(sw_el[fast].sum()), 1),
+               2)),
+        ("cv_pallas_fused_warm", wall["pallas"] / n_lam * 1e6,
+         res["pallas"].stats.n_pallas_screens),
+        ("cv_pallas_agree_max_abs", 0.0, round(agree, 8)),
+    ]
+
+
 def fig5_rejection_dpc():
     X, y, _ = data_synth.synthetic_nn(1, seed=21, **NN_DIMS)
     res = nn_lasso_path(X, y, n_lambdas=40 if not FULL else 100, tol=TOL,

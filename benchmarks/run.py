@@ -26,9 +26,11 @@ positional SUITE_FILTER).  The ``session`` suite benchmarks the
 Problem/Plan/Session warm two-stage refinement (``session.refine``: coarse
 CV, then a fine grid seeded from the coarse certified duals on the same
 session) against a cold fine-grid CV — the model-selection serving regime.
+The ``cv-pallas`` suite compares elastic vs lockstep fold scheduling and
+the fused fold-stack Pallas screening vs the jnp fallback at float32.
 
-``--smoke`` runs only the fast engine + cv + session comparison suites at
-reduced dimensions — the CI perf-regression gate.
+``--smoke`` runs only the fast engine + cv + cv-pallas + session
+comparison suites at reduced dimensions — the CI perf-regression gate.
 
 REPRO_BENCH_FULL=1 switches to the paper's full dimensions.
 """
@@ -129,6 +131,8 @@ def main() -> None:
             ("engine", paper_tables.engine_bench),
             ("cv", functools.partial(paper_tables.cv_bench, engine="batched",
                                      n_folds=min(folds, 3))),
+            ("cv-pallas", functools.partial(paper_tables.cv_pallas_bench,
+                                            n_folds=min(folds, 3))),
             ("session", functools.partial(paper_tables.session_bench,
                                           n_folds=min(folds, 3))),
         ]  # smoke always baselines against the batched engine (CI gate)
@@ -150,6 +154,8 @@ def main() -> None:
             ("engine", paper_tables.engine_bench),
             ("cv", functools.partial(paper_tables.cv_bench, engine=engine,
                                      n_folds=folds)),
+            ("cv-pallas", functools.partial(paper_tables.cv_pallas_bench,
+                                            n_folds=folds)),
             ("session", functools.partial(paper_tables.session_bench,
                                           n_folds=folds)),
         ]

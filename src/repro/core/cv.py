@@ -14,17 +14,21 @@ matrix.  This module runs all K subset paths simultaneously, device-resident:
     nothing to any inner product, so the masked algebra IS the per-fold
     algebra — and every fold shares the one (N, p) design matrix.
 
-  * **Fold-batched grid screening.**  At each segment boundary the K fold
-    ball geometries (Theorem 12 per fold) are stacked into a single
+  * **Fold-batched grid screening.**  At each scheduler step the ready
+    folds' ball geometries (Theorem 12 per fold) are stacked into a single
     ``(K*L, N) x (N, p)`` GEMM against the shared design
     (``tlfre_screen_grid_folds`` / ``dpc_screen_grid_folds``) — one MXU
     launch screens every (fold, lambda) pair.  ``EngineStats.n_screens``
-    counts these stacked GEMMs: one per segment, NOT one per fold.
+    counts these stacked GEMMs: one per scheduler step, NOT one per fold.
+    On float32 problems the screening reductions run through the fused
+    fold-stack Pallas kernels (``kernels.ops.screen_norms_folds`` /
+    ``dpc_screen_folds``) — counted in ``EngineStats.n_pallas_screens``;
+    float64 exactness runs never engage the float32 kernels.
 
   * **Fold-batched sweeps.**  The per-segment speculative ``lax.scan``
     sweep of the single-fold engine (``path_engine.sweep_sgl_core``) is
     vmapped over a leading fold axis on a COMMON feature bucket (the max
-    of the per-fold buckets), carrying each fold's warm-started
+    of the cohort's per-fold buckets), carrying each fold's warm-started
     coefficients.  Every fold still certifies every accepted row against
     its own full training problem, so per-fold results match independent
     single-fold paths to solver precision.  With a multi-device mesh the
@@ -32,14 +36,25 @@ matrix.  This module runs all K subset paths simultaneously, device-resident:
     (``launch.mesh.make_fold_mesh`` / ``shard_over_folds``); on one device
     the vmap runs as-is.
 
-  * **Per-fold progress.**  Folds accept different certified prefixes and
-    advance through the grid at different rates; the host tracks one grid
-    cursor per fold and a fold drops out of the stacked screen/sweep once
-    its grid is exhausted.
+  * **Elastic fold scheduling** (``schedule='elastic'``, the default).
+    Folds no longer advance in lockstep segments.  Each fold carries its
+    own speculative chunk length (doubling on fully-certified chunks,
+    throttling only itself on a failed certificate), ready folds are
+    grouped into cohorts of like chunk length, and each cohort is
+    dispatched as its own asynchronous sweep launch: a fast fold that
+    certified its whole chunk is screened and re-dispatched immediately
+    while a slow fold's launch is still in flight.
+    ``jax.block_until_ready`` is deferred until a launch is harvested —
+    and harvesting prefers launches whose certificates are already
+    materialised.  ``schedule='lockstep'`` restores the single-cohort
+    segment loop (one launch at a time, one shared chunk length) for A/B
+    benchmarking.
 
 Under vmap the in-scan ``lax.cond`` row-kill lowers to ``select`` (both
 branches execute), so a failed certificate still gates *acceptance* but no
-longer saves the dead rows' compute — the price of lockstep fold batching.
+longer saves the dead rows' compute — under elastic scheduling that waste is
+confined to the slow fold's own (short) cohort instead of padding every
+fold's rows to the same chunk.
 """
 from __future__ import annotations
 
@@ -58,10 +73,12 @@ from .lambda_max import lambda_max_sgl
 from .linalg import group_spectral_norms, spectral_norm
 from .path import _bucket
 from .path_engine import (EngineStats, _expand_set, _feature_bucket,
-                          _pow2_len, margin_fill_nn, margin_fill_sgl,
-                          sweep_nn_core, sweep_sgl_core)
+                          _pallas_active, _pow2_len, margin_fill_nn,
+                          margin_fill_sgl, sweep_nn_core, sweep_sgl_core)
 from .screening import (gap_safe_grid_radii, gap_safe_screen_grid_folds,
                         tlfre_screen_grid_folds)
+
+SCHEDULES = ("elastic", "lockstep")
 
 
 # ---------------------------------------------------------------------------
@@ -176,10 +193,10 @@ class StabilityResult:
 # Jitted fold-batched screens (one stacked GEMM per call)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("screen",))
+@functools.partial(jax.jit, static_argnames=("screen", "use_pallas"))
 def _screen_folds_sgl(X, Y, spec, alpha, rem, lam_bars, lam_maxs, theta_bars,
                       n_bound, beta_prev, c_prev, masks, col_n_f, gspec_f,
-                      safety, mus, *, screen: str):
+                      safety, mus, *, screen: str, use_pallas: bool):
     """Stacked TLFre (+ optional Gap-Safe) screen for K folds x L lambdas.
 
     All per-fold arrays are masked to their training rows.  Exactly one
@@ -188,13 +205,16 @@ def _screen_folds_sgl(X, Y, spec, alpha, rem, lam_bars, lam_maxs, theta_bars,
     GEMV-sized work because each fold's dynamic ball center is fixed
     across the grid.  ``mus`` (None, or (K, p) per-fold column means)
     applies the leakage-free centering rank-one corrections without
-    breaking the shared-design GEMM.  Returns feat_keep (K, L, p).
+    breaking the shared-design GEMM.  ``use_pallas`` routes the group-stat
+    reductions through the fused fold-stack kernel (f32 only).  Returns
+    feat_keep (K, L, p).
     """
     at_max = (lam_bars >= lam_maxs * (1.0 - 1e-12))[:, None]
     n_vecs = jnp.where(at_max, n_bound, Y / lam_bars[:, None] - theta_bars)
     _, fk, _ = tlfre_screen_grid_folds(X, Y, spec, alpha, rem, theta_bars,
                                        n_vecs, col_n_f, gspec_f,
-                                       safety=safety, mus=mus)
+                                       safety=safety, mus=mus,
+                                       use_pallas=use_pallas)
     if screen == "gapsafe":
         fit = beta_prev @ X.T
         if mus is not None:     # centered fit: (X - 1 mu^T) beta
@@ -207,20 +227,21 @@ def _screen_folds_sgl(X, Y, spec, alpha, rem, lam_bars, lam_maxs, theta_bars,
         radii = jax.vmap(gap_safe_grid_radii)(Y, rem, theta_bars, resid,
                                               pen) * (1.0 + safety)
         _, fk_dyn = gap_safe_screen_grid_folds(spec, alpha, c_prev, radii,
-                                               col_n_f, gspec_f)
+                                               col_n_f, gspec_f,
+                                               use_pallas=use_pallas)
         fk = fk & fk_dyn
     return fk
 
 
-@functools.partial(jax.jit, static_argnames=("screen",))
+@functools.partial(jax.jit, static_argnames=("screen", "use_pallas"))
 def _screen_folds_nn(X, Y, rem, lam_bars, lam_maxs, theta_bars, n_bound,
                      beta_prev, c_prev, masks, col_n_f, safety, *,
-                     screen: str):
+                     screen: str, use_pallas: bool):
     """Stacked DPC (+ optional Gap-Safe) screen; one GEMM for all folds."""
     at_max = (lam_bars >= lam_maxs * (1.0 - 1e-12))[:, None]
     n_vecs = jnp.where(at_max, n_bound, Y / lam_bars[:, None] - theta_bars)
     fk, _ = dpc_screen_grid_folds(X, Y, rem, theta_bars, n_vecs, col_n_f,
-                                  safety=safety)
+                                  safety=safety, use_pallas=use_pallas)
     if screen == "gapsafe":
         resid = Y - masks * (beta_prev @ X.T)
         pen = jnp.sum(beta_prev, axis=1)         # beta >= 0 => l1 = sum
@@ -240,31 +261,34 @@ _FOLD_SWEEPS: dict = {}
 
 
 def _fold_sweep(kind: str, mesh, n_folds: int, max_iter: int,
-                check_every: int, centered: bool = False):
+                check_every: int, centered: bool = False,
+                use_pallas: bool = False):
     """Jitted fold-batched sweep, cached per (kind, mesh, statics).
 
     vmaps the single-fold segment sweep over a leading fold axis; when a
-    multi-device 'fold' mesh is supplied and it divides the fold count, the
-    fold axis is sharded across it with ``shard_map``.  ``centered`` adds
-    the per-fold column-mean argument (axis 0) for leakage-free per-fold
-    centering.
+    multi-device 'fold' mesh is supplied and the cohort size divides it
+    (``launch.mesh.fold_shard_compatible`` — elastic cohorts fluctuate, so
+    the check runs per launch), the fold axis is sharded across it with
+    ``shard_map``.  ``centered`` adds the per-fold column-mean argument
+    (axis 0) for leakage-free per-fold centering; ``use_pallas`` routes the
+    FISTA prox and certification GEMV through the fused f32 kernels.
     """
     core, axes = ((sweep_sgl_core, _SGL_SWEEP_AXES) if kind == "sgl"
                   else (sweep_nn_core, _NN_SWEEP_AXES))
     if centered:
         axes = axes + (0,)
-    use_shard = (mesh is not None and mesh.size > 1
-                 and n_folds % mesh.size == 0)
+    from ..launch.mesh import fold_shard_compatible
+    use_shard = fold_shard_compatible(mesh, n_folds)
     # Mesh hashes by devices+axes, so equal meshes from repeated
     # make_fold_mesh calls share one cache entry (id() would re-trace per
     # call and pin dead meshes forever)
     key = (kind, mesh if use_shard else None, max_iter, check_every,
-           centered)
+           centered, use_pallas)
     fn = _FOLD_SWEEPS.get(key)
     if fn is None:
         f = jax.vmap(functools.partial(core, max_iter=max_iter,
                                        check_every=check_every,
-                                       use_pallas=False), in_axes=axes)
+                                       use_pallas=use_pallas), in_axes=axes)
         if use_shard:
             from ..launch.mesh import shard_over_folds
             f = shard_over_folds(f, mesh, axes)
@@ -281,11 +305,7 @@ _spectral_norms_f = jax.jit(jax.vmap(
 
 
 # ---------------------------------------------------------------------------
-# Segment-loop pieces shared by the SGL and NN fold drivers.  The two
-# drivers differ in screening math and sweep signature; the grid padding,
-# the fully-screened-prefix advance, the certified-prefix acceptance, and
-# the chunk-length adaptation are identical and correctness-critical, so
-# they live here exactly once.
+# Chunk policies
 # ---------------------------------------------------------------------------
 
 def _build_rem(lambdas, j_pos, act):
@@ -302,57 +322,450 @@ def _build_rem(lambdas, j_pos, act):
     return rem
 
 
-def _advance_zero_prefix(k, counts, lambdas, j_pos, lam_bar, Theta, Cprev,
-                         Beta, masks_np, y_rows_np, xty_np):
-    """Fully-screened prefix for fold k: beta* = 0 on those grid points and
-    the exact dual optimum is y/lam, so the fold advances without solving.
-    ``y_rows_np`` is (K, N): per-fold responses on the full row index."""
-    adv = int(np.argmax(counts > 0)) if counts.any() else len(counts)
-    lam_new = float(lambdas[j_pos[k] + adv - 1])
-    lam_bar[k] = lam_new
-    Theta[k] = masks_np[k] * y_rows_np[k] / lam_new
-    Cprev[k] = xty_np[k] / lam_new
-    Beta[k] = 0.0
-    j_pos[k] += adv
+def _next_chunk_len(spec_m, accepted, limited=None, cap: int = 64):
+    """Lockstep chunk policy: double the shared speculative chunk when
+    every fold certified everything; otherwise throttle to the slowest
+    fold's accepted prefix.
+
+    ``limited`` flags folds whose chunk was capped by their REMAINING GRID
+    rather than by the speculative budget — they are finishing their path,
+    and a partial certificate on a 1-2 row tail chunk used to drag every
+    other fold's chunk back to 2 for the rest of the path.  Grid-limited
+    folds are excluded from both the all-certified check and the throttle
+    minimum; with every fold grid-limited the chunk doubles (the pool is
+    draining)."""
+    if limited is None:
+        limited = [False] * len(accepted)
+    free = [ab for ab, lim in zip(accepted, limited) if not lim]
+    if all(a == b for a, b in free):
+        return min(2 * spec_m, cap)
+    return max(2, min(a for a, b in free if a < b))
 
 
-def _accept_prefixes(sweep, m_ks, good_np, betas_np, thetas_np, cthetas_np,
-                     iters_np, col_idxs, lam_pads, p, j_pos, betas_out,
-                     iters_out, kept_out, Beta, Theta, Cprev, lam_bar,
-                     stats):
-    """Accept each fold's certified prefix and carry its exact dual forward.
-    Row 0 of every fold is solved on a provably safe superset, so kk >= 1
-    guarantees progress."""
-    accepted = []
-    for t, (i, k, _) in enumerate(sweep):
-        mk = m_ks[t]
-        good = good_np[t][:mk]
-        kk = int(np.argmin(good)) if not good.all() else mk
-        if kk == 0:
-            kk = 1
-        accepted.append((kk, mk))
-        stats.n_rejected += int(mk - kk)
-        col_idx = col_idxs[t]
-        rows = np.zeros((kk, p))
-        rows[:, col_idx] = betas_np[t, :kk, :len(col_idx)]
-        j0 = j_pos[k]
-        betas_out[k, j0:j0 + kk] = rows
-        iters_out[k, j0:j0 + kk] = iters_np[t, :kk]
-        kept_out[k, j0:j0 + kk] = len(col_idx)
-        Beta[k] = rows[-1]
-        Theta[k] = thetas_np[t, kk - 1]
-        Cprev[k] = cthetas_np[t, kk - 1]
-        lam_bar[k] = float(lam_pads[t, kk - 1])
-        j_pos[k] += kk
-    return accepted
+def _next_fold_chunk(chunk: int, kk: int, mk: int, cap: int) -> int:
+    """Elastic per-fold chunk policy: a fold that certified its whole chunk
+    doubles ITS OWN chunk; a failed certificate throttles only that fold.
+    No fold's pace ever feeds back into another fold's chunk."""
+    if kk == mk:
+        return min(2 * max(chunk, 1), cap)
+    return max(2, kk)
 
 
-def _next_chunk_len(spec_m, accepted):
-    """Double the speculative chunk when every fold certified everything;
-    otherwise throttle to the slowest fold's accepted prefix."""
-    if all(a == b for a, b in accepted):
-        return min(2 * spec_m, 64)
-    return max(2, min(a for a, _ in accepted))
+# ---------------------------------------------------------------------------
+# The shared fold scheduler.  The SGL and NN drivers differ in screening
+# math and bucketed-subproblem construction; the grid bookkeeping, the
+# fully-screened-prefix advance, the certified-prefix acceptance, the chunk
+# policies and the launch queue are identical and correctness-critical, so
+# they live here exactly once.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Launch:
+    """One dispatched (possibly still in-flight) fold-batched sweep."""
+    sweep: list          # [(k, fkk, mk, limited)] cohort members
+    col_idxs: list       # per-member solver column indices
+    lam_pads: np.ndarray  # (Ka, len2) padded lambda chunks
+    outputs: tuple       # (betas, thetas, cthetas, good, iters) device arrays
+    p_b: int
+    g_b: int
+
+
+class _FoldEngine:
+    """Shared scheduler state + acceptance logic for the fold drivers.
+
+    Subclasses provide ``_screen_call(act, rem)`` (the penalty-specific
+    stacked grid screen, one GEMM) and ``make_launch(cohort)`` (bucketed
+    subproblems + one vmapped sweep dispatch, non-blocking).  ``run`` owns
+    the grid cursors, the chunk policies, and the launch queue;
+    ``screen`` wraps ``_screen_call`` with the shared padding/accounting."""
+
+    def __init__(self, X, masks_np, y_rows_np, lambdas, lam_max_np, xty_np,
+                 *, tol, max_iter, safety, check_every, min_bucket, margin,
+                 mesh, pallas, screen_mode, stats, seen_keys):
+        self.X = X
+        self.X_np = np.asarray(X)
+        self.N, self.p = X.shape
+        self.masks_np = masks_np
+        self.y_rows_np = y_rows_np
+        self.lambdas = lambdas
+        self.J = len(lambdas)
+        self.K = masks_np.shape[0]
+        self.lam_max_np = lam_max_np
+        self.xty_np = xty_np
+        self.tol = tol
+        self.max_iter = max_iter
+        self.safety = safety
+        self.check_every = check_every
+        self.min_bucket = min_bucket
+        self.margin = margin
+        self.mesh = mesh
+        self.pallas = pallas
+        self.screen_mode = screen_mode
+        self.stats = stats
+        self.seen_keys = seen_keys
+        self.screen_time = 0.0
+        self.solve_time = 0.0
+
+        K, J, p = self.K, self.J, self.p
+        lam_max_safe = np.where(lam_max_np > 0, lam_max_np, 1.0)
+        self.Theta = masks_np * y_rows_np / lam_max_safe[:, None]
+        self.Cprev = xty_np / lam_max_safe[:, None]
+        self.lam_bar = lam_max_safe.copy()
+        self.Beta = np.zeros((K, p))
+        self.j_pos = np.zeros(K, dtype=int)
+        self.betas_out = np.zeros((K, J, p))
+        self.iters_out = np.zeros((K, J), dtype=np.int64)
+        self.kept_out = np.zeros((K, J), dtype=np.int64)
+        self.gap_scales = np.maximum(
+            0.5 * np.sum((masks_np * y_rows_np) ** 2, axis=1), 1e-30)
+
+    def load_init(self, init: FoldState) -> None:
+        """Seed the warm-start chain from an exact per-fold reference state
+        (``SGLSession.refine``)."""
+        self.lam_bar = np.asarray(init.lam_bar, dtype=float).copy()
+        self.Theta = np.asarray(init.theta, dtype=float).copy()
+        self.Cprev = np.asarray(init.c_theta, dtype=float).copy()
+        self.Beta = np.asarray(init.beta, dtype=float).copy()
+
+    # -- shared pieces -------------------------------------------------------
+
+    def advance_zero_prefix(self, k: int, counts: np.ndarray) -> None:
+        """Fully-screened prefix for fold k: beta* = 0 on those grid points
+        and the exact dual optimum is y/lam, so the fold advances without
+        solving."""
+        adv = int(np.argmax(counts > 0)) if counts.any() else len(counts)
+        lam_new = float(self.lambdas[self.j_pos[k] + adv - 1])
+        self.lam_bar[k] = lam_new
+        self.Theta[k] = self.masks_np[k] * self.y_rows_np[k] / lam_new
+        self.Cprev[k] = self.xty_np[k] / lam_new
+        self.Beta[k] = 0.0
+        self.j_pos[k] += adv
+
+    def screen(self, act: np.ndarray) -> np.ndarray:
+        """One stacked grid screen over the ready folds' remaining grids:
+        a single ``(K*L, N) x (N, p)`` GEMM inside the penalty-specific
+        ``_screen_call``, with the padding, timing, host sync and
+        ``EngineStats`` accounting shared here."""
+        rem = _build_rem(self.lambdas, self.j_pos, act)
+        if self.screen_mode == "none":
+            return np.ones((len(act), rem.shape[1], self.p), dtype=bool)
+        ts = time.perf_counter()
+        fk_np = np.asarray(self._screen_call(act, rem))  # one host sync
+        self.stats.n_screens += 1                        # ONE GEMM issued
+        self.stats.n_pallas_screens += int(self.pallas)
+        self.screen_time += time.perf_counter() - ts
+        return fk_np
+
+    def harvest(self, launch: _Launch):
+        """Accept each fold's certified prefix and carry its exact dual
+        forward.  Blocks on the launch's certificates (the one mandatory
+        host sync per launch); the heavy outputs are sliced per fold to the
+        accepted rows only, so rejected speculative rows are never
+        transferred.  Row 0 of every fold is solved on a provably safe
+        superset, so kk >= 1 guarantees progress."""
+        ts = time.perf_counter()
+        betas_b, thetas_b, cthetas_b, good_b, iters_b = launch.outputs
+        good_np = np.asarray(good_b)                 # one host sync
+        accepted = []
+        for t, (k, _, mk, limited) in enumerate(launch.sweep):
+            good = good_np[t][:mk]
+            kk = int(np.argmin(good)) if not good.all() else mk
+            if kk == 0:
+                kk = 1
+            self.stats.n_rejected += int(mk - kk)
+            col_idx = launch.col_idxs[t]
+            rows = np.zeros((kk, self.p))
+            rows[:, col_idx] = np.asarray(betas_b[t, :kk, :len(col_idx)])
+            j0 = self.j_pos[k]
+            self.betas_out[k, j0:j0 + kk] = rows
+            self.iters_out[k, j0:j0 + kk] = np.asarray(iters_b[t, :kk])
+            self.kept_out[k, j0:j0 + kk] = len(col_idx)
+            self.Beta[k] = rows[-1]
+            self.Theta[k] = np.asarray(thetas_b[t, kk - 1])
+            self.Cprev[k] = np.asarray(cthetas_b[t, kk - 1])
+            self.lam_bar[k] = float(launch.lam_pads[t, kk - 1])
+            self.j_pos[k] += kk
+            accepted.append((k, kk, mk, limited))
+        self.solve_time += time.perf_counter() - ts
+        self.stats.buckets.append(
+            (launch.p_b, launch.g_b, max(mk for _, _, mk, _ in launch.sweep),
+             min(kk for _, kk, _, _ in accepted)))
+        return accepted
+
+    @staticmethod
+    def _pick_launch(inflight: list, schedule: str) -> _Launch:
+        """Oldest launch — except under elastic scheduling, prefer one
+        whose certificates are already materialised on device so the block
+        lands on a launch that actually finished (deferred
+        ``block_until_ready``)."""
+        if schedule == "elastic" and len(inflight) > 1:
+            for i, launch in enumerate(inflight):
+                is_ready = getattr(launch.outputs[3], "is_ready", None)
+                if is_ready is not None and is_ready():
+                    return inflight.pop(i)
+        return inflight.pop(0)
+
+    # -- the scheduler loop --------------------------------------------------
+
+    def run(self, schedule: str, chunk_init: int, chunk_cap: int) -> None:
+        """Drive every fold through the grid.
+
+        Lockstep: one cohort per step containing every ready fold, one
+        shared chunk length (``_next_chunk_len``), dispatch immediately
+        followed by harvest — the PR-2 segment loop.  Elastic: per-fold
+        chunk lengths (``_next_fold_chunk``), ready folds grouped into
+        cohorts of like chunk length, each cohort its own asynchronous
+        launch; a fold is screened and re-dispatched as soon as ITS launch
+        is harvested, while slower cohorts keep sweeping in flight."""
+        K, J = self.K, self.J
+        j_pos = self.j_pos
+        spec_m = max(int(chunk_init), 1)              # lockstep shared chunk
+        chunk = np.full(K, max(int(chunk_init), 1), dtype=int)
+        busy = np.zeros(K, dtype=bool)
+        inflight: list = []
+        fold_sweeps = np.zeros(K, dtype=np.int64)
+
+        def pace(k):
+            return _pow2_len(int(chunk[k]))
+
+        while (j_pos < J).any() or inflight:
+            ready = np.nonzero((j_pos < J) & ~busy)[0]
+            if schedule == "elastic" and len(ready) and busy.any():
+                # pace hysteresis: a ready fold whose chunk is within 2x
+                # of an IN-FLIGHT fold's waits one harvest so the two
+                # re-merge into a single launch — like-paced folds keep
+                # the lockstep cadence, while a fold whose pace genuinely
+                # diverged (>2x chunk ratio) dispatches immediately and
+                # never gates anyone
+                busy_cls = {pace(b) for b in np.nonzero(busy)[0]}
+                ready = np.asarray(
+                    [k for k in ready
+                     if not any(c // 2 <= pace(k) <= 2 * c
+                                for c in busy_cls)], dtype=int)
+            sweep = []
+            if len(ready):
+                fk_np = self.screen(ready)            # ONE stacked GEMM
+                for i, k in enumerate(ready):
+                    fkk = fk_np[i][:J - j_pos[k]]
+                    counts = fkk.sum(axis=1)
+                    if counts[0] == 0:
+                        self.advance_zero_prefix(k, counts)
+                        continue
+                    budget = spec_m if schedule == "lockstep" else \
+                        int(chunk[k])
+                    mk = min(J - j_pos[k], budget)
+                    sweep.append((k, fkk, mk, mk < budget))
+            if sweep:
+                if schedule == "lockstep":
+                    cohorts = [sweep]
+                else:
+                    # cohorts greedily band folds within a 2x chunk ratio:
+                    # a cohort's folds share the launch's scan length, so
+                    # only like-paced folds pad each other's rows (bounded
+                    # 2x) and a genuinely slow fold gets its own launch
+                    entries = sorted(sweep, key=lambda e: -pace(e[0]))
+                    cohorts = []
+                    for e in entries:
+                        if cohorts and 2 * pace(e[0]) >= \
+                                pace(cohorts[-1][0][0]):
+                            cohorts[-1].append(e)
+                        else:
+                            cohorts.append([e])
+                for cohort in cohorts:
+                    inflight.append(self.make_launch(cohort))
+                    self.stats.n_segments += 1
+                    for k, _, _, _ in cohort:
+                        busy[k] = True
+                        fold_sweeps[k] += 1
+            if inflight:
+                launch = self._pick_launch(inflight, schedule)
+                accepted = self.harvest(launch)
+                limited_flags = [lim for _, _, _, lim in accepted]
+                for k, kk, mk, _ in accepted:
+                    busy[k] = False
+                    if schedule == "elastic":
+                        chunk[k] = _next_fold_chunk(int(chunk[k]), kk, mk,
+                                                    chunk_cap)
+                if schedule == "lockstep":
+                    spec_m = _next_chunk_len(
+                        spec_m, [(kk, mk) for _, kk, mk, _ in accepted],
+                        limited_flags, cap=chunk_cap)
+        self.stats.fold_sweeps = fold_sweeps
+
+
+class _SGLFoldEngine(_FoldEngine):
+    """SGL screening (TLFre / Gap-Safe) + group-bucketed sweeps."""
+
+    def __init__(self, *args, spec, alpha, Y, masks_d, col_n_f, gspec_f,
+                 lam_max_f, n_bound, mus_d, mus_np,
+                 min_group_bucket: int = 16, **kw):
+        super().__init__(*args, **kw)
+        self.spec = spec
+        self.alpha = alpha
+        self.Y = Y
+        self.masks_d = masks_d
+        self.col_n_f = col_n_f
+        self.gspec_f = gspec_f
+        self.lam_max_f = lam_max_f
+        self.n_bound = n_bound
+        self.mus_d = mus_d
+        self.mus_np = mus_np
+        self.centered = mus_d is not None
+        self.G = spec.num_groups
+        self.gid = np.asarray(spec.group_ids)
+        self.sizes_np = np.asarray(spec.sizes)
+        self.weights_np = np.asarray(spec.weights)
+        self.min_group_bucket = min_group_bucket
+
+    def _screen_call(self, act: np.ndarray, rem: np.ndarray):
+        a_idx = jnp.asarray(act)
+        X = self.X
+        return _screen_folds_sgl(
+            X, self.Y[a_idx], self.spec, self.alpha,
+            jnp.asarray(rem, X.dtype),
+            jnp.asarray(self.lam_bar[act], X.dtype), self.lam_max_f[a_idx],
+            jnp.asarray(self.Theta[act], X.dtype), self.n_bound[a_idx],
+            jnp.asarray(self.Beta[act], X.dtype),
+            jnp.asarray(self.Cprev[act], X.dtype), self.masks_d[a_idx],
+            self.col_n_f[a_idx], self.gspec_f[a_idx], self.safety,
+            self.mus_d[a_idx] if self.centered else None,
+            screen=self.screen_mode, use_pallas=self.pallas)
+
+    def make_launch(self, cohort) -> _Launch:
+        ts = time.perf_counter()
+        N, p, G = self.N, self.p, self.G
+        p_b = max(_feature_bucket(int(fkk[0].sum()), p, self.min_bucket,
+                                  self.margin)
+                  for _, fkk, _, _ in cohort)
+        S_list = [_expand_set(fkk[0], fkk, p_b) for _, fkk, _, _ in cohort]
+        g_b = min(max(_bucket(len(np.unique(self.gid[S])) + 2,
+                              self.min_group_bucket) for S in S_list), G + 1)
+        for (k, _, _, _), S in zip(cohort, S_list):
+            # same margin rule as the single-fold engine, per-fold c_prev
+            margin_fill_sgl(S, self.Cprev[k], self.gid, self.sizes_np,
+                            self.weights_np, p_b, g_b)
+
+        Ka = len(cohort)
+        m_ks = [mk for _, _, mk, _ in cohort]
+        len2 = _pow2_len(max(m_ks))
+        X_subs = np.zeros((Ka, N, p_b), dtype=self.X_np.dtype)
+        beta0s = np.zeros((Ka, p_b), dtype=self.X_np.dtype)
+        lam_pads = np.zeros((Ka, len2))
+        valids = np.zeros((Ka, len2), dtype=bool)
+        sub_specs = []
+        col_idxs = []
+        for t, ((k, _, mk, _), S) in enumerate(zip(cohort, S_list)):
+            sub_spec, col_idx = self.spec.bucketed_subset(S, p_b, g_b)
+            cols = self.X_np[:, col_idx]
+            if self.centered:
+                cols = cols - self.mus_np[k][col_idx][None, :]
+            X_subs[t, :, :len(col_idx)] = cols * self.masks_np[k][:, None]
+            beta0s[t, :len(col_idx)] = self.Beta[k][col_idx]
+            chunk = self.lambdas[self.j_pos[k]:self.j_pos[k] + mk]
+            lam_pads[t, :mk] = chunk
+            lam_pads[t, mk:] = chunk[-1]
+            valids[t, :mk] = True
+            sub_specs.append(sub_spec)
+            col_idxs.append(col_idx)
+        X = self.X
+        X_subs_d = jnp.asarray(X_subs)
+        L_subs = _spectral_norms_f(X_subs_d)
+        # cover every jit-cache-discriminating dim: persistent compile_keys
+        # sets span calls (and, in serving, problems of different N/dtype)
+        key = ("sgl-folds", Ka, N, p, G, str(X.dtype), self.max_iter,
+               self.check_every, self.mesh, p_b, g_b, self.spec.max_size,
+               len2, self.centered, self.pallas)
+        if key not in self.seen_keys:
+            self.seen_keys.add(key)
+            self.stats.n_compilations += 1
+        k_rows = jnp.asarray(np.asarray([k for k, _, _, _ in cohort]))
+        runner = _fold_sweep("sgl", self.mesh, Ka, self.max_iter,
+                             self.check_every, self.centered, self.pallas)
+        sweep_args = [
+            X, X_subs_d, self.Y[k_rows], self.spec, _stack_specs(sub_specs),
+            self.alpha, L_subs, jnp.asarray(lam_pads, X.dtype),
+            jnp.asarray(valids), jnp.asarray(beta0s), self.tol,
+            jnp.asarray(self.gap_scales[[k for k, _, _, _ in cohort]],
+                        X.dtype)]
+        if self.centered:
+            sweep_args.append(self.mus_d[k_rows])
+        outputs = runner(*sweep_args)                # asynchronous dispatch
+        self.solve_time += time.perf_counter() - ts
+        return _Launch(sweep=cohort, col_idxs=col_idxs, lam_pads=lam_pads,
+                       outputs=outputs, p_b=p_b, g_b=g_b)
+
+
+class _NNFoldEngine(_FoldEngine):
+    """Nonnegative-Lasso screening (DPC / Gap-Safe) + flat-bucket sweeps."""
+
+    def __init__(self, *args, Y, masks_d, col_n_f, lam_max_f, n_bound, **kw):
+        super().__init__(*args, **kw)
+        self.Y = Y
+        self.masks_d = masks_d
+        self.col_n_f = col_n_f
+        self.lam_max_f = lam_max_f
+        self.n_bound = n_bound
+
+    def _screen_call(self, act: np.ndarray, rem: np.ndarray):
+        a_idx = jnp.asarray(act)
+        X = self.X
+        return _screen_folds_nn(
+            X, self.Y[a_idx], jnp.asarray(rem, X.dtype),
+            jnp.asarray(self.lam_bar[act], X.dtype), self.lam_max_f[a_idx],
+            jnp.asarray(self.Theta[act], X.dtype), self.n_bound[a_idx],
+            jnp.asarray(self.Beta[act], X.dtype),
+            jnp.asarray(self.Cprev[act], X.dtype), self.masks_d[a_idx],
+            self.col_n_f[a_idx], self.safety, screen=self.screen_mode,
+            use_pallas=self.pallas)
+
+    def make_launch(self, cohort) -> _Launch:
+        ts = time.perf_counter()
+        N, p = self.N, self.p
+        p_b = max(_feature_bucket(int(fkk[0].sum()), p, self.min_bucket,
+                                  self.margin)
+                  for _, fkk, _, _ in cohort)
+        S_list = [_expand_set(fkk[0], fkk, p_b) for _, fkk, _, _ in cohort]
+        for (k, _, _, _), S in zip(cohort, S_list):
+            margin_fill_nn(S, self.Cprev[k], p_b)
+
+        Ka = len(cohort)
+        m_ks = [mk for _, _, mk, _ in cohort]
+        len2 = _pow2_len(max(m_ks))
+        X_subs = np.zeros((Ka, N, p_b), dtype=self.X_np.dtype)
+        beta0s = np.zeros((Ka, p_b), dtype=self.X_np.dtype)
+        lam_pads = np.zeros((Ka, len2))
+        valids = np.zeros((Ka, len2), dtype=bool)
+        col_idxs = []
+        for t, ((k, _, mk, _), S) in enumerate(zip(cohort, S_list)):
+            col_idx = np.nonzero(S)[0]
+            X_subs[t, :, :len(col_idx)] = (self.X_np[:, col_idx]
+                                           * self.masks_np[k][:, None])
+            beta0s[t, :len(col_idx)] = self.Beta[k][col_idx]
+            chunk = self.lambdas[self.j_pos[k]:self.j_pos[k] + mk]
+            lam_pads[t, :mk] = chunk
+            lam_pads[t, mk:] = chunk[-1]
+            valids[t, :mk] = True
+            col_idxs.append(col_idx)
+        X = self.X
+        X_subs_d = jnp.asarray(X_subs)
+        L_subs = _spectral_norms_f(X_subs_d)
+        key = ("nn-folds", Ka, N, p, str(X.dtype), self.max_iter,
+               self.check_every, self.mesh, p_b, len2, self.pallas)
+        if key not in self.seen_keys:
+            self.seen_keys.add(key)
+            self.stats.n_compilations += 1
+        k_rows = jnp.asarray(np.asarray([k for k, _, _, _ in cohort]))
+        runner = _fold_sweep("nn", self.mesh, Ka, self.max_iter,
+                             self.check_every, use_pallas=self.pallas)
+        outputs = runner(
+            X, X_subs_d, self.Y[k_rows], L_subs,
+            jnp.asarray(lam_pads, X.dtype), jnp.asarray(valids),
+            jnp.asarray(beta0s), self.tol,
+            jnp.asarray(self.gap_scales[[k for k, _, _, _ in cohort]],
+                        X.dtype))
+        self.solve_time += time.perf_counter() - ts
+        return _Launch(sweep=cohort, col_idxs=col_idxs, lam_pads=lam_pads,
+                       outputs=outputs, p_b=p_b, g_b=0)
 
 
 # ---------------------------------------------------------------------------
@@ -364,8 +777,9 @@ def sgl_fold_paths(X, y, spec: GroupSpec, alpha, masks, lambdas, *,
                    safety: float = 0.0, specnorm_method: str = "power",
                    check_every: int = 10, min_bucket: int = 64,
                    min_group_bucket: int = 16, margin: float = 0.125,
-                   chunk_init: int = 8, mesh=None, mus=None, init=None,
-                   compile_keys=None):
+                   chunk_init: int = 8, chunk_cap: int = 64,
+                   schedule: str = "elastic", use_pallas=None, mesh=None,
+                   mus=None, init=None, compile_keys=None):
     """Solve the SAME lambda grid on K masked row-subsets of (X, y).
 
     ``masks``: (K, N) 0/1 — 1 marks rows in subset k's training problem.
@@ -374,6 +788,15 @@ def sgl_fold_paths(X, y, spec: GroupSpec, alpha, masks, lambdas, *,
     per-fold-centered CV).  Returns ``(betas (K, J, p), kept (K, J),
     iters (K, J), stats, (screen_time, solve_time, setup_time))``.  Grid
     points at/above a fold's own lambda_max get exact zeros.
+
+    ``schedule='elastic'`` (default) gives every fold its own speculative
+    chunk length and dispatches cohorts of like-paced folds as independent
+    asynchronous launches — a slow fold no longer gates the fast folds'
+    chunks (``schedule='lockstep'`` restores the shared-chunk segment
+    loop).  ``chunk_cap`` bounds any fold's chunk.  ``use_pallas`` (auto:
+    float32 on TPU) routes the stacked grid screen through the fused
+    fold-stack kernels and the sweep prox/certification through the f32
+    kernels; float64 runs never engage them.
 
     ``mus`` (optional, (K, p)): per-fold train-row column means for
     leakage-free centering.  Fold k then solves on the centered design
@@ -391,6 +814,9 @@ def sgl_fold_paths(X, y, spec: GroupSpec, alpha, masks, lambdas, *,
     """
     if screen not in ("tlfre", "gapsafe", "none"):
         raise ValueError(f"unknown screen mode {screen!r}")
+    if schedule not in SCHEDULES:
+        raise ValueError(f"unknown schedule {schedule!r}; expected one of "
+                         f"{SCHEDULES}")
     X = jnp.asarray(X)
     N, p = X.shape
     G = spec.num_groups
@@ -402,6 +828,7 @@ def sgl_fold_paths(X, y, spec: GroupSpec, alpha, masks, lambdas, *,
     lambdas = np.asarray(lambdas, dtype=float)
     J = len(lambdas)
     centered = mus is not None
+    pallas = _pallas_active(use_pallas, X.dtype)
 
     # ---- per-fold geometry, batched into a handful of GEMMs ---------------
     t0 = time.perf_counter()
@@ -445,149 +872,27 @@ def sgl_fold_paths(X, y, spec: GroupSpec, alpha, masks, lambdas, *,
     jax.block_until_ready((col_n_f, gspec_f, n_bound))
     setup_time = time.perf_counter() - t0
 
-    # ---- host-side per-fold state -----------------------------------------
-    X_np = np.asarray(X)
-    mus_np = np.asarray(mus, dtype=float) if centered else None
-    xty_np = np.asarray(xty_f)
-    gid = np.asarray(spec.group_ids)
-    sizes_np = np.asarray(spec.sizes)
-    weights_np = np.asarray(spec.weights)
-    lam_max_safe = np.where(lam_max_np > 0, lam_max_np, 1.0)
-    Theta = masks_np * y_rows_np / lam_max_safe[:, None]      # (K, N)
-    Cprev = xty_np / lam_max_safe[:, None]                    # (K, p)
-    lam_bar = lam_max_np.copy()
-    Beta = np.zeros((K, p))
-    if init is not None:
-        lam_bar = np.asarray(init.lam_bar, dtype=float).copy()
-        Theta = np.asarray(init.theta, dtype=float).copy()
-        Cprev = np.asarray(init.c_theta, dtype=float).copy()
-        Beta = np.asarray(init.beta, dtype=float).copy()
-    betas_out = np.zeros((K, J, p))
-    iters_out = np.zeros((K, J), dtype=np.int64)
-    kept_out = np.zeros((K, J), dtype=np.int64)
-    gap_scales = np.maximum(0.5 * np.sum((masks_np * y_rows_np) ** 2,
-                                         axis=1), 1e-30)
     stats = EngineStats()
-    screen_time = 0.0
-    solve_time = 0.0
     seen_keys = compile_keys if compile_keys is not None else set()
-    spec_m = max(int(chunk_init), 1)
-
-    j_pos = np.zeros(K, dtype=int)
+    eng = _SGLFoldEngine(
+        X, masks_np, y_rows_np, lambdas, lam_max_np, np.asarray(xty_f),
+        tol=tol, max_iter=max_iter, safety=safety, check_every=check_every,
+        min_bucket=min_bucket, margin=margin, mesh=mesh, pallas=pallas,
+        screen_mode=screen, stats=stats, seen_keys=seen_keys,
+        spec=spec, alpha=alpha, Y=Y, masks_d=masks_d, col_n_f=col_n_f,
+        gspec_f=gspec_f, lam_max_f=lam_max_f, n_bound=n_bound, mus_d=mus_d,
+        mus_np=np.asarray(mus, dtype=float) if centered else None,
+        min_group_bucket=min_group_bucket)
+    if init is not None:
+        eng.load_init(init)
     for k in range(K):
-        while (j_pos[k] < J
-               and lambdas[j_pos[k]] >= lam_max_np[k] * (1.0 - 1e-12)):
-            j_pos[k] += 1                    # beta* = 0 at/above fold lam_max
+        while (eng.j_pos[k] < J
+               and lambdas[eng.j_pos[k]] >= lam_max_np[k] * (1.0 - 1e-12)):
+            eng.j_pos[k] += 1                # beta* = 0 at/above fold lam_max
+    eng.run(schedule, chunk_init, chunk_cap)
 
-    while (j_pos < J).any():
-        act = np.nonzero(j_pos < J)[0]
-        a_idx = jnp.asarray(act)
-        rem = _build_rem(lambdas, j_pos, act)
-
-        # ---- one stacked grid screen for every active fold ---------------
-        ts = time.perf_counter()
-        if screen == "none":
-            fk_np = np.ones((len(act), rem.shape[1], p), dtype=bool)
-        else:
-            fk = _screen_folds_sgl(
-                X, Y[a_idx], spec, alpha, jnp.asarray(rem, X.dtype),
-                jnp.asarray(lam_bar[act], X.dtype), lam_max_f[a_idx],
-                jnp.asarray(Theta[act], X.dtype), n_bound[a_idx],
-                jnp.asarray(Beta[act], X.dtype),
-                jnp.asarray(Cprev[act], X.dtype), masks_d[a_idx],
-                col_n_f[a_idx], gspec_f[a_idx], safety,
-                mus_d[a_idx] if centered else None, screen=screen)
-            fk_np = np.asarray(fk)                       # one host sync
-            stats.n_screens += 1                         # ONE GEMM issued
-        screen_time += time.perf_counter() - ts
-
-        # ---- per-fold feature sets on a COMMON bucket ---------------------
-        sweep = []          # (act_row, fold, fkk) entering this segment's sweep
-        for i, k in enumerate(act):
-            fkk = fk_np[i][:J - j_pos[k]]
-            counts = fkk.sum(axis=1)
-            if counts[0] == 0:
-                _advance_zero_prefix(k, counts, lambdas, j_pos, lam_bar,
-                                     Theta, Cprev, Beta, masks_np,
-                                     y_rows_np, xty_np)
-                continue
-            sweep.append((i, k, fkk))
-        if not sweep:
-            continue
-
-        p_b = max(_feature_bucket(int(fkk[0].sum()), p, min_bucket, margin)
-                  for _, _, fkk in sweep)
-        S_list = [_expand_set(fkk[0], fkk, p_b) for _, _, fkk in sweep]
-        g_b = min(max(_bucket(len(np.unique(gid[S])) + 2, min_group_bucket)
-                      for S in S_list), G + 1)
-        for (i, k, _), S in zip(sweep, S_list):
-            # same margin rule as the single-fold engine, per-fold c_prev
-            margin_fill_sgl(S, Cprev[k], gid, sizes_np, weights_np, p_b,
-                            g_b)
-
-        # ---- stacked bucketed subproblems + ONE fold-batched sweep --------
-        ts = time.perf_counter()
-        Ka = len(sweep)
-        m_ks = [min(J - j_pos[k], spec_m) for _, k, _ in sweep]
-        len2 = _pow2_len(max(m_ks))
-        X_subs = np.zeros((Ka, N, p_b), dtype=X_np.dtype)
-        beta0s = np.zeros((Ka, p_b), dtype=X_np.dtype)
-        lam_pads = np.zeros((Ka, len2))
-        valids = np.zeros((Ka, len2), dtype=bool)
-        sub_specs = []
-        col_idxs = []
-        for t, ((i, k, _), S) in enumerate(zip(sweep, S_list)):
-            sub_spec, col_idx = spec.bucketed_subset(S, p_b, g_b)
-            cols = X_np[:, col_idx]
-            if centered:
-                cols = cols - mus_np[k][col_idx][None, :]
-            X_subs[t, :, :len(col_idx)] = cols * masks_np[k][:, None]
-            beta0s[t, :len(col_idx)] = Beta[k][col_idx]
-            chunk = lambdas[j_pos[k]:j_pos[k] + m_ks[t]]
-            lam_pads[t, :m_ks[t]] = chunk
-            lam_pads[t, m_ks[t]:] = chunk[-1]
-            valids[t, :m_ks[t]] = True
-            sub_specs.append(sub_spec)
-            col_idxs.append(col_idx)
-        X_subs_d = jnp.asarray(X_subs)
-        L_subs = _spectral_norms_f(X_subs_d)
-        # cover every jit-cache-discriminating dim: persistent compile_keys
-        # sets span calls (and, in serving, problems of different N/dtype)
-        key = ("sgl-folds", Ka, N, p, G, str(X.dtype), max_iter,
-               check_every, mesh, p_b, g_b, spec.max_size, len2, centered)
-        if key not in seen_keys:
-            seen_keys.add(key)
-            stats.n_compilations += 1
-        k_rows = jnp.asarray(np.asarray([k for _, k, _ in sweep]))
-        runner = _fold_sweep("sgl", mesh, Ka, max_iter, check_every,
-                             centered)
-        sweep_args = [
-            X, X_subs_d, Y[k_rows], spec, _stack_specs(sub_specs), alpha,
-            L_subs, jnp.asarray(lam_pads, X.dtype), jnp.asarray(valids),
-            jnp.asarray(beta0s), tol, jnp.asarray(gap_scales[[k for _, k, _
-                                                              in sweep]],
-                                                  X.dtype)]
-        if centered:
-            sweep_args.append(mus_d[k_rows])
-        betas_b, thetas_b, cthetas_b, good_b, iters_b = runner(*sweep_args)
-        good_np = np.asarray(good_b)                     # one host sync
-        betas_np = np.asarray(betas_b)
-        thetas_np = np.asarray(thetas_b)
-        cthetas_np = np.asarray(cthetas_b)
-        iters_np = np.asarray(iters_b)
-        solve_time += time.perf_counter() - ts
-
-        accepted = _accept_prefixes(
-            sweep, m_ks, good_np, betas_np, thetas_np, cthetas_np, iters_np,
-            col_idxs, lam_pads, p, j_pos, betas_out, iters_out, kept_out,
-            Beta, Theta, Cprev, lam_bar, stats)
-        stats.n_segments += 1
-        stats.buckets.append((p_b, g_b, max(m_ks), min(a for a, _ in
-                                                       accepted)))
-        spec_m = _next_chunk_len(spec_m, accepted)
-
-    return betas_out, kept_out, iters_out, stats, (screen_time, solve_time,
-                                                   setup_time)
+    return eng.betas_out, eng.kept_out, eng.iters_out, stats, (
+        eng.screen_time, eng.solve_time, setup_time)
 
 
 # ---------------------------------------------------------------------------
@@ -597,17 +902,21 @@ def sgl_fold_paths(X, y, spec: GroupSpec, alpha, masks, lambdas, *,
 def nn_fold_paths(X, y, masks, lambdas, *, screen: str = "dpc", tol=1e-9,
                   max_iter: int = 20000, safety: float = 0.0,
                   check_every: int = 10, min_bucket: int = 64,
-                  margin: float = 0.125, chunk_init: int = 8, mesh=None,
-                  init=None, compile_keys=None):
+                  margin: float = 0.125, chunk_init: int = 8,
+                  chunk_cap: int = 64, schedule: str = "elastic",
+                  use_pallas=None, mesh=None, init=None, compile_keys=None):
     """Nonnegative-Lasso analogue of ``sgl_fold_paths`` (DPC / Gap-Safe).
 
-    ``y`` is (N,) or per-fold (K, N) rows; ``init`` / ``compile_keys`` as
-    in ``sgl_fold_paths`` (no centering — it breaks the nonnegativity
-    geometry).  A fold whose ``max_i <x_i, y>`` is nonpositive has the
-    all-zero path and simply drops out (the single-path driver raises
-    instead)."""
+    ``y`` is (N,) or per-fold (K, N) rows; ``schedule`` / ``chunk_cap`` /
+    ``use_pallas`` / ``init`` / ``compile_keys`` as in ``sgl_fold_paths``
+    (no centering — it breaks the nonnegativity geometry).  A fold whose
+    ``max_i <x_i, y>`` is nonpositive has the all-zero path and simply
+    drops out (the single-path driver raises instead)."""
     if screen not in ("dpc", "gapsafe", "none"):
         raise ValueError(f"unknown screen mode {screen!r}")
+    if schedule not in SCHEDULES:
+        raise ValueError(f"unknown schedule {schedule!r}; expected one of "
+                         f"{SCHEDULES}")
     X = jnp.asarray(X)
     N, p = X.shape
     masks_np = np.asarray(masks, dtype=float)
@@ -617,6 +926,7 @@ def nn_fold_paths(X, y, masks, lambdas, *, screen: str = "dpc", tol=1e-9,
         y_rows_np = np.broadcast_to(y_rows_np, (K, N))
     lambdas = np.asarray(lambdas, dtype=float)
     J = len(lambdas)
+    pallas = _pallas_active(use_pallas, X.dtype)
 
     t0 = time.perf_counter()
     masks_d = jnp.asarray(masks_np, X.dtype)
@@ -629,128 +939,28 @@ def nn_fold_paths(X, y, masks, lambdas, *, screen: str = "dpc", tol=1e-9,
     jax.block_until_ready((col_n_f, n_bound))
     setup_time = time.perf_counter() - t0
 
-    X_np = np.asarray(X)
-    xty_np = np.asarray(xty_f)
-    lam_max_safe = np.where(lam_max_np > 0, lam_max_np, 1.0)
-    Theta = masks_np * y_rows_np / lam_max_safe[:, None]
-    Cprev = xty_np / lam_max_safe[:, None]
-    lam_bar = lam_max_safe.copy()
-    Beta = np.zeros((K, p))
-    if init is not None:
-        lam_bar = np.asarray(init.lam_bar, dtype=float).copy()
-        Theta = np.asarray(init.theta, dtype=float).copy()
-        Cprev = np.asarray(init.c_theta, dtype=float).copy()
-        Beta = np.asarray(init.beta, dtype=float).copy()
-    betas_out = np.zeros((K, J, p))
-    iters_out = np.zeros((K, J), dtype=np.int64)
-    kept_out = np.zeros((K, J), dtype=np.int64)
-    gap_scales = np.maximum(0.5 * np.sum((masks_np * y_rows_np) ** 2,
-                                         axis=1), 1e-30)
     stats = EngineStats()
-    screen_time = 0.0
-    solve_time = 0.0
     seen_keys = compile_keys if compile_keys is not None else set()
-    spec_m = max(int(chunk_init), 1)
-
-    j_pos = np.zeros(K, dtype=int)
+    eng = _NNFoldEngine(
+        X, masks_np, y_rows_np, lambdas, lam_max_np, np.asarray(xty_f),
+        tol=tol, max_iter=max_iter, safety=safety, check_every=check_every,
+        min_bucket=min_bucket, margin=margin, mesh=mesh, pallas=pallas,
+        screen_mode=screen, stats=stats, seen_keys=seen_keys,
+        Y=Y, masks_d=masks_d, col_n_f=col_n_f, lam_max_f=lam_max_f,
+        n_bound=n_bound)
+    if init is not None:
+        eng.load_init(init)
     for k in range(K):
         if lam_max_np[k] <= 0:
-            j_pos[k] = J                       # all-zero path for this fold
+            eng.j_pos[k] = J                   # all-zero path for this fold
             continue
-        while (j_pos[k] < J
-               and lambdas[j_pos[k]] >= lam_max_np[k] * (1.0 - 1e-12)):
-            j_pos[k] += 1
+        while (eng.j_pos[k] < J
+               and lambdas[eng.j_pos[k]] >= lam_max_np[k] * (1.0 - 1e-12)):
+            eng.j_pos[k] += 1
+    eng.run(schedule, chunk_init, chunk_cap)
 
-    while (j_pos < J).any():
-        act = np.nonzero(j_pos < J)[0]
-        a_idx = jnp.asarray(act)
-        rem = _build_rem(lambdas, j_pos, act)
-
-        ts = time.perf_counter()
-        if screen == "none":
-            fk_np = np.ones((len(act), rem.shape[1], p), dtype=bool)
-        else:
-            fk = _screen_folds_nn(
-                X, Y[a_idx], jnp.asarray(rem, X.dtype),
-                jnp.asarray(lam_bar[act], X.dtype), lam_max_f[a_idx],
-                jnp.asarray(Theta[act], X.dtype), n_bound[a_idx],
-                jnp.asarray(Beta[act], X.dtype),
-                jnp.asarray(Cprev[act], X.dtype), masks_d[a_idx],
-                col_n_f[a_idx], safety, screen=screen)
-            fk_np = np.asarray(fk)
-            stats.n_screens += 1
-        screen_time += time.perf_counter() - ts
-
-        sweep = []
-        for i, k in enumerate(act):
-            fkk = fk_np[i][:J - j_pos[k]]
-            counts = fkk.sum(axis=1)
-            if counts[0] == 0:
-                _advance_zero_prefix(k, counts, lambdas, j_pos, lam_bar,
-                                     Theta, Cprev, Beta, masks_np,
-                                     y_rows_np, xty_np)
-                continue
-            sweep.append((i, k, fkk))
-        if not sweep:
-            continue
-
-        p_b = max(_feature_bucket(int(fkk[0].sum()), p, min_bucket, margin)
-                  for _, _, fkk in sweep)
-        S_list = [_expand_set(fkk[0], fkk, p_b) for _, _, fkk in sweep]
-        for (i, k, _), S in zip(sweep, S_list):
-            margin_fill_nn(S, Cprev[k], p_b)
-
-        ts = time.perf_counter()
-        Ka = len(sweep)
-        m_ks = [min(J - j_pos[k], spec_m) for _, k, _ in sweep]
-        len2 = _pow2_len(max(m_ks))
-        X_subs = np.zeros((Ka, N, p_b), dtype=X_np.dtype)
-        beta0s = np.zeros((Ka, p_b), dtype=X_np.dtype)
-        lam_pads = np.zeros((Ka, len2))
-        valids = np.zeros((Ka, len2), dtype=bool)
-        col_idxs = []
-        for t, ((i, k, _), S) in enumerate(zip(sweep, S_list)):
-            col_idx = np.nonzero(S)[0]
-            X_subs[t, :, :len(col_idx)] = (X_np[:, col_idx]
-                                           * masks_np[k][:, None])
-            beta0s[t, :len(col_idx)] = Beta[k][col_idx]
-            chunk = lambdas[j_pos[k]:j_pos[k] + m_ks[t]]
-            lam_pads[t, :m_ks[t]] = chunk
-            lam_pads[t, m_ks[t]:] = chunk[-1]
-            valids[t, :m_ks[t]] = True
-            col_idxs.append(col_idx)
-        X_subs_d = jnp.asarray(X_subs)
-        L_subs = _spectral_norms_f(X_subs_d)
-        key = ("nn-folds", Ka, N, p, str(X.dtype), max_iter, check_every,
-               mesh, p_b, len2)
-        if key not in seen_keys:
-            seen_keys.add(key)
-            stats.n_compilations += 1
-        k_rows = jnp.asarray(np.asarray([k for _, k, _ in sweep]))
-        runner = _fold_sweep("nn", mesh, Ka, max_iter, check_every)
-        betas_b, thetas_b, cthetas_b, good_b, iters_b = runner(
-            X, X_subs_d, Y[k_rows], L_subs,
-            jnp.asarray(lam_pads, X.dtype), jnp.asarray(valids),
-            jnp.asarray(beta0s), tol,
-            jnp.asarray(gap_scales[[k for _, k, _ in sweep]], X.dtype))
-        good_np = np.asarray(good_b)
-        betas_np = np.asarray(betas_b)
-        thetas_np = np.asarray(thetas_b)
-        cthetas_np = np.asarray(cthetas_b)
-        iters_np = np.asarray(iters_b)
-        solve_time += time.perf_counter() - ts
-
-        accepted = _accept_prefixes(
-            sweep, m_ks, good_np, betas_np, thetas_np, cthetas_np, iters_np,
-            col_idxs, lam_pads, p, j_pos, betas_out, iters_out, kept_out,
-            Beta, Theta, Cprev, lam_bar, stats)
-        stats.n_segments += 1
-        stats.buckets.append((p_b, 0, max(m_ks), min(a for a, _ in
-                                                     accepted)))
-        spec_m = _next_chunk_len(spec_m, accepted)
-
-    return betas_out, kept_out, iters_out, stats, (screen_time, solve_time,
-                                                   setup_time)
+    return eng.betas_out, eng.kept_out, eng.iters_out, stats, (
+        eng.screen_time, eng.solve_time, setup_time)
 
 
 # ---------------------------------------------------------------------------
@@ -806,13 +1016,14 @@ def sgl_cv(X, y, spec: GroupSpec, alpha, *, n_folds: int = 5, folds=None,
 
     All folds solve the SAME grid (anchored at the full-data lambda_max so
     held-out errors are comparable per grid point) with the fold-batched
-    engine: one stacked screening GEMM per segment and one vmapped /
-    mesh-sharded sweep per segment.  Per-fold solutions carry the same
-    full-problem duality-gap certificates as the single-fold engine, so
-    they match independent per-fold ``sgl_path`` runs to solver precision.
-    ``folds`` overrides the deterministic ``kfold_indices`` split; ``mesh``
-    (from ``launch.mesh.make_fold_mesh``) shards the fold axis;
-    ``center='per-fold'`` scores leakage-free per-fold-centered models.
+    engine: one stacked screening GEMM per scheduler step and one vmapped /
+    mesh-sharded sweep per cohort launch.  Per-fold solutions carry the
+    same full-problem duality-gap certificates as the single-fold engine,
+    so they match independent per-fold ``sgl_path`` runs to solver
+    precision.  ``folds`` overrides the deterministic ``kfold_indices``
+    split; ``mesh`` (from ``launch.mesh.make_fold_mesh``) shards the fold
+    axis; ``center='per-fold'`` scores leakage-free per-fold-centered
+    models.
     """
     from .problem import Plan, Problem, warn_legacy_entry_point
     from .session import SGLSession

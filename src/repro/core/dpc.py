@@ -60,21 +60,30 @@ def dpc_screen_grid(X, y, lambdas, theta_bar, n_vec, col_norms,
 
 
 def dpc_screen_grid_folds(X, Y, lambdas, Theta_bar, N_vecs, col_norms_f,
-                          safety: float = 0.0):
+                          safety: float = 0.0, use_pallas: bool = False):
     """Fold-batched Theorem 22: K folds x L lambdas in ONE GEMM.
 
     Same masked-row convention as ``screening.tlfre_screen_grid_folds``:
     per-fold vectors are (K, N) with held-out rows zeroed, ``lambdas`` is
     (K, L), ``col_norms_f`` (K, p).  (No centering support here — per-fold
     centering is an SGL-only feature; centering X breaks the nonnegativity
-    geometry.)  Returns (feat_keep (K, L, p), radii (K, L))."""
-    from .screening import grid_ball_geometry_folds
+    geometry.)  ``use_pallas`` fuses the post-GEMM threshold
+    ``C + r ||x_i|| >= 1`` into one streaming pass over the (K*L, p) layout
+    (float32 only — float64 exactness runs refuse the kernel route).
+    Returns (feat_keep (K, L, p), radii (K, L))."""
+    from .screening import _require_f32_for_pallas, grid_ball_geometry_folds
     K, L = lambdas.shape
     N = Y.shape[1]
     centers, radii = grid_ball_geometry_folds(Y, lambdas, Theta_bar, N_vecs)
     radii = radii * (1.0 + safety)
-    omega = (centers.reshape(K * L, N) @ X).reshape(K, L, X.shape[1])
-    omega = omega + radii[:, :, None] * col_norms_f[:, None, :]
+    C = (centers.reshape(K * L, N) @ X).reshape(K, L, X.shape[1])
+    if use_pallas:
+        _require_f32_for_pallas(C.dtype)
+        from ..kernels import ops as _kops
+        return _kops.dpc_screen_folds(C.astype(jnp.float32),
+                                      radii.astype(jnp.float32),
+                                      col_norms_f.astype(jnp.float32)), radii
+    omega = C + radii[:, :, None] * col_norms_f[:, None, :]
     return omega >= 1.0, radii
 
 

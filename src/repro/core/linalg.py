@@ -58,8 +58,12 @@ def group_spectral_norms(X: jnp.ndarray, spec: GroupSpec,
 
     def body(carry, inputs):
         start, size = inputs
+        # both slice indices must share the (int32) index dtype — a python
+        # 0 promotes to int64 under jax_enable_x64 and dynamic_slice rejects
+        # the mix
+        row0 = jnp.zeros((), dtype=start.dtype)
         Xg = jax.lax.dynamic_slice(
-            X, (0, jnp.minimum(start, X.shape[1] - n_max)), (N, n_max))
+            X, (row0, jnp.minimum(start, X.shape[1] - n_max)), (N, n_max))
         # dynamic_slice clamps; rebuild the exact window mask from start/size.
         base = jnp.minimum(start, X.shape[1] - n_max)
         offs = jnp.arange(n_max) + base

@@ -87,21 +87,32 @@ class EngineStats:
     shapes — actual solver compilations; the O(log p) claim is about this
     number.  ``n_rejected`` counts speculative rows whose certificate
     failed (at most one solved row per segment is wasted; the rest are
-    skipped on device)."""
+    skipped on device).  ``n_pallas_screens`` counts grid screens that ran
+    through the fused Pallas kernels (always 0 on float64 paths — the
+    kernels are float32 and ``_pallas_active`` never engages them there).
+    ``fold_sweeps`` (fold drivers only) is a per-fold count of sweep
+    launches the fold participated in — under elastic scheduling fast
+    folds stop paying launches gated by slow folds, so their counts drop
+    below the lockstep numbers."""
     n_segments: int = 0
     n_screens: int = 0
     n_compilations: int = 0
     n_rejected: int = 0
+    n_pallas_screens: int = 0
     buckets: list = dataclasses.field(default_factory=list)  # (p_b, g_b, m, k)
+    fold_sweeps: object = None   # (K,) launch counts from the last fold run
 
     def merge(self, other: "EngineStats", *, buckets: bool = True) -> None:
         """Accumulate another run's counters into this one (session /
         server aggregation).  ``buckets=False`` keeps the bucket log out of
-        aggregates where per-run bucket tuples would be meaningless."""
+        aggregates where per-run bucket tuples would be meaningless.
+        ``fold_sweeps`` is per-run (fold identity differs across runs), so
+        aggregates never accumulate it."""
         self.n_segments += other.n_segments
         self.n_screens += other.n_screens
         self.n_compilations += other.n_compilations
         self.n_rejected += other.n_rejected
+        self.n_pallas_screens += other.n_pallas_screens
         if buckets:
             self.buckets.extend(other.buckets)
 
@@ -444,6 +455,7 @@ def sgl_path_batched(X, y, spec: GroupSpec, alpha, *, lambdas=None,
                 fk = fk & fk_dyn
             fk_np = np.asarray(fk)[:L_rem]      # one host sync
             stats.n_screens += 1
+            stats.n_pallas_screens += int(pallas)
         screen_time += time.perf_counter() - ts
 
         row_counts = fk_np.sum(axis=1)

@@ -147,11 +147,25 @@ class Plan:
     specnorm_method: str = "power"
     check_every: int = 10
     # ---- batched-engine knobs --------------------------------------------
-    use_pallas: Optional[bool] = None
+    use_pallas: Optional[bool] = None  # fused f32 kernels (auto: f32 on TPU;
+    #                              float64 runs never engage them) — covers
+    #                              the path engine AND the fold-stack CV
+    #                              screens/sweeps
     min_bucket: int = 64
     min_group_bucket: int = 16
     margin: float = 0.125
-    chunk_init: int = 8
+    chunk_init: int = 8          # initial speculative chunk length
+    # ---- elastic fold scheduling (cv / refine / stability / serving) ------
+    schedule: str = "elastic"    # "elastic": every fold carries its own
+    #                              speculative chunk (doubling on certified
+    #                              chunks, throttling only itself on a
+    #                              failure) and like-paced cohorts dispatch
+    #                              as independent asynchronous launches —
+    #                              a slow fold never gates fast folds.
+    #                              "lockstep": the shared-chunk segment
+    #                              loop (one launch at a time), kept for
+    #                              A/B benchmarking.
+    chunk_cap: int = 64          # upper bound on any fold's chunk length
     # ---- model selection (cv / refine) -----------------------------------
     n_folds: int = 5
     folds: Optional[list] = None           # explicit [(train, val)] pairs
@@ -189,6 +203,10 @@ class Plan:
         self.resolved_screen(penalty)
         if self.engine not in ("batched", "legacy"):
             raise ValueError(f"unknown engine {self.engine!r}")
+        if self.schedule not in ("elastic", "lockstep"):
+            raise ValueError(f"unknown schedule {self.schedule!r}")
+        if self.chunk_cap < 2:
+            raise ValueError("chunk_cap must be >= 2")
         if self.center not in ("global", "per-fold"):
             raise ValueError(f"unknown center mode {self.center!r}")
         if self.selection not in ("min", "1se"):

@@ -81,15 +81,28 @@ def screen_stats(spec: GroupSpec, res: ScreenResult):
     return g_drop, feats_in_dropped, l2_extra
 
 
+def _require_f32_for_pallas(dtype) -> None:
+    """The Pallas kernels compute in float32; silently round-tripping a
+    float64 exactness run through them would destroy the screening-rule
+    proofs.  Raise at trace time instead (the engines gate kernel use via
+    ``_pallas_active``, which never engages them for float64)."""
+    if dtype == jnp.float64:
+        raise TypeError(
+            "use_pallas=True would round-trip float64 screening statistics "
+            "through the float32 Pallas kernels; float64 exactness runs "
+            "must use the jnp path (use_pallas=False)")
+
+
 def _grid_group_stats(spec: GroupSpec, C: jnp.ndarray, use_pallas: bool):
     """(||S_1(C_g)||, ||C_g||_inf) per grid row: (L, p) -> ((L, G), (L, G)).
 
     ``use_pallas`` routes the fused reduction through the ``screen_norms``
     kernel on the padded (L*G, n_max) layout (float32 — callers must carry a
     nonzero ``safety`` inflation; the float64 exactness path keeps the jnp
-    segment reductions).
+    segment reductions and float64 inputs refuse the kernel route).
     """
     if use_pallas:
+        _require_f32_for_pallas(C.dtype)
         from ..kernels import ops as _kops
         L = C.shape[0]
         c_pad = jnp.where(spec.pad_mask[None], C[:, spec.pad_index], 0.0)
@@ -99,6 +112,25 @@ def _grid_group_stats(spec: GroupSpec, C: jnp.ndarray, use_pallas: bool):
     c_norm = jax.vmap(lambda r: group_norms(spec, r))(shrink(C))   # (L, G)
     c_inf = jax.vmap(lambda r: group_max_abs(spec, r))(jnp.abs(C))
     return c_norm, c_inf
+
+
+def _grid_group_stats_folds(spec: GroupSpec, C: jnp.ndarray,
+                            use_pallas: bool):
+    """Fold-stacked group statistics: (K, L, p) -> ((K, L, G), (K, L, G)).
+
+    ``use_pallas`` routes the whole (K*L, p) CV layout through ONE fused
+    ``screen_norms_folds`` kernel launch (float32, same f64 refusal as
+    ``_grid_group_stats``); the fallback vmaps the jnp segment reductions
+    over the fold axis."""
+    if use_pallas:
+        _require_f32_for_pallas(C.dtype)
+        from ..kernels import ops as _kops
+        c_pad = jnp.where(spec.pad_mask[None, None],
+                          C[:, :, spec.pad_index], 0.0)
+        snorm2, cinf = _kops.screen_norms_folds(
+            c_pad.astype(jnp.float32), spec.pad_mask)
+        return jnp.sqrt(snorm2).astype(C.dtype), cinf.astype(C.dtype)
+    return jax.vmap(lambda Ck: _grid_group_stats(spec, Ck, False))(C)
 
 
 def _grid_rules(spec: GroupSpec, alpha, C, radii, col_norms, group_specnorms,
@@ -159,9 +191,27 @@ def grid_ball_geometry_folds(Y, lambdas, Theta_bar, N_vecs):
     return jax.vmap(grid_ball_geometry)(Y, lambdas, Theta_bar, N_vecs)
 
 
+def _grid_rules_folds(spec: GroupSpec, alpha, C, radii, col_norms_f,
+                      group_specnorms_f, use_pallas: bool = False):
+    """Theorems 15/16 for every (fold, lambda, group/feature) triple.
+
+    ``C`` (K, L, p), ``radii`` (K, L), per-fold norms (K, p) / (K, G).
+    The group statistics go through ``_grid_group_stats_folds`` so the f32
+    path keeps the fused fold-stack kernel."""
+    c_norm, c_inf = _grid_group_stats_folds(spec, C, use_pallas)
+    r_g = radii[:, :, None] * group_specnorms_f[:, None, :]
+    s = sup_shrink_norm(c_norm, c_inf, r_g)
+    group_keep = s >= alpha * spec.weights[None, None, :]
+
+    t = jnp.abs(C) + radii[:, :, None] * col_norms_f[:, None, :]
+    feat_keep = (t > 1.0) & group_keep[:, :, spec.group_ids]
+    return group_keep, feat_keep
+
+
 def tlfre_screen_grid_folds(X, Y, spec: GroupSpec, alpha, lambdas, Theta_bar,
                             N_vecs, col_norms_f, group_specnorms_f,
-                            safety: float = 0.0, mus=None):
+                            safety: float = 0.0, mus=None,
+                            use_pallas: bool = False):
     """Fold-batched TLFre grid screen: K folds x L lambdas in ONE GEMM.
 
     Stacks the K fold ball geometries into a single
@@ -173,8 +223,9 @@ def tlfre_screen_grid_folds(X, Y, spec: GroupSpec, alpha, lambdas, Theta_bar,
     fold k's centered design is ``M_k X - m_k mu_k^T``, so every center/X
     inner product needs only the rank-one correction
     ``C -= sum(center) * mu_k`` — the shared GEMM survives leakage-free
-    per-fold centering untouched.  Returns (group_keep (K, L, G),
-    feat_keep (K, L, p), radii (K, L))."""
+    per-fold centering untouched.  ``use_pallas`` routes the group-stat
+    reductions through the fused fold-stack kernel (f32 only).  Returns
+    (group_keep (K, L, G), feat_keep (K, L, p), radii (K, L))."""
     K, L = lambdas.shape
     N = Y.shape[1]
     centers, radii = grid_ball_geometry_folds(Y, lambdas, Theta_bar, N_vecs)
@@ -182,19 +233,33 @@ def tlfre_screen_grid_folds(X, Y, spec: GroupSpec, alpha, lambdas, Theta_bar,
     C = (centers.reshape(K * L, N) @ X).reshape(K, L, X.shape[1])
     if mus is not None:
         C = C - centers.sum(axis=2)[:, :, None] * mus[:, None, :]
-    group_keep, feat_keep = jax.vmap(
-        _grid_rules, in_axes=(None, None, 0, 0, 0, 0))(
-            spec, alpha, C, radii, col_norms_f, group_specnorms_f)
+    group_keep, feat_keep = _grid_rules_folds(spec, alpha, C, radii,
+                                              col_norms_f, group_specnorms_f,
+                                              use_pallas)
     return group_keep, feat_keep, radii
 
 
 def gap_safe_screen_grid_folds(spec: GroupSpec, alpha, c_thetas, radii,
-                               col_norms_f, group_specnorms_f):
+                               col_norms_f, group_specnorms_f,
+                               use_pallas: bool = False):
     """Fold-batched Gap-Safe grid rules: per-fold fixed centers ``c_thetas``
     (K, p), per-(fold, lambda) radii (K, L).  No GEMM — the K centers are
-    already reduced to K GEMVs by the caller."""
-    return jax.vmap(gap_safe_screen_grid, in_axes=(None, None, 0, 0, 0, 0))(
-        spec, alpha, c_thetas, radii, col_norms_f, group_specnorms_f)
+    already reduced to K GEMVs by the caller.
+
+    The group statistics depend on the center only, so they are evaluated
+    ONCE per fold on the (K, 1, p) layout (fused kernel when ``use_pallas``)
+    and broadcast across the grid — L-fold less reduction work than the
+    naive per-(fold, lambda) evaluation."""
+    K, L = radii.shape
+    c_norm, c_inf = _grid_group_stats_folds(spec, c_thetas[:, None, :],
+                                            use_pallas)       # (K, 1, G)
+    r_g = radii[:, :, None] * group_specnorms_f[:, None, :]   # (K, L, G)
+    s = sup_shrink_norm(c_norm, c_inf, r_g)
+    group_keep = s >= alpha * spec.weights[None, None, :]
+    t = (jnp.abs(c_thetas)[:, None, :]
+         + radii[:, :, None] * col_norms_f[:, None, :])
+    feat_keep = (t > 1.0) & group_keep[:, :, spec.group_ids]
+    return group_keep, feat_keep
 
 
 def gap_safe_screen_grid(spec: GroupSpec, alpha, c_theta, radii, col_norms,

@@ -254,15 +254,18 @@ class SGLSession:
                 safety=plan.safety, specnorm_method=plan.specnorm_method,
                 check_every=plan.check_every, min_bucket=plan.min_bucket,
                 min_group_bucket=plan.min_group_bucket, margin=plan.margin,
-                chunk_init=plan.chunk_init, mesh=plan.mesh, mus=mus,
-                compile_keys=self.compile_keys)
+                chunk_init=plan.chunk_init, chunk_cap=plan.chunk_cap,
+                schedule=plan.schedule, use_pallas=plan.use_pallas,
+                mesh=plan.mesh, mus=mus, compile_keys=self.compile_keys)
         else:
             betas, kept, iters, stats, times = nn_fold_paths(
                 prob.X, y_rows, masks, lambdas, screen=screen, tol=plan.tol,
                 max_iter=plan.max_iter, safety=plan.safety,
                 check_every=plan.check_every, min_bucket=plan.min_bucket,
                 margin=plan.margin, chunk_init=plan.chunk_init,
-                mesh=plan.mesh, compile_keys=self.compile_keys)
+                chunk_cap=plan.chunk_cap, schedule=plan.schedule,
+                use_pallas=plan.use_pallas, mesh=plan.mesh,
+                compile_keys=self.compile_keys)
         res = _cv_statistics(np.asarray(prob.X), np.asarray(prob.y), folds,
                              np.asarray(lambdas, float), betas, lam_max,
                              kept, stats, times, iters=iters, mus=mus,
@@ -375,15 +378,19 @@ class SGLSession:
                 safety=plan.safety, specnorm_method=plan.specnorm_method,
                 check_every=plan.check_every, min_bucket=plan.min_bucket,
                 min_group_bucket=plan.min_group_bucket, margin=plan.margin,
-                chunk_init=plan.chunk_init, mesh=plan.mesh, mus=st.mus,
-                init=init, compile_keys=self.compile_keys)
+                chunk_init=plan.chunk_init, chunk_cap=plan.chunk_cap,
+                schedule=plan.schedule, use_pallas=plan.use_pallas,
+                mesh=plan.mesh, mus=st.mus, init=init,
+                compile_keys=self.compile_keys)
         else:
             betas, kept, iters, stats, times = nn_fold_paths(
                 prob.X, st.y_rows, st.masks, fine, screen=screen,
                 tol=plan.tol, max_iter=plan.max_iter, safety=plan.safety,
                 check_every=plan.check_every, min_bucket=plan.min_bucket,
                 margin=plan.margin, chunk_init=plan.chunk_init,
-                mesh=plan.mesh, init=init, compile_keys=self.compile_keys)
+                chunk_cap=plan.chunk_cap, schedule=plan.schedule,
+                use_pallas=plan.use_pallas, mesh=plan.mesh, init=init,
+                compile_keys=self.compile_keys)
         fine_res = _cv_statistics(np.asarray(prob.X), np.asarray(prob.y),
                                   coarse.folds, fine, betas, coarse.lam_max,
                                   kept, stats, times, iters=iters,
@@ -425,8 +432,9 @@ class SGLSession:
                 specnorm_method=plan.specnorm_method,
                 check_every=plan.check_every, min_bucket=plan.min_bucket,
                 min_group_bucket=plan.min_group_bucket, margin=plan.margin,
-                chunk_init=plan.chunk_init, mesh=plan.mesh,
-                compile_keys=self.compile_keys)
+                chunk_init=plan.chunk_init, chunk_cap=plan.chunk_cap,
+                schedule=plan.schedule, use_pallas=plan.use_pallas,
+                mesh=plan.mesh, compile_keys=self.compile_keys)
             counts += (np.abs(betas) > plan.active_tol).sum(axis=0)
             agg.merge(stats, buckets=False)
         self._absorb(agg)

@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from .xtv import xtv_pallas
-from .screen_norms import screen_norms_pallas
+from .screen_norms import (dpc_screen_folds_pallas, screen_norms_folds_pallas,
+                           screen_norms_pallas)
 from .sgl_prox import sgl_prox_pallas
 
 
@@ -52,6 +53,32 @@ def screen_norms_batched(c_pad_grid, mask, interpret: bool | None = None):
         L * G, n_max)
     snorm2, cinf = screen_norms_pallas(flat, mask_flat, interpret=interpret)
     return snorm2.reshape(L, G), cinf.reshape(L, G)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def screen_norms_folds(c_pad_folds, mask, interpret: bool | None = None):
+    """Fold-stack variant of ``screen_norms``: c_pad_folds (K, L, G, n_max)
+    with a shared (G, n_max) mask -> ((K, L, G), (K, L, G)) float32.
+
+    The (K*L, p) CV layout of the fold-batched engine: all K folds x L
+    remaining lambdas are reduced in ONE kernel launch whose grid tiles
+    fold-x-lambda rows against group blocks (``screen_norms_folds_pallas``),
+    so the stacked screening GEMM's reduction half stays fused."""
+    if interpret is None:
+        interpret = _interpret_default()
+    K, L, G, n_max = c_pad_folds.shape
+    flat = c_pad_folds.reshape(K * L, G, n_max)
+    snorm2, cinf = screen_norms_folds_pallas(flat, mask, interpret=interpret)
+    return snorm2.reshape(K, L, G), cinf.reshape(K, L, G)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dpc_screen_folds(C, radii, col_norms_f, interpret: bool | None = None):
+    """Fused fold-stacked DPC rule: C (K, L, p), radii (K, L), col_norms_f
+    (K, p) -> feat_keep (K, L, p) bool, float32 compute."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return dpc_screen_folds_pallas(C, radii, col_norms_f, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -56,3 +56,116 @@ def screen_norms_pallas(c_pad: jnp.ndarray, mask: jnp.ndarray, *,
         interpret=interpret,
     )(cp, mp)
     return snorm2[:G, 0], cinf[:G, 0]
+
+
+# ---------------------------------------------------------------------------
+# Fold-stacked variant: the (K*L, G, n_max) CV layout
+# ---------------------------------------------------------------------------
+
+DEFAULT_BKL = 8
+DEFAULT_BG_FOLDS = 128
+
+
+def _screen_norms_folds_kernel(c_ref, m_ref, s_ref, i_ref):
+    c = jnp.where(m_ref[...][None], c_ref[...].astype(jnp.float32), 0.0)
+    a = jnp.abs(c)
+    sh = jnp.maximum(a - 1.0, 0.0)
+    s_ref[...] = jnp.sum(sh * sh, axis=2)
+    i_ref[...] = jnp.max(a, axis=2)
+
+
+def screen_norms_folds_pallas(c_pad_kl: jnp.ndarray, mask: jnp.ndarray, *,
+                              block_kl: int = DEFAULT_BKL,
+                              block_g: int = DEFAULT_BG_FOLDS,
+                              interpret: bool = False):
+    """Fold-stacked screening statistics for the CV engine.
+
+    ``c_pad_kl``: (K*L, G, n_max) — every (fold, lambda) pair's correlation
+    vector on the padded group layout; ``mask``: (G, n_max) shared validity
+    mask (all rows see the same GroupSpec).  Returns
+    ``(snorm2 (K*L, G), cinf (K*L, G))`` float32.
+
+    The grid tiles fold-x-lambda rows against group blocks, so one kernel
+    launch streams the whole stacked screen — the reduction half of the
+    ``(K*L, N) x (N, p)`` fold-stack GEMM — with the same padded-lane
+    masking as ``screen_norms_pallas`` (the mask block is indexed by the
+    group tile only and reused across every fold-x-lambda tile).
+    """
+    KL, G, n_max = c_pad_kl.shape
+    KLp = -(-KL // block_kl) * block_kl
+    Gp = -(-G // block_g) * block_g
+    nl = -(-n_max // 128) * 128
+    cp = jnp.pad(c_pad_kl, ((0, KLp - KL), (0, Gp - G), (0, nl - n_max)))
+    mp = jnp.pad(mask, ((0, Gp - G), (0, nl - n_max)))
+
+    snorm2, cinf = pl.pallas_call(
+        _screen_norms_folds_kernel,
+        grid=(KLp // block_kl, Gp // block_g),
+        in_specs=[
+            pl.BlockSpec((block_kl, block_g, nl), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((block_g, nl), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_kl, block_g), lambda i, j: (i, j)),
+            pl.BlockSpec((block_kl, block_g), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((KLp, Gp), jnp.float32),
+            jax.ShapeDtypeStruct((KLp, Gp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cp, mp)
+    return snorm2[:KL, :G], cinf[:KL, :G]
+
+
+# ---------------------------------------------------------------------------
+# Fold-stacked DPC rule: fused omega = C + r * ||x_i|| threshold
+# ---------------------------------------------------------------------------
+
+DEFAULT_BL = 8
+DEFAULT_BP = 512
+
+
+def _dpc_screen_folds_kernel(c_ref, r_ref, n_ref, o_ref):
+    c = c_ref[...].astype(jnp.float32)            # (1, bl, bp)
+    r = r_ref[...].astype(jnp.float32)            # (1, bl)
+    cn = n_ref[...].astype(jnp.float32)           # (1, bp)
+    omega = c + r[:, :, None] * cn[:, None, :]
+    o_ref[...] = (omega >= 1.0).astype(jnp.float32)
+
+
+def dpc_screen_folds_pallas(C: jnp.ndarray, radii: jnp.ndarray,
+                            col_norms_f: jnp.ndarray, *,
+                            block_l: int = DEFAULT_BL,
+                            block_p: int = DEFAULT_BP,
+                            interpret: bool = False):
+    """Fused Theorem-22 grid rule on the fold-stacked CV layout.
+
+    ``C``: (K, L, p) stacked correlations (fold-k centers against the shared
+    design), ``radii``: (K, L) safety-inflated ball radii, ``col_norms_f``:
+    (K, p) per-fold masked column norms.  Returns ``feat_keep (K, L, p)``
+    bool — one streaming pass instead of materialising omega in HBM.  The
+    grid walks (fold, lambda-tile, feature-tile); the radius and column-norm
+    blocks are broadcast along the feature and lambda axes respectively.
+    """
+    K, L, p = C.shape
+    Lp = -(-L // block_l) * block_l
+    pp = -(-p // block_p) * block_p
+    cp = jnp.pad(C, ((0, 0), (0, Lp - L), (0, pp - p)))
+    rp = jnp.pad(radii, ((0, 0), (0, Lp - L)))
+    np_ = jnp.pad(col_norms_f, ((0, 0), (0, pp - p)))
+
+    keep = pl.pallas_call(
+        _dpc_screen_folds_kernel,
+        grid=(K, Lp // block_l, pp // block_p),
+        in_specs=[
+            pl.BlockSpec((1, block_l, block_p), lambda k, i, j: (k, i, j)),
+            pl.BlockSpec((1, block_l), lambda k, i, j: (k, i)),
+            pl.BlockSpec((1, block_p), lambda k, i, j: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_l, block_p),
+                               lambda k, i, j: (k, i, j)),
+        out_shape=jax.ShapeDtypeStruct((K, Lp, pp), jnp.float32),
+        interpret=interpret,
+    )(cp, rp, np_)
+    return keep[:, :L, :p] > 0.5

@@ -53,6 +53,19 @@ def make_fold_mesh(n_folds: int):
     return jax.make_mesh((d,), ("fold",), **_axis_type_kwargs(1))
 
 
+def fold_shard_compatible(mesh, n_folds: int) -> bool:
+    """True when a fold-batched launch of ``n_folds`` rows should shard its
+    leading axis over ``mesh``: a real multi-device 'fold' mesh whose size
+    divides the row count (``shard_map`` needs an even split).
+
+    The elastic fold scheduler re-checks this per cohort launch — cohort
+    sizes fluctuate as folds diverge in pace, so a launch falls back to a
+    plain vmap whenever its cohort no longer splits evenly, and re-engages
+    sharding the moment it does."""
+    return (mesh is not None and getattr(mesh, "size", 1) > 1
+            and n_folds % mesh.size == 0)
+
+
 def shard_over_folds(fn, mesh, example_args):
     """Wrap a fold-batched function so its leading fold axis is sharded
     across the mesh's 'fold' axis via ``shard_map``.

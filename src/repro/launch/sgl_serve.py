@@ -167,8 +167,15 @@ class SGLServer:
                 else lambda_max_nn(xty)[0]))
         lam_anchor = max(lam_maxes)
         if lam_anchor <= 0:
-            raise ValueError("batch lambda_max <= 0: every job's solution "
-                             "is identically zero")
+            # every job in the batch is degenerate (e.g. nn_lasso with
+            # max_i <x_i, y> <= 0): the exact solution is identically zero
+            # at EVERY lambda > 0, so any grid carries the valid answer —
+            # anchor a nominal one instead of failing the batch.  A batch
+            # with at least one non-degenerate job never lands here; its
+            # degenerate members ride along as all-zero fold paths inside
+            # the engine (grid points at/above a fold's own lambda_max
+            # certify to exact zeros).
+            lam_anchor = 1.0
         lambdas = (np.asarray(plan.lambdas, dtype=float)
                    if plan.lambdas is not None
                    else default_lambda_grid(lam_anchor, plan.n_lambdas,
@@ -197,8 +204,9 @@ class SGLServer:
                 specnorm_method=plan.specnorm_method,
                 check_every=plan.check_every, min_bucket=plan.min_bucket,
                 min_group_bucket=plan.min_group_bucket, margin=plan.margin,
-                chunk_init=plan.chunk_init, mesh=plan.mesh, mus=mus,
-                compile_keys=self.compile_keys)
+                chunk_init=plan.chunk_init, chunk_cap=plan.chunk_cap,
+                schedule=plan.schedule, use_pallas=plan.use_pallas,
+                mesh=plan.mesh, mus=mus, compile_keys=self.compile_keys)
         else:
             betas, kept, iters, stats, times = nn_fold_paths(
                 X, y_rows, masks, lambdas,
@@ -206,7 +214,9 @@ class SGLServer:
                 max_iter=plan.max_iter, safety=plan.safety,
                 check_every=plan.check_every, min_bucket=plan.min_bucket,
                 margin=plan.margin, chunk_init=plan.chunk_init,
-                mesh=plan.mesh, compile_keys=self.compile_keys)
+                chunk_cap=plan.chunk_cap, schedule=plan.schedule,
+                use_pallas=plan.use_pallas, mesh=plan.mesh,
+                compile_keys=self.compile_keys)
         new_comp = len(self.compile_keys) - n_comp0
         # buckets=False: the server aggregate is process-lifetime
         self.stats.merge(stats, buckets=False)

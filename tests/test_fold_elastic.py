@@ -1,0 +1,332 @@
+"""Elastic fold scheduling + fold-stack Pallas screening: correctness suite.
+
+The PR acceptance criteria: (1) on a run with one deliberately slow fold
+(dense active set) the fast folds participate in strictly fewer sweep
+launches under elastic scheduling than under lockstep, while per-fold betas
+still match independent ``sgl_path`` runs to <= 1e-8 under float64;
+(2) float32 CV paths engage the fused fold-stack kernels
+(``EngineStats.n_pallas_screens``, interpret mode on CPU) and match the jnp
+fallback to f32 tolerance across screening modes, including a ragged
+non-multiple-of-128 p; (3) float64 paths provably never route through the
+f32 kernels.  Plus the satellite regressions: the ``_next_chunk_len``
+grid-exhaustion throttle and the ``SGLServer`` degenerate-batch fix.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import GroupSpec, sgl_path
+from repro.core.cv import (_masks_from_folds, _next_chunk_len,
+                           _next_fold_chunk, kfold_indices, nn_fold_paths,
+                           sgl_fold_paths)
+from repro.core.lambda_max import lambda_max_sgl
+from repro.core.dpc import lambda_max_nn
+from repro.core.path import default_lambda_grid
+
+
+def _slow_fast_problem(seed=2, N=80, G=40, n=5, K=4, J=32):
+    """Shared design; fold 0 carries a DENSE signal (its active set grows
+    quickly along the path, so speculative feature sets keep missing
+    entrants and its certificates fail), folds 1.. carry a sparse one."""
+    rng = np.random.default_rng(seed)
+    p = G * n
+    X = rng.standard_normal((N, p))
+    spec = GroupSpec.uniform_groups(G, n)
+    masks = _masks_from_folds(kfold_indices(N, K), N)
+    b_dense = 0.35 * rng.standard_normal(p)
+    b_sparse = np.zeros(p)
+    for g in rng.choice(G, 3, replace=False):
+        b_sparse[g * n + rng.choice(n, 2, replace=False)] = \
+            2.0 * rng.standard_normal(2)
+    y_rows = np.empty((K, N))
+    y_rows[0] = X @ b_dense + 0.05 * rng.standard_normal(N)
+    for k in range(1, K):
+        y_rows[k] = X @ b_sparse + 0.05 * rng.standard_normal(N)
+    lm = max(float(lambda_max_sgl(
+        spec, jnp.asarray(X).T @ jnp.asarray(masks[k] * y_rows[k]), 1.0)[0])
+        for k in range(K))
+    lambdas = default_lambda_grid(lm, J, 0.01)
+    return X, y_rows, spec, masks, lambdas
+
+
+# ---------------------------------------------------------------------------
+# Elastic scheduling acceptance: fast folds stop paying for the slow fold
+# ---------------------------------------------------------------------------
+
+def test_elastic_fast_folds_fewer_sweeps_than_lockstep():
+    X, y_rows, spec, masks, lambdas = _slow_fast_problem()
+    kw = dict(tol=1e-11, max_iter=200_000, min_bucket=32)
+    _, _, _, st_lock, _ = sgl_fold_paths(X, y_rows, spec, 1.0, masks,
+                                         lambdas, schedule="lockstep", **kw)
+    betas, _, _, st_el, _ = sgl_fold_paths(X, y_rows, spec, 1.0, masks,
+                                           lambdas, schedule="elastic", **kw)
+    # the slow fold throttled the shared lockstep chunk at least once
+    assert st_lock.n_rejected > 0
+    # every fast fold participates in STRICTLY fewer sweep launches once it
+    # no longer waits for the slow fold's throttled chunks
+    assert all(st_el.fold_sweeps[k] < st_lock.fold_sweeps[k]
+               for k in range(1, masks.shape[0]))
+    # per-fold betas still match INDEPENDENT single-fold engine runs
+    for k in range(masks.shape[0]):
+        train = np.nonzero(masks[k])[0]
+        ref = sgl_path(X[train], y_rows[k][train], spec, 1.0,
+                       lambdas=lambdas, tol=1e-11, max_iter=200_000)
+        np.testing.assert_allclose(betas[k], ref.betas, atol=1e-8)
+
+
+def test_elastic_matches_lockstep_exactly():
+    """Scheduling only reorders work: both schedules accept certified
+    solutions of the same subproblem chain, so the per-fold paths agree to
+    solver precision across screen modes."""
+    X, y_rows, spec, masks, lambdas = _slow_fast_problem(seed=5, J=16)
+    for screen in ("tlfre", "gapsafe"):
+        kw = dict(screen=screen, tol=1e-11, max_iter=200_000, min_bucket=32)
+        a, _, _, _, _ = sgl_fold_paths(X, y_rows, spec, 1.0, masks, lambdas,
+                                       schedule="lockstep", **kw)
+        b, _, _, _, _ = sgl_fold_paths(X, y_rows, spec, 1.0, masks, lambdas,
+                                       schedule="elastic", **kw)
+        np.testing.assert_allclose(a, b, atol=1e-8)
+
+
+def test_fold_paths_rejects_unknown_schedule():
+    X, y_rows, spec, masks, lambdas = _slow_fast_problem(J=4)
+    with pytest.raises(ValueError):
+        sgl_fold_paths(X, y_rows, spec, 1.0, masks, lambdas,
+                       schedule="sometimes")
+    with pytest.raises(ValueError):
+        nn_fold_paths(np.abs(X), np.abs(y_rows[0]), masks, lambdas,
+                      schedule="sometimes")
+
+
+# ---------------------------------------------------------------------------
+# Satellite: the lockstep throttle must exclude grid-limited folds
+# ---------------------------------------------------------------------------
+
+def test_next_chunk_len_excludes_grid_limited_folds():
+    # a fold finishing its grid (chunk capped by remaining points, partial
+    # certificate on the tail) must NOT drag every other fold back to 2
+    assert _next_chunk_len(8, [(1, 2), (8, 8)], [True, False]) == 16
+    # ... and a fully-certified tail chunk must not block doubling either
+    assert _next_chunk_len(8, [(1, 1), (8, 8)], [True, False]) == 16
+    # a genuinely failing (non-limited) fold still throttles the pool
+    assert _next_chunk_len(8, [(3, 8), (8, 8)], [False, False]) == 3
+    assert _next_chunk_len(8, [(1, 2), (3, 8)], [True, False]) == 3
+    # everyone certified fully -> double, capped
+    assert _next_chunk_len(8, [(8, 8), (8, 8)], [False, False]) == 16
+    assert _next_chunk_len(64, [(64, 64)], [False]) == 64
+    # every fold grid-limited: the pool is draining, keep doubling
+    assert _next_chunk_len(4, [(2, 2), (1, 1)], [True, True]) == 8
+    # legacy call shape (no limited flags) keeps the old semantics
+    assert _next_chunk_len(8, [(3, 8), (8, 8)]) == 3
+
+
+def test_next_fold_chunk_policy():
+    assert _next_fold_chunk(8, 8, 8, 64) == 16       # certified -> double
+    assert _next_fold_chunk(64, 64, 64, 64) == 64    # capped
+    assert _next_fold_chunk(16, 3, 16, 64) == 3      # failed -> own throttle
+    assert _next_fold_chunk(16, 1, 16, 64) == 2      # floor of 2
+    assert _next_fold_chunk(32, 5, 5, 64) == 64      # grid-limited full cert
+
+
+def test_lockstep_unequal_grid_lengths_regression():
+    """One fold's grid is far shorter (tiny response scale => tiny fold
+    lambda_max => most grid points certify to zero up front).  Its tail
+    chunks are grid-limited; after it finishes, the surviving folds'
+    shared chunk must have kept doubling rather than resetting to 2."""
+    rng = np.random.default_rng(9)
+    N, G, n, K = 60, 24, 5, 3
+    p = G * n
+    X = rng.standard_normal((N, p))
+    spec = GroupSpec.uniform_groups(G, n)
+    masks = _masks_from_folds(kfold_indices(N, K), N)
+    b = np.zeros(p)
+    for g in rng.choice(G, 3, replace=False):
+        b[g * n + rng.choice(n, 2, replace=False)] = rng.standard_normal(2)
+    y_rows = np.tile(X @ b + 0.02 * rng.standard_normal(N), (K, 1))
+    y_rows[0] *= 0.05                     # fold 0: grid mostly above lam_max
+    lm = max(float(lambda_max_sgl(
+        spec, jnp.asarray(X).T @ jnp.asarray(masks[k] * y_rows[k]), 1.0)[0])
+        for k in range(K))
+    lambdas = default_lambda_grid(lm, 24, 0.01)
+    betas, _, _, st, _ = sgl_fold_paths(
+        X, y_rows, spec, 1.0, masks, lambdas, schedule="lockstep",
+        tol=1e-13, max_iter=300_000, min_bucket=32)
+    # the short-grid fold entered fewer launches than the full-grid folds
+    assert st.fold_sweeps[0] < st.fold_sweeps[1:].max()
+    # the shared chunk must not have collapsed into a long tail of tiny
+    # launches: a pool throttled to 2 would need >= J/2 launches per fold
+    J = len(lambdas)
+    assert st.fold_sweeps.max() < J // 2
+    for k in range(K):
+        train = np.nonzero(masks[k])[0]
+        ref = sgl_path(X[train], y_rows[k][train], spec, 1.0,
+                       lambdas=lambdas, tol=1e-13, max_iter=300_000)
+        # both sides carry duality-gap certificates; at this problem's
+        # gap_scale the certificate bounds coefficients to ~1e-7 (a
+        # barely-active feature may sit outside the certified bucket)
+        np.testing.assert_allclose(betas[k], ref.betas, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Fold-stack Pallas screening: f32 parity with the jnp fallback
+# ---------------------------------------------------------------------------
+
+RAGGED_SIZES = [3, 7, 1, 5, 4, 9, 2, 6, 5, 3, 8, 4, 5, 7, 2, 6]   # p = 77
+
+
+def _ragged_f32_problem(seed=5, N=40, K=2, J=8):
+    rng = np.random.default_rng(seed)
+    spec = GroupSpec.from_sizes(RAGGED_SIZES)
+    p = spec.num_features
+    X = rng.standard_normal((N, p)).astype(np.float32)
+    b = np.zeros(p)
+    b[[0, 4, 11, 30, 55]] = rng.standard_normal(5)
+    y = (X @ b + 0.01 * rng.standard_normal(N)).astype(np.float32)
+    masks = _masks_from_folds(kfold_indices(N, K), N)
+    lam_max = float(lambda_max_sgl(
+        spec, jnp.asarray(X).T @ jnp.asarray(y), 1.0)[0])
+    return X, y, spec, masks, default_lambda_grid(lam_max, J, 0.05)
+
+
+@pytest.mark.pallas
+@pytest.mark.parametrize("screen", ["tlfre", "gapsafe"])
+def test_sgl_fold_paths_pallas_matches_jnp(screen):
+    """f32 CV paths with the fused kernels (interpret mode on CPU) match
+    the jnp fallback to f32 tolerance on a ragged non-multiple-of-128 p,
+    and EngineStats shows the fused screen engaged."""
+    X, y, spec, masks, lambdas = _ragged_f32_problem()
+    kw = dict(screen=screen, tol=1e-6, max_iter=20000, safety=1e-5,
+              min_bucket=16)
+    b_jnp, _, _, st_jnp, _ = sgl_fold_paths(X, y, spec, 1.0, masks, lambdas,
+                                            use_pallas=False, **kw)
+    b_pal, _, _, st_pal, _ = sgl_fold_paths(X, y, spec, 1.0, masks, lambdas,
+                                            use_pallas=True, **kw)
+    assert st_jnp.n_pallas_screens == 0
+    assert st_pal.n_pallas_screens > 0
+    np.testing.assert_allclose(b_pal, b_jnp, atol=5e-5)
+
+
+@pytest.mark.pallas
+@pytest.mark.parametrize("screen", ["dpc", "gapsafe"])
+def test_nn_fold_paths_pallas_matches_jnp(screen):
+    rng = np.random.default_rng(8)
+    N, p, K, J = 40, 77, 2, 8                # ragged non-multiple-of-128 p
+    X = rng.standard_normal((N, p)).astype(np.float32)
+    b = np.zeros(p)
+    b[[1, 5, 40]] = np.abs(rng.standard_normal(3))
+    y = (X @ b + 0.01 * rng.standard_normal(N)).astype(np.float32)
+    masks = _masks_from_folds(kfold_indices(N, K), N)
+    lm = float(lambda_max_nn(jnp.asarray(X).T @ jnp.asarray(y))[0])
+    lambdas = default_lambda_grid(lm, J, 0.05)
+    kw = dict(screen=screen, tol=1e-6, max_iter=20000, safety=1e-5,
+              min_bucket=16)
+    b_jnp, _, _, _, _ = nn_fold_paths(X, y, masks, lambdas,
+                                      use_pallas=False, **kw)
+    b_pal, _, _, st_pal, _ = nn_fold_paths(X, y, masks, lambdas,
+                                           use_pallas=True, **kw)
+    assert st_pal.n_pallas_screens > 0
+    np.testing.assert_allclose(b_pal, b_jnp, atol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: float64 must never route through the f32 kernels
+# ---------------------------------------------------------------------------
+
+def test_f64_refuses_pallas_kernels():
+    """The screening entry points raise rather than silently round-tripping
+    float64 statistics through the f32 kernels."""
+    from repro.core import column_norms, group_spectral_norms, \
+        normal_vector_sgl
+    from repro.core.screening import (tlfre_screen_grid,
+                                      tlfre_screen_grid_folds)
+    from repro.core.dpc import dpc_screen_grid_folds
+    rng = np.random.default_rng(0)
+    spec = GroupSpec.uniform_groups(6, 4)
+    X = jnp.asarray(rng.standard_normal((20, 24)))       # float64
+    y = jnp.asarray(rng.standard_normal(20))
+    lam_max = float(lambda_max_sgl(spec, X.T @ y, 1.0)[0])
+    cn, gs = column_norms(X), group_spectral_norms(X, spec)
+    tb = y / lam_max
+    nv = normal_vector_sgl(X, y, spec, lam_max, lam_max, tb, 0)
+    lams = lam_max * np.asarray([0.9, 0.5])
+    with pytest.raises(TypeError):
+        tlfre_screen_grid(X, y, spec, 1.0, lams, lam_max, tb, nv, cn, gs,
+                          use_pallas=True)
+    with pytest.raises(TypeError):
+        tlfre_screen_grid_folds(X, y[None], spec, 1.0,
+                                jnp.asarray(lams)[None], tb[None], nv[None],
+                                cn[None], gs[None], use_pallas=True)
+    with pytest.raises(TypeError):
+        dpc_screen_grid_folds(X, y[None], jnp.asarray(lams)[None], tb[None],
+                              nv[None], cn[None], use_pallas=True)
+
+
+def test_f64_fold_paths_never_engage_kernels():
+    """Even with use_pallas=True requested, a float64 fold run keeps the
+    jnp path end to end (the _pallas_active gate), so exactness runs are
+    provably untouched."""
+    X, y_rows, spec, masks, lambdas = _slow_fast_problem(seed=7, J=6)
+    betas_p, _, _, st, _ = sgl_fold_paths(
+        X, y_rows, spec, 1.0, masks, lambdas, tol=1e-11, max_iter=200_000,
+        min_bucket=32, use_pallas=True)
+    assert st.n_pallas_screens == 0
+    betas_j, _, _, _, _ = sgl_fold_paths(
+        X, y_rows, spec, 1.0, masks, lambdas, tol=1e-11, max_iter=200_000,
+        min_bucket=32, use_pallas=False)
+    np.testing.assert_array_equal(betas_p, betas_j)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: SGLServer must not fail a batch over one degenerate job
+# ---------------------------------------------------------------------------
+
+def _degenerate_pair(seed=0, N=60, p=30):
+    """(X, y_bad, y_good): X^T y_bad == -1 exactly, so the nn_lasso
+    solution for y_bad is identically zero at every lambda."""
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((N, p))
+    y_bad = -X @ np.linalg.solve(X.T @ X, np.ones(p))
+    assert (X.T @ y_bad < 0).all()
+    b = np.zeros(p)
+    b[:4] = np.abs(rng.standard_normal(4)) + 0.5
+    y_good = X @ b + 0.01 * rng.standard_normal(N)
+    return X, y_bad, y_good
+
+
+def test_server_degenerate_nn_job_does_not_poison_batch():
+    from repro.core import Plan
+    from repro.launch.sgl_serve import SGLServer
+    X, y_bad, y_good = _degenerate_pair()
+    server = SGLServer(Plan(n_folds=3, n_lambdas=8, tol=1e-8,
+                            max_iter=20000))
+    j_bad = server.submit(X, y_bad, penalty="nn_lasso")
+    j_good = server.submit(X, y_good, penalty="nn_lasso")
+    res = server.drain()
+    # the degenerate job returns its valid all-zero fit, not an error ...
+    assert res[j_bad].error is None
+    np.testing.assert_array_equal(res[j_bad].coef, 0.0)
+    assert np.isfinite(res[j_bad].mean_mse).all()
+    # ... and the stacked partner job is solved normally
+    assert res[j_good].error is None
+    assert int(np.sum(res[j_good].coef > 1e-8)) > 0
+    from repro.core import nn_lasso_path
+    ref = nn_lasso_path(X, y_good, lambdas=res[j_good].lambdas, tol=1e-8,
+                        max_iter=20000)
+    j = int(np.argmin(np.abs(res[j_good].lambdas
+                             - res[j_good].best_lambda)))
+    np.testing.assert_allclose(res[j_good].coef, ref.betas[j], atol=1e-5)
+
+
+def test_server_all_degenerate_batch_returns_zero_fits():
+    from repro.core import Plan
+    from repro.launch.sgl_serve import SGLServer
+    X, y_bad, _ = _degenerate_pair(seed=3)
+    server = SGLServer(Plan(n_folds=3, n_lambdas=6, tol=1e-8,
+                            max_iter=20000))
+    jid = server.submit(X, y_bad, penalty="nn_lasso")
+    res = server.drain()
+    assert res[jid].error is None
+    np.testing.assert_array_equal(res[jid].coef, 0.0)
+    assert np.isfinite(res[jid].mean_mse).all()
+    assert np.isfinite(res[jid].best_lambda)

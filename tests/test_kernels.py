@@ -173,3 +173,41 @@ def test_screen_norms_batched_grid_layout():
                                    rtol=1e-4, atol=1e-4)
         np.testing.assert_allclose(np.asarray(i[r]), np.asarray(ir),
                                    rtol=1e-5)
+
+
+@pytest.mark.pallas
+@pytest.mark.parametrize("sizes", RAGGED_SIZES)
+def test_screen_norms_folds_matches_per_row_kernel(sizes):
+    """The (K, L, G, n_max) fold-stack layout of the CV engine: every
+    (fold, lambda) slice must match the single-row kernel, garbage in the
+    padded lanes masked."""
+    spec, clean, dirty = _ragged_layout(sizes, seed=sum(sizes) + 1)
+    rng = np.random.default_rng(2)
+    K, L = 3, 4
+    scales = jnp.asarray(rng.uniform(0.2, 3.0, (K, L)), jnp.float32)
+    stack_dirty = scales[:, :, None, None] * dirty[None, None]
+    s, i = ops.screen_norms_folds(stack_dirty, spec.pad_mask)
+    assert s.shape == (K, L, spec.num_groups)
+    for k in range(K):
+        for r in range(L):
+            sr, ir = ref.screen_norms_ref(scales[k, r] * clean,
+                                          spec.pad_mask)
+            np.testing.assert_allclose(np.asarray(s[k, r]), np.asarray(sr),
+                                       rtol=1e-4, atol=1e-4)
+            np.testing.assert_allclose(np.asarray(i[k, r]), np.asarray(ir),
+                                       rtol=1e-5)
+
+
+@pytest.mark.pallas
+def test_dpc_screen_folds_matches_jnp_oracle():
+    """The fused fold-stack DPC threshold: exact agreement with the
+    unfused omega >= 1 rule on a ragged non-multiple-of-128 p."""
+    rng = np.random.default_rng(4)
+    K, L, p = 3, 5, 333
+    C = jnp.asarray(rng.standard_normal((K, L, p)) * 0.8, jnp.float32)
+    radii = jnp.asarray(np.abs(rng.standard_normal((K, L))), jnp.float32)
+    col_n = jnp.asarray(np.abs(rng.standard_normal((K, p))) + 0.1,
+                        jnp.float32)
+    keep = ops.dpc_screen_folds(C, radii, col_n)
+    expect = (C + radii[:, :, None] * col_n[:, None, :]) >= 1.0
+    np.testing.assert_array_equal(np.asarray(keep), np.asarray(expect))

@@ -386,12 +386,27 @@ def test_sgl_serve_isolates_failing_batches_and_honors_folds():
     b[:4] = np.abs(rng.standard_normal(4)) + 0.5
     y = X @ b + 0.01 * rng.standard_normal(N)
     good = server.submit(X, y, groups=[4] * (p // 4))
-    # nn_lasso with max_i <x_i, y> <= 0 makes its batch raise
-    bad = server.submit(-np.abs(rng.standard_normal((N, p))) - 0.1,
-                        np.abs(y) + 0.1, penalty="nn_lasso")
+    # nn_lasso with max_i <x_i, y> <= 0: the solution is identically zero,
+    # so the job returns its valid all-zero fit instead of an error
+    degen = server.submit(-np.abs(rng.standard_normal((N, p))) - 0.1,
+                          np.abs(y) + 0.1, penalty="nn_lasso")
+    # a batch that genuinely RAISES must still be isolated from the rest
+    boom = server.submit(rng.standard_normal((N, p)), y,
+                         penalty="nn_lasso")
+    boom_fp = server._queue[-1].fingerprint
+    orig_run = server._run_batch
+
+    def run_batch(jobs):
+        if jobs[0].fingerprint == boom_fp:
+            raise RuntimeError("forced batch failure")
+        return orig_run(jobs)
+
+    server._run_batch = run_batch
     results = server.drain()
-    assert results[bad].error is not None
-    assert results[good].error is None           # other batch unaffected
+    assert results[degen].error is None
+    np.testing.assert_array_equal(results[degen].coef, 0.0)
+    assert results[boom].error is not None       # failing batch isolated
+    assert results[good].error is None           # other batches unaffected
     assert np.isfinite(results[good].best_lambda)
     # the explicit CV split was used, not a fresh kfold_indices split
     ref = sgl_cv(X, y, GroupSpec.from_sizes([4] * (p // 4)), 1.0,
