@@ -389,3 +389,65 @@ def session_bench(n_folds=3):
         ("session_lambda_ratio", 0.0,
          round(ref.lambda_ / coarse.lam_max, 4)),
     ]
+
+
+def compile_audit_bench(n_folds=3):
+    """Static compile-key audit vs the keys a real session actually pays.
+
+    The batched engine's O(log p) compilation claim is now a *predictable*
+    quantity: ``repro.analysis.compile_audit.predict_keys`` enumerates the
+    full compile-key universe from the Problem shape and Plan alone.  This
+    row runs ``session.path`` + ``session.cv`` at the bench dims and FAILS
+    (raises) if the engine pays any key the audit did not predict, if the
+    session's ``n_compilations`` counter drifts from its key cache, or if
+    the universe exceeds the polylog budget.
+
+    NOTE: importing ``repro.analysis`` enables jax x64 process-wide, so
+    this suite must run LAST (run.py orders it so); the bench itself pins
+    float32 data to stay deterministic under either x64 setting.
+    """
+    from repro.analysis import compile_audit
+    from repro.core import Plan, Problem, SGLSession
+
+    X, y, _ = data_synth.synthetic_sgl(1, gamma1=0.1, gamma2=0.1, seed=3,
+                                       **SGL_DIMS)
+    X = np.asarray(X, np.float32)
+    y = np.asarray(y, np.float32)
+    spec = GroupSpec.uniform_groups(SGL_DIMS["G"], SGL_DIMS["n"])
+    plan = Plan(alpha=1.0, n_lambdas=N_LAMBDA, tol=TOL, safety=1e-6,
+                max_iter=MAX_ITER, check_every=CHECK_EVERY, n_folds=n_folds)
+    prob = Problem.sgl(X, y, spec, dtype=np.float32)
+
+    sess = SGLSession(prob)
+    t0 = time.perf_counter()
+    sess.path(plan)
+    sess.cv(plan)
+    elapsed = time.perf_counter() - t0
+
+    shape = compile_audit.ProblemShape.of(prob)
+    universe = compile_audit.predict_keys(shape, plan, kinds=("path", "cv"),
+                                          n_folds=n_folds)
+    bound = compile_audit.budget(shape, plan, n_folds=n_folds)
+    unpredicted = compile_audit.verify_paid_keys(sess.compile_keys, universe,
+                                                 label="bench")
+    paid = len(sess.compile_keys)
+    if unpredicted:
+        raise RuntimeError(
+            "compile-audit mismatch: engine paid key(s) the static audit "
+            "did not predict:\n" + "\n".join(f.detail for f in unpredicted))
+    if sess.stats.n_compilations != paid:
+        raise RuntimeError(
+            f"compile-audit mismatch: EngineStats.n_compilations="
+            f"{sess.stats.n_compilations} but the session key cache holds "
+            f"{paid} keys")
+    if len(universe) > bound:
+        raise RuntimeError(
+            f"compile-audit mismatch: predicted universe {len(universe)} "
+            f"exceeds the polylog budget {bound}")
+    return [
+        ("compile_audit_paid_keys", elapsed / max(paid, 1) * 1e6, paid),
+        ("compile_audit_predicted_universe", 0.0, len(universe)),
+        ("compile_audit_polylog_budget", 0.0, bound),
+        ("compile_audit_coverage", 0.0,
+         round(paid / max(len(universe), 1), 4)),
+    ]

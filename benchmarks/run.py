@@ -29,8 +29,11 @@ session) against a cold fine-grid CV — the model-selection serving regime.
 The ``cv-pallas`` suite compares elastic vs lockstep fold scheduling and
 the fused fold-stack Pallas screening vs the jnp fallback at float32.
 
-``--smoke`` runs only the fast engine + cv + cv-pallas + session
-comparison suites at reduced dimensions — the CI perf-regression gate.
+``--smoke`` runs only the fast engine + cv + cv-pallas + session +
+compile-audit comparison suites at reduced dimensions — the CI
+perf-regression gate.  The ``compile-audit`` suite (also in the full run)
+raises if the engine pays any jit compile key that
+``repro.analysis.compile_audit.predict_keys`` did not statically predict.
 
 REPRO_BENCH_FULL=1 switches to the paper's full dimensions.
 """
@@ -135,6 +138,10 @@ def main() -> None:
                                             n_folds=min(folds, 3))),
             ("session", functools.partial(paper_tables.session_bench,
                                           n_folds=min(folds, 3))),
+            # LAST: imports repro.analysis, which enables x64 process-wide
+            ("compile-audit",
+             functools.partial(paper_tables.compile_audit_bench,
+                               n_folds=min(folds, 3))),
         ]  # smoke always baselines against the batched engine (CI gate)
     else:
         # ordered so the claim-critical rejection figures and the roofline
@@ -158,6 +165,10 @@ def main() -> None:
                                             n_folds=folds)),
             ("session", functools.partial(paper_tables.session_bench,
                                           n_folds=folds)),
+            # LAST: imports repro.analysis, which enables x64 process-wide
+            ("compile-audit",
+             functools.partial(paper_tables.compile_audit_bench,
+                               n_folds=min(folds, 3))),
         ]
     only = suite_flag if suite_flag is not None else (argv[0] if argv
                                                      else None)

@@ -1,0 +1,53 @@
+"""repro.analysis — static analysis suite for the TLFre engine.
+
+Three layers prove at trace/parse time what ``EngineStats`` counters only
+observe at runtime:
+
+  1. ``jaxpr_lint``    — dtype purity, hidden transfers, GEMM counts in
+     the traced graphs of every jitted entry point.
+  2. ``compile_audit`` + ``pallas_check`` — the O(log p) compile-key
+     universe of a Problem/Plan, and BlockSpec/ragged-mask/f64 contracts
+     of every Pallas kernel.
+  3. ``ast_rules``     — jit-boundary hazards in the host driver code.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.analysis --all --baseline analysis/baseline.json
+
+x64 is enabled at import: the f64 exactness contract can only be checked
+if f64 traces are actually f64 (and ``GroupSpec.weights`` master data is
+f64), regardless of how the host process was configured.  Import this
+package before creating jax arrays whose dtype matters.
+"""
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from .findings import (Finding, diff_against_baseline, format_report,  # noqa: E402
+                       load_baseline, write_baseline)
+
+LAYERS = ("jaxpr", "compile", "pallas", "ast")
+
+
+def run_layers(layers=LAYERS) -> list:
+    """Run the requested analyzer layers; returns all findings."""
+    findings = []
+    if "jaxpr" in layers:
+        from . import jaxpr_lint
+        findings.extend(jaxpr_lint.run())
+    if "compile" in layers:
+        from . import compile_audit
+        findings.extend(compile_audit.run())
+    if "pallas" in layers:
+        from . import pallas_check
+        findings.extend(pallas_check.run())
+    if "ast" in layers:
+        from . import ast_rules
+        findings.extend(ast_rules.run())
+    return findings
+
+
+__all__ = ["Finding", "LAYERS", "diff_against_baseline", "format_report",
+           "load_baseline", "run_layers", "write_baseline"]

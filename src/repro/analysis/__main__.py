@@ -1,0 +1,68 @@
+"""CLI for the static-analysis suite.
+
+Exit status 0 iff every finding is covered by the baseline; any NEW
+finding exits 1 (the CI gate).  Stale baseline entries only warn — remove
+them at leisure so the baseline shrinks instead of rotting.
+
+    python -m repro.analysis --all --baseline analysis/baseline.json
+    python -m repro.analysis --layer ast --layer pallas
+    python -m repro.analysis --all --write-baseline analysis/baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from . import (LAYERS, diff_against_baseline, format_report, load_baseline,
+               run_layers, write_baseline)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static analysis of the TLFre engine "
+                    "(jaxpr / compile-key / Pallas / AST layers)")
+    ap.add_argument("--all", action="store_true",
+                    help="run every layer")
+    ap.add_argument("--layer", action="append", choices=LAYERS, default=[],
+                    help="run one layer (repeatable)")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline JSON of intentional findings; any "
+                         "finding not in it fails the run")
+    ap.add_argument("--write-baseline", default=None, metavar="PATH",
+                    help="write current findings as a baseline skeleton "
+                         "(justifications to be filled in) and exit 0")
+    ap.add_argument("--verbose", action="store_true",
+                    help="list baselined findings too")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable output")
+    args = ap.parse_args(argv)
+
+    layers = LAYERS if (args.all or not args.layer) else tuple(args.layer)
+    findings = run_layers(layers)
+
+    if args.write_baseline:
+        write_baseline(findings, args.write_baseline)
+        print(f"wrote {len({f.key for f in findings})} baseline entries "
+              f"to {args.write_baseline}")
+        return 0
+
+    baseline = load_baseline(args.baseline) if args.baseline else []
+    new, matched, stale = diff_against_baseline(findings, baseline)
+
+    if args.as_json:
+        print(json.dumps({
+            "layers": list(layers),
+            "new": [vars(f) for f in new],
+            "baselined": [vars(f) for f in matched],
+            "stale": stale,
+        }, indent=2))
+    else:
+        print(f"repro.analysis: layers={','.join(layers)}")
+        print(format_report(new, matched, stale, verbose=args.verbose))
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,252 @@
+"""Layer 2a: compile-key audit — statically enumerate every jit compile
+key a Problem/Plan can generate and prove the O(log p) bound without
+running a solve.
+
+The batched engine's speed claim rests on bucketing: feature sets round up
+a pow2 ladder anchored at ``min_bucket``, group counts up a ladder anchored
+at ``min_group_bucket``, and lambda chunks up a pow2 ladder capped by the
+chunk policy — so the number of distinct sweep shapes (= actual solver
+compilations) is a product of ladder lengths, polylogarithmic in (p, G, J),
+NOT linear in the grid.  This module replicates the engine's exact key
+construction (``path_engine.py`` ``("sgl", ...)``/``("nn", ...)`` and
+``cv.py`` ``("sgl-folds", ...)``/``("nn-folds", ...)`` tuples) from the
+Plan alone:
+
+  * ``predict_keys(problem_shape, plan, ...)`` — the full universe of keys
+    the engine MAY pay for that configuration.  Every key actually paid at
+    runtime must be a member (checked by ``verify_paid_keys``, wired into
+    ``benchmarks/run.py --smoke`` as the ``compile-audit`` row).
+  * ``budget(...)`` — the polylog reference bound; a universe exceeding it
+    means a key component became data-dependent (rule
+    ``compile/budget-exceeded``).
+
+Enumerators mirror the engine exactly; when the engine's key tuples
+change, this module MUST change with them — that coupling is the point
+(the smoke-gate mismatch is the alarm).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, Optional
+
+from .findings import Finding
+
+
+def _pow2_ceil(m: int) -> int:
+    b = 1
+    while b < m:
+        b *= 2
+    return b
+
+
+def feature_buckets(p: int, min_bucket: int) -> list:
+    """Values ``_feature_bucket`` can return: the pow2 ladder anchored at
+    ``min_bucket`` (every value clipped below p) plus p itself (reached by
+    clipping, by the margin-doubling rule, or by the S.all() fast path)."""
+    ladder = []
+    b = max(int(min_bucket), 1)
+    while b < p:
+        ladder.append(b)
+        b *= 2
+    ladder.append(p)
+    return ladder
+
+
+def group_buckets(G: int, min_group_bucket: int) -> list:
+    """Values the group-bucket ladder can take:
+    ``min(_bucket(·, min_group_bucket), G + 1)``.  (The single-path
+    S.all() fast path's exact-G value is added by the caller — the fold
+    engine has no such fast path.)"""
+    ladder = []
+    b = max(int(min_group_bucket), 1)
+    while b < G + 1:
+        ladder.append(b)
+        b *= 2
+    ladder.append(G + 1)
+    return ladder
+
+
+def chunk_lengths(J: int, chunk_init: int, cap: int) -> list:
+    """pow2 scan lengths a chunk can pad to.  The speculative chunk starts
+    at ``chunk_init`` (uncapped), then evolves within [2, cap] (doubling on
+    full certificates, throttling to the accepted prefix otherwise); the
+    actual chunk is additionally bounded by the remaining grid."""
+    hi = _pow2_ceil(min(J, max(int(cap), int(chunk_init), 1)))
+    out, b = [], 1
+    while b <= hi:
+        out.append(b)
+        b *= 2
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class ProblemShape:
+    """The static dims the compile keys depend on (a Problem without
+    data)."""
+    N: int
+    p: int
+    G: int                      # 0 for nn_lasso
+    max_size: int               # 0 for nn_lasso
+    penalty: str                # "sgl" | "nn_lasso"
+    dtype: str                  # str(X.dtype): "float32" | "float64"
+
+    @classmethod
+    def of(cls, problem) -> "ProblemShape":
+        spec = problem.spec
+        return cls(N=problem.n_samples, p=problem.n_features,
+                   G=spec.num_groups if spec is not None else 0,
+                   max_size=spec.max_size if spec is not None else 0,
+                   penalty=problem.penalty, dtype=str(problem.dtype))
+
+
+def _resolve_pallas(plan, dtype: str) -> bool:
+    import jax.numpy as jnp
+    from ..core.path_engine import _pallas_active
+    return _pallas_active(plan.use_pallas, jnp.dtype(dtype))
+
+
+def _grid_len(plan) -> int:
+    return (len(plan.lambdas) if plan.lambdas is not None
+            else int(plan.n_lambdas))
+
+
+def predict_keys(shape: ProblemShape, plan, kinds: Iterable[str] = ("path",
+                 "cv"), n_folds: Optional[int] = None) -> set:
+    """The universe of compile keys the engine may generate for this
+    (problem shape, plan) under the given session verbs.
+
+    ``kinds``: "path" (single-path engine) and/or "cv" (fold engine —
+    covers cv / refine / stability, which all run ``*_fold_paths``).
+    """
+    N, p, G = shape.N, shape.p, shape.G
+    J = _grid_len(plan)
+    pallas = _resolve_pallas(plan, shape.dtype)
+    keys: set = set()
+    fbs = feature_buckets(p, plan.min_bucket)
+    if n_folds is None:
+        n_folds = len(plan.folds) if plan.folds is not None else plan.n_folds
+
+    if "path" in kinds:
+        # single-path chunk cap is the engine's hardcoded 64
+        lens = chunk_lengths(J, plan.chunk_init, 64)
+        if shape.penalty == "sgl":
+            # + exact G: the S.all() fast path keeps the parent spec
+            gbs = sorted(set(group_buckets(G, plan.min_group_bucket))
+                         | {G})
+            for p_b in fbs:
+                for g_b in gbs:
+                    for len2 in lens:
+                        keys.add(("sgl", N, p, G, shape.dtype,
+                                  plan.max_iter, plan.check_every, pallas,
+                                  p_b, g_b, shape.max_size, len2))
+        else:
+            for p_b in fbs:
+                for len2 in lens:
+                    keys.add(("nn", N, p, shape.dtype, plan.max_iter,
+                              plan.check_every, pallas, p_b, len2))
+
+    if "cv" in kinds:
+        lens = chunk_lengths(J, plan.chunk_init, plan.chunk_cap)
+        centered = plan.center == "per-fold"
+        if shape.penalty == "sgl":
+            gbs = group_buckets(G, plan.min_group_bucket)
+            for Ka in range(1, n_folds + 1):
+                for p_b in fbs:
+                    for g_b in gbs:
+                        for len2 in lens:
+                            keys.add(("sgl-folds", Ka, N, p, G, shape.dtype,
+                                      plan.max_iter, plan.check_every,
+                                      plan.mesh, p_b, g_b, shape.max_size,
+                                      len2, centered, pallas))
+        else:
+            for Ka in range(1, n_folds + 1):
+                for p_b in fbs:
+                    for len2 in lens:
+                        keys.add(("nn-folds", Ka, N, p, shape.dtype,
+                                  plan.max_iter, plan.check_every,
+                                  plan.mesh, p_b, len2, pallas))
+    return keys
+
+
+def budget(shape: ProblemShape, plan, kinds=("path", "cv"),
+           n_folds: Optional[int] = None) -> int:
+    """Polylog reference bound on the key-universe size: the product of the
+    three ladder lengths (features, groups, chunks), times (K + lockstep)
+    fold cohort sizes for the cv kinds.  O(K * log p * log G * log J)."""
+    p, G = shape.p, shape.G
+    J = _grid_len(plan)
+    if n_folds is None:
+        n_folds = len(plan.folds) if plan.folds is not None else plan.n_folds
+    lf = math.floor(math.log2(max(p, 2))) + 2
+    lg = (math.floor(math.log2(max(G + 1, 2))) + 3
+          if shape.penalty == "sgl" else 1)
+    lc = math.floor(math.log2(max(min(J, 64), 2))) + 2
+    total = 0
+    if "path" in kinds:
+        total += lf * lg * lc
+    if "cv" in kinds:
+        total += n_folds * lf * lg * lc
+    return total
+
+
+def audit(shape: ProblemShape, plan, kinds=("path", "cv"),
+          n_folds: Optional[int] = None, label: str = "") -> list:
+    """Static findings for one configuration: key universe vs the polylog
+    budget."""
+    universe = predict_keys(shape, plan, kinds, n_folds)
+    bound = budget(shape, plan, kinds, n_folds)
+    loc = label or (f"{shape.penalty}[{shape.dtype}] N={shape.N} "
+                    f"p={shape.p} G={shape.G}")
+    if len(universe) > bound:
+        return [Finding(
+            "compile/budget-exceeded", "error", loc,
+            f"predicted compile-key universe has {len(universe)} keys, "
+            f"above the polylog budget {bound} — a key component is no "
+            f"longer bucketed (data-dependent shapes leaked into the jit "
+            f"cache)")]
+    return []
+
+
+def verify_paid_keys(paid: Iterable[tuple], universe: set,
+                     label: str = "run") -> list:
+    """Every compile key actually paid must have been predicted.  Used by
+    the ``compile-audit`` benchmark row and the tier-1 test."""
+    findings = []
+    for key in paid:
+        if key not in universe:
+            findings.append(Finding(
+                "compile/unpredicted-key", "error",
+                f"{label}:{key[0]}",
+                f"engine paid compile key {key!r} that the static audit "
+                f"did not predict — predict_keys has drifted from the "
+                f"engine's key construction"))
+    return findings
+
+
+def run() -> list:
+    """CLI layer entry: audit representative configurations (both
+    penalties x dtypes x centering, explicit small grid)."""
+    from ..core.problem import Plan
+
+    findings = []
+    base = Plan(n_lambdas=40, n_folds=4)
+    shapes = [
+        ProblemShape(N=100, p=500, G=50, max_size=10, penalty="sgl",
+                     dtype="float64"),
+        ProblemShape(N=100, p=500, G=50, max_size=10, penalty="sgl",
+                     dtype="float32"),
+        ProblemShape(N=80, p=300, G=0, max_size=0, penalty="nn_lasso",
+                     dtype="float64"),
+    ]
+    plans = [("default", base),
+             ("per-fold", base.with_(center="per-fold")),
+             ("big-chunk", base.with_(chunk_init=32, chunk_cap=128))]
+    for shape in shapes:
+        for pname, plan in plans:
+            if shape.penalty == "nn_lasso" and plan.center == "per-fold":
+                continue
+            findings.extend(audit(
+                shape, plan,
+                label=f"{shape.penalty}[{shape.dtype}]/{pname}"))
+    return findings

@@ -220,7 +220,7 @@ def _screen_folds_sgl(X, Y, spec, alpha, rem, lam_bars, lam_maxs, theta_bars,
         if mus is not None:     # centered fit: (X - 1 mu^T) beta
             fit = fit - jnp.sum(beta_prev * mus, axis=1)[:, None]
         resid = Y - masks * fit
-        pen = (alpha * jnp.sum(spec.weights[None, :]
+        pen = (alpha * jnp.sum(spec.weights.astype(X.dtype)[None, :]
                                * jax.vmap(lambda b: group_norms(spec, b))(
                                    beta_prev), axis=1)
                + jnp.sum(jnp.abs(beta_prev), axis=1))

@@ -43,7 +43,8 @@ def sgl_feasibility_margin(spec: GroupSpec, xt_theta: jnp.ndarray,
     Returns ``||S_1(X_g^T theta)|| - alpha*w_g``; theta is dual-feasible iff
     every entry is <= 0.
     """
-    return group_norms(spec, shrink(xt_theta)) - alpha * spec.weights
+    return (group_norms(spec, shrink(xt_theta))
+            - alpha * spec.weights.astype(xt_theta.dtype))
 
 
 def sgl_dual_feasible(spec: GroupSpec, xt_theta: jnp.ndarray, alpha,
@@ -60,7 +61,8 @@ def sgl_dual_objective(y: jnp.ndarray, theta: jnp.ndarray, lam) -> jnp.ndarray:
 def sgl_primal_objective(X, y, beta, spec: GroupSpec, lam, alpha):
     """Objective of problem (3)."""
     r = y - X @ beta
-    pen = alpha * jnp.sum(spec.weights * group_norms(spec, beta)) \
+    pen = alpha * jnp.sum(spec.weights.astype(beta.dtype)
+                          * group_norms(spec, beta)) \
         + jnp.sum(jnp.abs(beta))
     return 0.5 * jnp.vdot(r, r) + lam * pen
 

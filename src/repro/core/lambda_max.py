@@ -73,7 +73,9 @@ def _padded_segment_roots(z: jnp.ndarray, target_sq: jnp.ndarray) -> jnp.ndarray
 def group_shrink_roots(spec: GroupSpec, c: jnp.ndarray, alpha) -> jnp.ndarray:
     """rho_g per group for c = X^T y (Lemma 9, weighted).  Shape (G,)."""
     z = pad_groups(spec, jnp.abs(c))
-    target_sq = (alpha * spec.weights) ** 2
+    # weights are float64 master data; compute in c's dtype so f32 hot
+    # loops stay f32 (_padded_segment_roots' seg_tol is dtype-aware)
+    target_sq = (alpha * spec.weights.astype(z.dtype)) ** 2
     return _padded_segment_roots(z, target_sq)
 
 

@@ -273,7 +273,7 @@ def sweep_sgl_core(X, X_sub, y, spec: GroupSpec, sub_spec: GroupSpec, alpha,
                 c = c - (mu * jnp.sum(rho)).astype(b.dtype)
             s = dual_scaling_sgl(spec, c, alpha)
             theta = (s * rho).astype(b.dtype)
-            pen = (alpha * jnp.sum(sub_spec.weights
+            pen = (alpha * jnp.sum(sub_spec.weights.astype(b.dtype)
                                    * group_norms(sub_spec, res.beta))
                    + jnp.sum(jnp.abs(res.beta)))
             pval = 0.5 * jnp.vdot(resid, resid) + lam * pen

@@ -60,7 +60,9 @@ def fista_sgl(X, y, spec: GroupSpec, lam, alpha, lipschitz, beta0, *,
     beta0 = beta0.astype(dtype)
     t_step = 1.0 / lipschitz
     t_l1 = t_step * lam                       # lam2 = lam
-    t_group = t_step * lam * alpha * spec.weights   # lam1*w_g = alpha*lam*w_g
+    # spec.weights is float64 master data; cast once at the boundary so the
+    # scan body stays dtype-pure (no silent f64 promotion on f32 problems)
+    t_group = t_step * lam * alpha * spec.weights.astype(dtype)
     gap_scale = jnp.maximum(0.5 * jnp.vdot(y, y), 1e-30)
     if prox is None:
         prox = lambda v, a, b: sgl_prox(spec, v, a, b)

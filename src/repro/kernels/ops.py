@@ -3,6 +3,22 @@
 On TPU the real kernels run; everywhere else (this CPU container) they run in
 ``interpret=True`` mode, which executes the kernel body in Python/XLA for
 correctness validation.  ``force_interpret`` lets tests pin the mode.
+
+Dtype-purity contract (statically enforced by ``repro.analysis``):
+
+* Every kernel is **float32-only**.  Callers gate on
+  ``path_engine._pallas_active`` and the screening entry points raise
+  ``TypeError`` on float64 + ``use_pallas`` (``pallas/f64-gate``); no f64
+  aval may reach a ``pallas_call`` (``pallas/f64-aval``), so f64 exactness
+  runs are provably kernel-free.
+* Kernels never change dtype internally: f32 in, f32 out, f32 accumulate.
+  Widening/narrowing happens (if ever) at the caller's boundary, never
+  inside a traced body (``jaxpr/upcast-in-loop`` / ``jaxpr/f64-downcast``).
+* Operands are padded to pow2 buckets by the engine BEFORE the call, so
+  every BlockSpec tiles its operand exactly (``pallas/block-divisibility``,
+  ``pallas/lane-misaligned``) and ragged tails are handled by explicit
+  masks, validated by poisoned-padding comparison against ``ref.py``
+  oracles (``pallas/mask-coverage``).
 """
 from __future__ import annotations
 

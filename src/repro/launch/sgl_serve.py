@@ -29,18 +29,52 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import functools
 import hashlib
 import time
 from typing import Optional
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from ..core import (EngineStats, Plan, as_group_spec, kfold_indices,
                     lambda_max_nn, lambda_max_sgl, sgl_fold_paths,
-                    nn_fold_paths, solve_nn_lasso, solve_sgl, spectral_norm)
+                    nn_fold_paths, spectral_norm)
 from ..core.cv import _cv_statistics, _masks_from_folds, per_fold_centering
 from ..core.path import default_lambda_grid
+from ..core.solver import fista_nn_lasso, fista_sgl
+
+
+@functools.partial(jax.jit, static_argnames=("penalty",))
+def _batch_lambda_max(X, ys, spec, alpha, *, penalty: str):
+    """Every job's lambda_max in one dispatch: a single (jobs, N) x (N, p)
+    GEMM feeding the vmapped Theorem-8 (sgl) / Theorem-20(iv) (nn_lasso)
+    anchor.  ``spec`` is unused (None) for nn_lasso."""
+    xty = ys @ X
+    if penalty == "sgl":
+        return jax.vmap(lambda c: lambda_max_sgl(spec, c, alpha)[0])(xty)
+    return jax.vmap(lambda c: lambda_max_nn(c)[0])(xty)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("penalty", "max_iter", "check_every"))
+def _batch_refit(X, ys, lams, spec, alpha, lipschitz, tol, *, penalty: str,
+                 max_iter: int, check_every: int):
+    """Full-data refits at each job's selected lambda, vmapped into one
+    dispatch.  Batched ``while_loop`` masks per-element updates, so every
+    job's iterate sequence (and iteration count) is identical to a solo
+    ``solve_sgl``/``solve_nn_lasso`` call.  Returns (betas, iters)."""
+    beta0 = jnp.zeros(X.shape[1], X.dtype)
+    if penalty == "sgl":
+        fits = jax.vmap(lambda y, lam: fista_sgl(
+            X, y, spec, lam, alpha, lipschitz, beta0, max_iter=max_iter,
+            check_every=check_every, tol=tol))(ys, lams)
+    else:
+        fits = jax.vmap(lambda y, lam: fista_nn_lasso(
+            X, y, lam, lipschitz, beta0, max_iter=max_iter,
+            check_every=check_every, tol=tol))(ys, lams)
+    return fits.beta, fits.iters
 
 
 @dataclasses.dataclass
@@ -158,13 +192,11 @@ class SGLServer:
         spec = jobs[0].spec
         alpha = jobs[0].alpha
         X_d = jnp.asarray(X)
+        ys_d = jnp.stack([jnp.asarray(job.y, X_d.dtype) for job in jobs])
 
-        lam_maxes = []
-        for job in jobs:
-            xty = X_d.T @ jnp.asarray(job.y)
-            lam_maxes.append(float(
-                lambda_max_sgl(spec, xty, alpha)[0] if penalty == "sgl"
-                else lambda_max_nn(xty)[0]))
+        # one batched dispatch + ONE host sync for every job's anchor
+        lam_maxes = [float(v) for v in np.asarray(
+            _batch_lambda_max(X_d, ys_d, spec, alpha, penalty=penalty))]
         lam_anchor = max(lam_maxes)
         if lam_anchor <= 0:
             # every job in the batch is degenerate (e.g. nn_lasso with
@@ -221,10 +253,11 @@ class SGLServer:
         # buckets=False: the server aggregate is process-lifetime
         self.stats.merge(stats, buckets=False)
 
-        # per-job CV statistics + full-data refit at the selected lambda
-        L_full = float(spectral_norm(X_d)) ** 2
-        results = {}
+        # per-job CV statistics (host-side, on already-harvested arrays),
+        # then ONE vmapped refit dispatch + one sync for the whole batch
+        L_full = spectral_norm(X_d) ** 2      # stays device-resident
         ids = [job.job_id for job in jobs]
+        cvs, sel_lams = [], []
         for t, job in enumerate(jobs):
             sl = slice(t * K, (t + 1) * K)
             job_mus = mus[sl] if mus is not None else None
@@ -233,21 +266,25 @@ class SGLServer:
                 X, job.y, folds, lambdas, betas[sl], lam_maxes[t], kept[sl],
                 stats, times, iters=iters[sl], mus=job_mus,
                 y_means=job_means)
+            cvs.append(cv)
             idx = (cv.best_index if plan.selection == "min"
                    else cv.index_1se)
-            lam = float(lambdas[idx])
-            y_d = jnp.asarray(job.y)
-            if penalty == "sgl":
-                fit = solve_sgl(X_d, y_d, spec, lam, alpha, L_full,
-                                max_iter=plan.max_iter, tol=plan.tol)
-            else:
-                fit = solve_nn_lasso(X_d, y_d, lam, L_full,
-                                     max_iter=plan.max_iter, tol=plan.tol)
+            sel_lams.append(float(lambdas[idx]))
+        # check_every=10 matches the solo solve_sgl/solve_nn_lasso default,
+        # so the refits are bit-identical to the pre-batched serve loop
+        betas_fit, iters_fit = _batch_refit(
+            X_d, ys_d, jnp.asarray(sel_lams, X_d.dtype), spec, alpha,
+            L_full, plan.tol, penalty=penalty, max_iter=plan.max_iter,
+            check_every=10)
+        betas_np, iters_np = np.asarray(betas_fit), np.asarray(iters_fit)
+        results = {}
+        for t, job in enumerate(jobs):
+            cv = cvs[t]
             results[job.job_id] = JobResult(
                 job_id=job.job_id, lambdas=lambdas, mean_mse=cv.mean_mse,
                 se_mse=cv.se_mse, best_lambda=cv.best_lambda,
-                lambda_1se=cv.lambda_1se, coef=np.asarray(fit.beta),
-                n_iter=int(fit.iters), latency=0.0, batched_with=ids,
+                lambda_1se=cv.lambda_1se, coef=betas_np[t],
+                n_iter=int(iters_np[t]), latency=0.0, batched_with=ids,
                 new_compilations=new_comp)
         wall = time.perf_counter() - t0
         for res in results.values():

@@ -1,0 +1,268 @@
+"""Tier-1 tests for the ``repro.analysis`` static-analysis suite.
+
+Two contracts are enforced here:
+
+  1. The *repository* is clean under every analyzer layer (modulo the
+     committed ``analysis/baseline.json``).  In particular the f64
+     exactness contract — no downcasts, no kernels reachable — is now a
+     STATIC property of the traced jaxprs, not just a runtime counter
+     (``test_f64_fold_paths_never_engage_kernels`` keeps the one runtime
+     ``n_pallas_screens == 0`` check).
+  2. The *analyzers themselves* catch seeded violations: a deliberate
+     upcast inside a scan, a host transfer mid-scan, a non-divisible
+     BlockSpec, a float64 kernel aval, and the full set of AST hazards —
+     while clean code produces zero findings.
+"""
+import os
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import diff_against_baseline, load_baseline
+from repro.analysis import ast_rules, compile_audit, jaxpr_lint, pallas_check
+from repro.core.problem import Plan, Problem
+from repro.core.session import SGLSession
+
+_BASELINE = os.path.join(os.path.dirname(__file__), os.pardir,
+                         "analysis", "baseline.json")
+
+
+# ---------------------------------------------------------------------------
+# 1. The repository is clean under every layer
+# ---------------------------------------------------------------------------
+
+def test_jaxpr_f64_purity_static():
+    """Static replacement of the runtime f64-purity checks: every engine /
+    CV / fold / serve entry point traced at float64 shows zero findings —
+    no narrowing converts, no pallas_call reachable, no transfers in scan
+    bodies, exactly one full-X GEMM per certification row."""
+    assert jaxpr_lint.run(dtypes=("float64",)) == []
+
+
+def test_jaxpr_f32_no_hot_loop_upcasts():
+    """f32 traces of the same entries never promote to f64 inside a
+    scan/while body (the classic leak: float64 GroupSpec.weights reaching
+    the FISTA prox)."""
+    assert jaxpr_lint.run(dtypes=("float32",)) == []
+
+
+def test_compile_audit_repo_clean():
+    assert compile_audit.run() == []
+
+
+@pytest.mark.pallas
+def test_pallas_check_repo_clean():
+    """BlockSpec divisibility, lane alignment, f64 avals, poisoned-padding
+    mask coverage, and the f64 TypeError gate — all kernels clean."""
+    assert pallas_check.run() == []
+
+
+def test_ast_rules_match_baseline():
+    """AST findings on the tree equal the committed baseline exactly: no
+    new jit-boundary hazards, and no stale (already-fixed) entries left to
+    rot in the baseline."""
+    findings = ast_rules.run()
+    new, _, stale = diff_against_baseline(findings, load_baseline(_BASELINE))
+    assert new == []
+    assert stale == []
+
+
+# ---------------------------------------------------------------------------
+# 2. Seeded violations — each layer must catch its fixture
+# ---------------------------------------------------------------------------
+
+def test_seeded_f64_downcast_is_caught():
+    def bad(x):
+        return jnp.sum(x.astype(jnp.float32))
+
+    x = jnp.ones(5, jnp.float64)
+    found = jaxpr_lint.lint_traceable(bad, x, name="seeded", dtype="float64")
+    assert [f.rule for f in found] == ["jaxpr/f64-downcast"]
+
+
+def test_seeded_upcast_in_scan_is_caught():
+    w64 = jnp.ones(5, jnp.float64)
+
+    def bad(x):
+        def body(c, xi):
+            return c + jnp.sum(xi * w64).astype(x.dtype), None
+        return jax.lax.scan(body, jnp.zeros((), x.dtype), x)[0]
+
+    x = jnp.ones((3, 5), jnp.float32)
+    found = jaxpr_lint.lint_traceable(bad, x, name="seeded", dtype="float32")
+    assert "jaxpr/upcast-in-loop" in [f.rule for f in found]
+
+
+def test_seeded_transfer_in_scan_is_caught():
+    def bad(x):
+        def body(c, xi):
+            r = jax.pure_callback(
+                lambda a: a, jax.ShapeDtypeStruct((), x.dtype), xi)
+            return c + r, None
+        return jax.lax.scan(body, jnp.zeros((), x.dtype), x)[0]
+
+    x = jnp.ones(4, jnp.float32)
+    found = jaxpr_lint.lint_traceable(bad, x, name="seeded", dtype="float32")
+    assert "jaxpr/transfer-in-loop" in [f.rule for f in found]
+
+
+def test_clean_scan_has_no_findings():
+    def good(x):
+        def body(c, xi):
+            return c + jnp.sum(xi), None
+        return jax.lax.scan(body, jnp.zeros((), x.dtype), x)[0]
+
+    for dt in ("float32", "float64"):
+        x = jnp.ones((3, 5), jnp.dtype(dt))
+        assert jaxpr_lint.lint_traceable(good, x, name="clean",
+                                         dtype=dt) == []
+
+
+@pytest.mark.pallas
+def test_seeded_bad_blockspec_is_caught():
+    import jax.experimental.pallas as pl
+
+    def copy_kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    def bad(x):
+        # block 5 over a dim of 7: interpret mode masks this, TPU would not
+        return pl.pallas_call(
+            copy_kernel,
+            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            grid=(2,),
+            in_specs=[pl.BlockSpec((5, x.shape[1]), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((5, x.shape[1]), lambda i: (i, 0)),
+        )(x)
+
+    x = jnp.ones((7, 128), jnp.float32)
+    found = pallas_check.check_traceable(bad, x, name="seeded")
+    assert "pallas/block-divisibility" in [f.rule for f in found]
+
+
+@pytest.mark.pallas
+def test_seeded_f64_aval_is_caught():
+    import jax.experimental.pallas as pl
+
+    def copy_kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    def bad(x):
+        return pl.pallas_call(
+            copy_kernel,
+            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            grid=(2,),
+            in_specs=[pl.BlockSpec((4, x.shape[1]), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((4, x.shape[1]), lambda i: (i, 0)),
+        )(x)
+
+    x = jnp.ones((8, 128), jnp.float64)
+    found = pallas_check.check_traceable(bad, x, name="seeded")
+    assert "pallas/f64-aval" in [f.rule for f in found]
+
+
+_AST_BAD = textwrap.dedent("""
+    import numpy as np
+    import jax
+
+    def traced_fn(x, flag):
+        v = float(x.sum())
+        if flag:
+            x = x + 1
+        return x * v
+
+    def hot_driver(X):
+        total = 0.0
+        res = None
+        for i in range(3):
+            res = solve_sgl(X)
+            total += float(res)
+        out = jax.block_until_ready(res)
+        return total, out
+""")
+
+_AST_CLEAN = textwrap.dedent("""
+    import numpy as np
+
+    def traced_ok(x, y=None, *, screen="dpc", max_iter=100):
+        if y is not None:
+            x = x + y
+        if screen == "gapsafe":
+            x = x * 2
+        return x
+
+    def host_ok(grid):
+        total = 0.0
+        for lam in grid:
+            total += lam           # plain host floats, no device values
+        return total
+""")
+
+
+def test_seeded_ast_hazards_are_caught():
+    found = ast_rules.lint_source(
+        _AST_BAD, "core/fixture.py",
+        traced={"core/fixture.py": {"traced_fn"}},
+        hot={"core/fixture.py": {"hot_driver"}})
+    rules = {f.rule for f in found}
+    assert rules == {
+        "ast/host-sync-in-traced",      # float() inside the traced fn
+        "ast/tracer-branch",            # if flag: on a traced param
+        "ast/jit-dispatch-in-loop",     # solve_sgl() per iteration
+        "ast/host-sync-in-hot-loop",    # float(res) on a device value
+        "ast/block-until-ready",        # unsanctioned barrier
+    }
+
+
+def test_clean_ast_has_no_findings():
+    found = ast_rules.lint_source(
+        _AST_CLEAN, "core/fixture.py",
+        traced={"core/fixture.py": {"traced_ok"}},
+        hot={"core/fixture.py": {"host_ok"}})
+    assert found == []
+
+
+# ---------------------------------------------------------------------------
+# 3. Compile-key audit agrees with a real engine run
+# ---------------------------------------------------------------------------
+
+def _small_sgl_problem():
+    rng = np.random.default_rng(0)
+    N, p = 30, 48
+    X = rng.standard_normal((N, p))
+    beta = np.zeros(p)
+    beta[:6] = rng.standard_normal(6)
+    y = X @ beta + 0.05 * rng.standard_normal(N)
+    return Problem.sgl(X, y, groups=[4] * 12)
+
+
+def test_compile_keys_all_predicted():
+    """Every compile key a real session pays (path + cv on one problem)
+    is a member of the statically predicted universe, the session counter
+    agrees with the cache, and the universe respects the polylog budget."""
+    prob = _small_sgl_problem()
+    plan = Plan(n_lambdas=12, n_folds=3, tol=1e-6, max_iter=2000)
+    sess = SGLSession(prob, plan)
+    sess.path()
+    sess.cv()
+
+    shape = compile_audit.ProblemShape.of(prob)
+    universe = compile_audit.predict_keys(shape, plan, kinds=("path", "cv"),
+                                          n_folds=3)
+    assert compile_audit.verify_paid_keys(sess.compile_keys, universe) == []
+    assert sess.stats.n_compilations == len(sess.compile_keys)
+    assert len(universe) <= compile_audit.budget(shape, plan, n_folds=3)
+    assert compile_audit.audit(shape, plan, n_folds=3) == []
+
+
+def test_unpredicted_key_is_flagged():
+    prob = _small_sgl_problem()
+    plan = Plan(n_lambdas=12, n_folds=3)
+    universe = compile_audit.predict_keys(
+        compile_audit.ProblemShape.of(prob), plan, n_folds=3)
+    bogus = ("sgl", 30, 48, 12, "float64", 1, 1, False, 48, 12, 4, 1)
+    found = compile_audit.verify_paid_keys([bogus], universe)
+    assert [f.rule for f in found] == ["compile/unpredicted-key"]
