@@ -451,3 +451,68 @@ def compile_audit_bench(n_folds=3):
         ("compile_audit_coverage", 0.0,
          round(paid / max(len(universe), 1), 4)),
     ]
+
+
+def resource_audit_bench(n_folds=3):
+    """Static resource cards vs XLA's own buffer assignment / cost model.
+
+    The Layer-4 audit (``repro.analysis.resource_audit``) prices every
+    compile key from abstract traces alone; this row AOT-compiles the
+    dominating path and fold keys at the bench dims and FAILS (raises) if
+    the static envelope under-estimates XLA's measured peak allocation,
+    if the loop-expanded FLOP envelope falls below XLA's single-count
+    figure, or if the fold sweep's extracted collective plan is non-empty
+    — the soundness contract every budget and ``--capacity`` number
+    rests on.
+
+    NOTE: like ``compile_audit_bench`` this imports ``repro.analysis``
+    (enables x64 process-wide), so run.py orders it LAST.
+    """
+    from repro.analysis import compile_audit, resource_audit
+    from repro.core import Plan
+    from repro.launch import hlo_analysis
+
+    N, G, n = SGL_DIMS["N"], SGL_DIMS["G"], SGL_DIMS["n"]
+    plan = Plan(alpha=1.0, n_lambdas=N_LAMBDA, tol=TOL, safety=1e-6,
+                max_iter=MAX_ITER, check_every=CHECK_EVERY, n_folds=n_folds)
+    shape = compile_audit.ProblemShape(N=N, p=G * n, G=G, max_size=n,
+                                       penalty="sgl", dtype="float32")
+
+    rows = []
+    for kind in ("path", "cv"):
+        key = resource_audit.dominating_key(shape, plan, kind,
+                                            n_folds=n_folds)
+        t0 = time.perf_counter()
+        card = resource_audit.card_for_key(key, f"bench/{kind}")
+        t_static = time.perf_counter() - t0
+        compiled = resource_audit.compile_key(key)
+        summary = hlo_analysis.compiled_summary(compiled)
+        measured = summary["memory"]["peak_bytes"]
+        if measured > card.peak_bytes:
+            raise RuntimeError(
+                f"resource-audit mismatch ({kind}): XLA peak "
+                f"{measured / 1e6:.2f} MB exceeds the static envelope "
+                f"{card.peak_bytes / 1e6:.2f} MB — the cost model "
+                f"under-estimates and every budget number is unsound")
+        xla_flops = float(summary["raw_cost"].get("flops", 0.0))
+        if card.flops < xla_flops:
+            raise RuntimeError(
+                f"resource-audit mismatch ({kind}): loop-expanded FLOPs "
+                f"{card.flops:.3e} below XLA's single-count "
+                f"{xla_flops:.3e}")
+        if kind == "cv":
+            colls = resource_audit.fold_collective_plan(
+                key, mesh_size=n_folds if n_folds % 2 else 2)
+            if colls:
+                raise RuntimeError(
+                    f"resource-audit mismatch: fold sweep body fires "
+                    f"collectives {sorted(colls)} — no longer "
+                    f"embarrassingly parallel")
+        rows.append((f"resource_audit_{kind}_static_price",
+                     round(t_static * 1e6, 1),
+                     round(card.peak_bytes / max(measured, 1), 3)))
+        rows.append((f"resource_audit_{kind}_peak_mb", 0.0,
+                     round(card.peak_bytes / 1e6, 3)))
+        rows.append((f"resource_audit_{kind}_transfer_mb", 0.0,
+                     round(card.transfer_bytes / 1e6, 3)))
+    return rows

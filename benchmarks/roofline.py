@@ -1,6 +1,11 @@
 """Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from
 benchmarks/results/dryrun.json.
 
+Thin consumer of ``repro.launch.hlo_analysis``: the roofline terms,
+dominant-term choice and peak-memory formula in dryrun.json are produced
+by ``hlo_analysis.compiled_summary``; this module only formats them and
+applies the shared ``DEVICE_HBM_GB`` fit threshold.
+
     PYTHONPATH=src python -m benchmarks.roofline [--mesh single|multi]
 """
 from __future__ import annotations
@@ -8,6 +13,8 @@ from __future__ import annotations
 import argparse
 import json
 import os
+
+from repro.launch.hlo_analysis import DEVICE_HBM_GB
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun.json")
 
@@ -40,7 +47,7 @@ def fmt_row(r):
         return None
     t = r["roofline"]
     mem = r["memory"]["peak_gb"]
-    fit = "Y" if mem <= 16.0 else "OVER"
+    fit = "Y" if mem <= DEVICE_HBM_GB else "OVER"
     dom = t["dominant"].replace("t_", "")
     ratio = r.get("useful_flops_ratio")
     ratio_s = f"{ratio:.2f}" if ratio else "-"
@@ -59,7 +66,8 @@ def main():
     print(f"### Roofline table — {args.mesh}-pod mesh, variant={args.variant}")
     print()
     print("| arch | shape | t_compute (s) | t_memory (s) | t_collective (s) "
-          "| bound | roofline frac | 6ND/HLO | peak GB/chip | fits 16GB |")
+          "| bound | roofline frac | 6ND/HLO | peak GB/chip | fits "
+          f"{DEVICE_HBM_GB:.0f}GB |")
     print("|---|---|---|---|---|---|---|---|---|---|")
     skips = []
     for (arch, shape, mesh), r in sorted(data.items()):

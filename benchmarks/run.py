@@ -30,10 +30,15 @@ The ``cv-pallas`` suite compares elastic vs lockstep fold scheduling and
 the fused fold-stack Pallas screening vs the jnp fallback at float32.
 
 ``--smoke`` runs only the fast engine + cv + cv-pallas + session +
-compile-audit comparison suites at reduced dimensions — the CI
-perf-regression gate.  The ``compile-audit`` suite (also in the full run)
-raises if the engine pays any jit compile key that
+compile-audit + resource-audit comparison suites at reduced dimensions —
+the CI perf-regression gate.  The ``compile-audit`` suite (also in the
+full run) raises if the engine pays any jit compile key that
 ``repro.analysis.compile_audit.predict_keys`` did not statically predict.
+The ``resource-audit`` suite AOT-compiles the dominating path/fold keys
+and raises if XLA's measured peak allocation or FLOP count exceeds the
+static cost-card envelope (``repro.analysis.resource_audit``) or a fold
+sweep body fires a collective — the soundness gate behind
+``analysis/budgets.json`` and ``python -m repro.analysis --capacity``.
 
 REPRO_BENCH_FULL=1 switches to the paper's full dimensions.
 """
@@ -138,9 +143,13 @@ def main() -> None:
                                             n_folds=min(folds, 3))),
             ("session", functools.partial(paper_tables.session_bench,
                                           n_folds=min(folds, 3))),
-            # LAST: imports repro.analysis, which enables x64 process-wide
+            # LAST: these import repro.analysis, which enables x64
+            # process-wide
             ("compile-audit",
              functools.partial(paper_tables.compile_audit_bench,
+                               n_folds=min(folds, 3))),
+            ("resource-audit",
+             functools.partial(paper_tables.resource_audit_bench,
                                n_folds=min(folds, 3))),
         ]  # smoke always baselines against the batched engine (CI gate)
     else:
@@ -165,9 +174,13 @@ def main() -> None:
                                             n_folds=folds)),
             ("session", functools.partial(paper_tables.session_bench,
                                           n_folds=folds)),
-            # LAST: imports repro.analysis, which enables x64 process-wide
+            # LAST: these import repro.analysis, which enables x64
+            # process-wide
             ("compile-audit",
              functools.partial(paper_tables.compile_audit_bench,
+                               n_folds=min(folds, 3))),
+            ("resource-audit",
+             functools.partial(paper_tables.resource_audit_bench,
                                n_folds=min(folds, 3))),
         ]
     only = suite_flag if suite_flag is not None else (argv[0] if argv

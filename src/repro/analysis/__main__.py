@@ -1,12 +1,18 @@
 """CLI for the static-analysis suite.
 
 Exit status 0 iff every finding is covered by the baseline; any NEW
-finding exits 1 (the CI gate).  Stale baseline entries only warn — remove
-them at leisure so the baseline shrinks instead of rotting.
+finding exits 1 (the CI gate).  Stale baseline entries warn — unless the
+entry cites a rule that no longer exists in the rule registry, which is
+definitional rot and exits 1 (run ``--prune-baseline`` to rewrite the
+file without the dead entries, deterministically sorted).
 
-    python -m repro.analysis --all --baseline analysis/baseline.json
+    python -m repro.analysis --all --baseline analysis/baseline.json \
+        --budgets analysis/budgets.json
     python -m repro.analysis --layer ast --layer pallas
     python -m repro.analysis --all --write-baseline analysis/baseline.json
+    python -m repro.analysis --all --baseline analysis/baseline.json --json
+    python -m repro.analysis --prune-baseline analysis/baseline.json
+    python -m repro.analysis --capacity [--plan n_folds=5 ...] [--hbm-gb 16]
 """
 from __future__ import annotations
 
@@ -14,15 +20,72 @@ import argparse
 import json
 import sys
 
-from . import (LAYERS, diff_against_baseline, format_report, load_baseline,
-               run_layers, write_baseline)
+from . import (KNOWN_RULES, LAYERS, diff_against_baseline, format_report,
+               load_baseline, run_layers, write_baseline)
+
+
+def _finding_lines(new, matched, stale):
+    """NDJSON findings stream: one JSON object per line (rule, severity,
+    location, detail, baseline status) — the GitHub-annotation feed."""
+    for f in sorted(new):
+        yield {"rule": f.rule, "severity": f.severity,
+               "location": f.location, "detail": f.detail,
+               "baseline": "new"}
+    for f in sorted(matched):
+        yield {"rule": f.rule, "severity": f.severity,
+               "location": f.location, "detail": f.detail,
+               "baseline": "baselined"}
+    for e in stale:
+        yield {"rule": e["rule"], "severity": "warning",
+               "location": e["location"],
+               "detail": "stale baseline entry (matched nothing)",
+               "baseline": "stale"}
+
+
+def _parse_plan_overrides(pairs):
+    """['n_folds=5', 'chunk_cap=128'] -> Plan(**overrides)."""
+    from ..core.problem import Plan
+    kw = {}
+    for pair in pairs or ():
+        if "=" not in pair:
+            raise SystemExit(f"--plan expects key=value, got {pair!r}")
+        k, v = pair.split("=", 1)
+        try:
+            kw[k] = json.loads(v)
+        except json.JSONDecodeError:
+            kw[k] = v
+    return Plan(**kw)
+
+
+def _run_capacity(args) -> int:
+    from . import resource_audit
+    plan = _parse_plan_overrides(args.plan)
+    hbm = int(args.hbm_gb * 1e9) if args.hbm_gb else None
+    rows = resource_audit.capacity_table(
+        plan, hbm_bytes=hbm, N=args.capacity_n,
+        survivors=args.survivors)
+    if args.as_json:
+        for r in rows:
+            print(json.dumps(r, sort_keys=True))
+        return 0
+    hbm_gb = (hbm or resource_audit.DEFAULT_BUDGETS["device_hbm_bytes"]) \
+        / 1e9
+    print(f"capacity planner: max p per device ({hbm_gb:.0f} GB HBM, "
+          f"N={args.capacity_n}, screened solve bucket <= "
+          f"{args.survivors} features)")
+    print("penalty,dtype,mode,max_p_screened,max_p_unscreened")
+    for r in rows:
+        print(f"{r['penalty']},{r['dtype']},{r['mode']},"
+              f"{r['max_p_screened']},{r['max_p_unscreened']}")
+    return 0
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="static analysis of the TLFre engine "
-                    "(jaxpr / compile-key / Pallas / AST layers)")
+                    "(jaxpr / compile-key / Pallas / AST / resource "
+                    "layers)")
     ap.add_argument("--all", action="store_true",
                     help="run every layer")
     ap.add_argument("--layer", action="append", choices=LAYERS, default=[],
@@ -30,17 +93,53 @@ def main(argv=None) -> int:
     ap.add_argument("--baseline", default=None,
                     help="baseline JSON of intentional findings; any "
                          "finding not in it fails the run")
+    ap.add_argument("--budgets", default=None,
+                    help="resource budget JSON (device HBM envelope + "
+                         "per-configuration peak/transfer budgets) for "
+                         "the resource layer")
     ap.add_argument("--write-baseline", default=None, metavar="PATH",
                     help="write current findings as a baseline skeleton "
                          "(justifications to be filled in) and exit 0")
+    ap.add_argument("--write-budgets", default=None, metavar="PATH",
+                    help="write the current resource cost cards as a "
+                         "budget file (25%% headroom) and exit 0")
+    ap.add_argument("--prune-baseline", default=None, metavar="PATH",
+                    help="re-run the layers and rewrite PATH keeping only "
+                         "entries that still match a finding "
+                         "(deterministically sorted), then exit 0")
+    ap.add_argument("--capacity", action="store_true",
+                    help="invert the resource model: report the largest "
+                         "p per device for the Plan (see --plan)")
+    ap.add_argument("--plan", action="append", default=[], metavar="K=V",
+                    help="Plan field override for --capacity "
+                         "(repeatable), e.g. --plan n_folds=5")
+    ap.add_argument("--hbm-gb", type=float, default=None,
+                    help="device HBM budget for --capacity (default 16)")
+    ap.add_argument("--survivors", type=int, default=16384,
+                    help="screened solve-bucket cap for --capacity "
+                         "(default 16384 features)")
+    ap.add_argument("--capacity-n", type=int, default=1000,
+                    help="sample count N for --capacity (default 1000)")
     ap.add_argument("--verbose", action="store_true",
                     help="list baselined findings too")
     ap.add_argument("--json", action="store_true", dest="as_json",
-                    help="machine-readable output")
+                    help="machine-readable output: one finding per line "
+                         "(rule, severity, location, detail, baseline "
+                         "status)")
     args = ap.parse_args(argv)
 
+    if args.capacity:
+        return _run_capacity(args)
+
+    if args.write_budgets:
+        from . import resource_audit
+        cards = resource_audit.audit_cards()
+        resource_audit.write_budgets(cards, args.write_budgets)
+        print(f"wrote {len(cards)} budget configs to {args.write_budgets}")
+        return 0
+
     layers = LAYERS if (args.all or not args.layer) else tuple(args.layer)
-    findings = run_layers(layers)
+    findings = run_layers(layers, budgets=args.budgets)
 
     if args.write_baseline:
         write_baseline(findings, args.write_baseline)
@@ -48,20 +147,36 @@ def main(argv=None) -> int:
               f"to {args.write_baseline}")
         return 0
 
+    if args.prune_baseline:
+        baseline = load_baseline(args.prune_baseline)
+        _, matched, stale = diff_against_baseline(findings, baseline)
+        kept = [e for e in baseline
+                if (e["rule"], e["location"]) in {f.key for f in matched}]
+        kept.sort(key=lambda e: (e["rule"], e["location"]))
+        with open(args.prune_baseline, "w") as fh:
+            json.dump({"findings": kept}, fh, indent=2)
+            fh.write("\n")
+        print(f"pruned {len(stale)} stale entr"
+              f"{'y' if len(stale) == 1 else 'ies'}; kept {len(kept)} in "
+              f"{args.prune_baseline}")
+        return 0
+
     baseline = load_baseline(args.baseline) if args.baseline else []
     new, matched, stale = diff_against_baseline(findings, baseline)
+    dead = [e for e in stale if e["rule"] not in KNOWN_RULES]
 
     if args.as_json:
-        print(json.dumps({
-            "layers": list(layers),
-            "new": [vars(f) for f in new],
-            "baselined": [vars(f) for f in matched],
-            "stale": stale,
-        }, indent=2))
+        for line in _finding_lines(new, matched, stale):
+            print(json.dumps(line, sort_keys=True))
     else:
         print(f"repro.analysis: layers={','.join(layers)}")
         print(format_report(new, matched, stale, verbose=args.verbose))
-    return 1 if new else 0
+        if dead:
+            print(f"DEAD baseline entries ({len(dead)}) — rule no longer "
+                  f"in the registry; run --prune-baseline:")
+            for e in dead:
+                print(f"  {e['rule']} @ {e['location']}")
+    return 1 if (new or dead) else 0
 
 
 if __name__ == "__main__":

@@ -27,11 +27,21 @@ def dp_axes(mesh_shape: Mapping[str, int]):
     return tuple(a for a in ("pod", "data") if a in mesh_shape)
 
 
-def _div(n, mesh_shape, axes) -> bool:
+def divisible(n, mesh_shape, axes) -> bool:
+    """The divisibility-degrading rule every sharding decision here (and
+    the fold engine's ``launch.mesh.fold_shard_compatible``) reduces to: a
+    dim shards over ``axes`` only when the combined axis size exceeds 1
+    AND divides it evenly — otherwise the layout silently degrades to
+    replicated.  Public so the static shard-layout verifier
+    (``repro.analysis.resource_audit``) checks the same predicate the
+    runtime applies."""
     if isinstance(axes, str):
         axes = (axes,)
     size = int(np.prod([mesh_shape.get(a, 1) for a in axes]))
     return size > 1 and n % size == 0
+
+
+_div = divisible
 
 
 def batch_pspec(cfg, shape_name, mesh_shape, batch_size: int):

@@ -173,9 +173,9 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool,
         compiled = lowered.compile()
         t_compile = time.time() - t0
 
-    mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
-    terms = hlo_analysis.analyze(compiled.as_text(), cost)
+    summary = hlo_analysis.compiled_summary(compiled)
+    mem = summary["memory"]
+    terms = summary["roofline"]
 
     mf_global = model_flops(cfg, shape_name)
     mf_per_chip = mf_global / n_chips
@@ -191,13 +191,11 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool,
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
         "params": model_lib.param_count(cfg),
         "memory": {
-            "argument_gb": mem.argument_size_in_bytes / 1e9,
-            "output_gb": mem.output_size_in_bytes / 1e9,
-            "temp_gb": mem.temp_size_in_bytes / 1e9,
-            "alias_gb": mem.alias_size_in_bytes / 1e9,
-            "peak_gb": (mem.argument_size_in_bytes + mem.temp_size_in_bytes
-                        + mem.output_size_in_bytes
-                        - mem.alias_size_in_bytes) / 1e9,
+            "argument_gb": mem["argument_bytes"] / 1e9,
+            "output_gb": mem["output_bytes"] / 1e9,
+            "temp_gb": mem["temp_bytes"] / 1e9,
+            "alias_gb": mem["alias_bytes"] / 1e9,
+            "peak_gb": mem["peak_bytes"] / 1e9,
         },
         "collectives": {"counts": terms["coll_counts"],
                         "result_bytes": terms["coll_result_bytes"],

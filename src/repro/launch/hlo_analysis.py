@@ -325,12 +325,16 @@ class HloCost:
 PEAK_FLOPS = 197e12          # bf16 / chip
 HBM_BW = 819e9               # bytes/s / chip
 LINK_BW = 50e9               # bytes/s / link (ICI)
+DEVICE_HBM_BYTES = int(16e9)  # per-chip HBM budget (16 GB)
+DEVICE_HBM_GB = DEVICE_HBM_BYTES / 1e9
 
 
-def _normalize_raw_cost(raw_cost) -> dict:
+def normalize_cost_analysis(raw_cost) -> dict:
     """``Compiled.cost_analysis()`` returns a dict in newer JAX but a
     one-element list of dicts in older releases (one entry per device
-    program).  Accept both, plus None."""
+    program).  Accept both, plus None.  The single entry point for every
+    consumer (dry-run, roofline table, resource audit) — do not hand-roll
+    the list-of-dicts handling elsewhere."""
     if raw_cost is None:
         return {}
     if isinstance(raw_cost, (list, tuple)):
@@ -344,6 +348,32 @@ def _normalize_raw_cost(raw_cost) -> dict:
                         merged.setdefault(k, v)
         return merged
     return dict(raw_cost)
+
+
+_normalize_raw_cost = normalize_cost_analysis
+
+
+def memory_breakdown(mem) -> dict:
+    """``Compiled.memory_analysis()`` -> byte breakdown + the peak formula
+    (argument + temp + output - alias) every consumer previously derived
+    by hand."""
+    arg = int(mem.argument_size_in_bytes)
+    out = int(mem.output_size_in_bytes)
+    tmp = int(mem.temp_size_in_bytes)
+    ali = int(mem.alias_size_in_bytes)
+    return {"argument_bytes": arg, "output_bytes": out, "temp_bytes": tmp,
+            "alias_bytes": ali, "peak_bytes": arg + tmp + out - ali}
+
+
+def compiled_summary(compiled) -> dict:
+    """One-stop extraction from a jax ``Compiled``: normalized XLA cost
+    counters, the memory breakdown with derived peak, and the loop-aware
+    roofline terms of :func:`analyze`."""
+    raw = normalize_cost_analysis(compiled.cost_analysis())
+    memory = memory_breakdown(compiled.memory_analysis())
+    terms = analyze(compiled.as_text(), raw)
+    return {"memory": memory, "roofline": terms, "raw_cost": raw,
+            "fits_hbm": memory["peak_bytes"] <= DEVICE_HBM_BYTES}
 
 
 def analyze(text: str, raw_cost: dict | list | None = None) -> dict:

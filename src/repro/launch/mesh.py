@@ -53,6 +53,20 @@ def make_fold_mesh(n_folds: int):
     return jax.make_mesh((d,), ("fold",), **_axis_type_kwargs(1))
 
 
+def abstract_fold_mesh(n_shards: int):
+    """A 1-D 'fold' ``AbstractMesh`` of ``n_shards`` — enough to TRACE a
+    ``shard_over_folds``-wrapped sweep (and extract its collective plan)
+    on a host with no multi-device hardware.  The static resource audit
+    (``repro.analysis.resource_audit``) uses this to prove fold sweep
+    bodies stay collective-free without ever forcing
+    ``xla_force_host_platform_device_count``."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh((("fold", int(n_shards)),))
+    except TypeError:      # older AbstractMesh signature takes a dict
+        return AbstractMesh({"fold": int(n_shards)})
+
+
 def fold_shard_compatible(mesh, n_folds: int) -> bool:
     """True when a fold-batched launch of ``n_folds`` rows should shard its
     leading axis over ``mesh``: a real multi-device 'fold' mesh whose size

@@ -266,3 +266,210 @@ def test_unpredicted_key_is_flagged():
     bogus = ("sgl", 30, 48, 12, "float64", 1, 1, False, 48, 12, 4, 1)
     found = compile_audit.verify_paid_keys([bogus], universe)
     assert [f.rule for f in found] == ["compile/unpredicted-key"]
+
+
+# ---------------------------------------------------------------------------
+# 4. Resource audit (Layer 4): cost cards, budget rules, shard layout
+# ---------------------------------------------------------------------------
+
+from repro.analysis import resource_audit  # noqa: E402
+from repro.launch.mesh import (abstract_fold_mesh,  # noqa: E402
+                               fold_shard_compatible, shard_over_folds)
+
+_BUDGETS = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "analysis", "budgets.json")
+
+
+def test_resource_audit_repo_clean():
+    """The representative configurations all fit the committed budgets:
+    under HBM, collective-free sweep bodies, divisible layouts, transfer
+    within the per-configuration envelope — zero findings."""
+    assert resource_audit.run(budgets=_BUDGETS) == []
+
+
+def test_seeded_oversized_bucket_breaches_hbm():
+    """A bucket ladder blown up to p_b = p = 2^26 at f64 prices far beyond
+    16 GB; exactly the hbm-over-budget rule fires."""
+    key = ("sgl", 1000, 1 << 26, 1 << 22, "float64", 1000, 10, False,
+           1 << 26, (1 << 22) + 1, 16, 64)
+    card = resource_audit.card_for_key(key, "seeded-oversize")
+    assert card.peak_bytes > resource_audit.DEFAULT_BUDGETS[
+        "device_hbm_bytes"]
+    found = resource_audit.check_cards([card],
+                                       resource_audit.DEFAULT_BUDGETS)
+    assert [f.rule for f in found] == ["resource/hbm-over-budget"]
+
+
+def test_seeded_non_divisible_shard_is_caught():
+    """A 4-device fold mesh over a 5-fold cohort degrades to single-shard
+    vmap — the layout verifier flags exactly that."""
+    found = resource_audit.verify_shard_layout(4, 5, "seeded-layout")
+    assert [f.rule for f in found] == ["resource/non-divisible-shard"]
+    assert resource_audit.verify_shard_layout(4, 8, "ok-layout") == []
+    assert resource_audit.verify_shard_layout(1, 5, "single") == []
+
+
+def test_seeded_collective_in_sweep_body_is_caught():
+    """A psum smuggled into a fold-sharded body shows up in the extracted
+    collective plan and trips unexpected-collective (unless the budget
+    explicitly allows it)."""
+    mesh = abstract_fold_mesh(2)
+
+    def leaky(v):                       # (4, 8) rows, cross-fold reduction
+        return v - jax.lax.psum(v.sum(), "fold")
+
+    sharded = shard_over_folds(leaky, mesh, (0,))
+    closed = jax.make_jaxpr(sharded)(
+        jax.ShapeDtypeStruct((4, 8), jnp.float32))
+    cost = resource_audit.walk_cost(closed.jaxpr, 1.0, 1)
+    assert "psum" in cost["collectives"]
+    assert cost["collectives"]["psum"]["count"] == 1
+
+    card = resource_audit.card_for_key(
+        ("nn-folds", 4, 20, 40, "float32", 100, 10, None, 16, 4, False),
+        "seeded-collective")
+    card = __import__("dataclasses").replace(
+        card, collectives=cost["collectives"])
+    found = resource_audit.check_cards([card],
+                                       resource_audit.DEFAULT_BUDGETS)
+    assert [f.rule for f in found] == ["resource/unexpected-collective"]
+    allowed = dict(resource_audit.DEFAULT_BUDGETS,
+                   allowed_collectives=["psum"])
+    assert resource_audit.check_cards([card], allowed) == []
+
+
+def test_seeded_transfer_regression_is_caught():
+    """Tightening a configuration's transfer budget below the card's
+    per-launch bytes fires transfer-in-segment-regression — the static
+    tripwire for re-shipping a full-p operand every segment."""
+    key = ("nn", 50, 200, "float64", 100, 10, False, 64, 8)
+    card = resource_audit.card_for_key(key, "seeded-transfer")
+    budgets = dict(resource_audit.DEFAULT_BUDGETS)
+    budgets["configs"] = {"seeded-transfer":
+                          {"peak_bytes": card.peak_bytes,
+                           "transfer_bytes": card.transfer_bytes // 2}}
+    found = resource_audit.check_cards([card], budgets)
+    assert [f.rule for f in found] == [
+        "resource/transfer-in-segment-regression"]
+    budgets["configs"]["seeded-transfer"]["transfer_bytes"] = \
+        card.transfer_bytes
+    assert resource_audit.check_cards([card], budgets) == []
+
+
+def test_fold_sweep_collective_plan_is_empty():
+    """The engine's own fold sweeps are embarrassingly parallel: tracing
+    the dominating cv keys under shard_map on an abstract 2-shard mesh
+    extracts an EMPTY collective plan."""
+    from repro.core.problem import Plan as _Plan
+    plan = _Plan(n_lambdas=12, n_folds=4)
+    shape = compile_audit.ProblemShape(N=40, p=96, G=24, max_size=4,
+                                       penalty="sgl", dtype="float64")
+    key = resource_audit.dominating_key(shape, plan, "cv", n_folds=4)
+    assert resource_audit.fold_collective_plan(key, mesh_size=2) == {}
+
+
+def test_peak_envelope_never_underestimates_xla():
+    """The soundness contract behind every capacity/budget number: for a
+    real audit card, XLA's own buffer-assignment peak never exceeds the
+    static envelope, and the loop-expanded FLOPs dominate XLA's
+    single-count figure."""
+    from repro.launch import hlo_analysis
+    key = ("sgl", 60, 128, 32, "float64", 200, 10, False, 64, 33, 4, 8)
+    card = resource_audit.card_for_key(key, "soundness")
+    compiled = resource_audit.compile_key(key)
+    summary = hlo_analysis.compiled_summary(compiled)
+    assert summary["memory"]["peak_bytes"] <= card.peak_bytes
+    xla_flops = summary["raw_cost"].get("flops", 0.0)
+    assert card.flops >= xla_flops
+
+
+def test_capacity_planner_monotone_and_positive():
+    """--capacity numbers behave like capacities: every cell is positive,
+    screened >= unscreened for the same cell, f32 >= f64, and doubling
+    HBM does not shrink max p."""
+    from repro.core.problem import Plan as _Plan
+    plan = _Plan(n_lambdas=12, n_folds=4)
+    kw = dict(plan=plan, N=200, group_size=8, survivors=1024)
+    small = resource_audit.capacity_max_p(
+        "sgl", "float64", "path", hbm_bytes=int(2e9), **kw)
+    big = resource_audit.capacity_max_p(
+        "sgl", "float64", "path", hbm_bytes=int(4e9), **kw)
+    f32 = resource_audit.capacity_max_p(
+        "sgl", "float32", "path", hbm_bytes=int(2e9), **kw)
+    unscreened = resource_audit.capacity_max_p(
+        "sgl", "float64", "path", hbm_bytes=int(2e9),
+        plan=plan, N=200, group_size=8, survivors=None)
+    assert 0 < small <= big
+    assert f32 >= small
+    assert small >= unscreened > 0
+    peak = resource_audit._peak_at(small, "sgl", "float64", "path",
+                                   N=200, group_size=8, plan=plan,
+                                   survivors=1024)
+    assert peak <= int(2e9)
+
+
+def test_capacity_searches_downward_when_first_probe_over():
+    """A tiny HBM budget puts the planner's opening probe over budget; it
+    must walk down and still return the largest fitting p instead of 0."""
+    from repro.core.problem import Plan as _Plan
+    plan = _Plan(n_lambdas=12, n_folds=4)
+    got = resource_audit.capacity_max_p(
+        "nn_lasso", "float64", "path", plan=plan, hbm_bytes=int(2e8),
+        N=200, group_size=8, survivors=4096)
+    assert got > 0
+    peak = resource_audit._peak_at(got, "nn_lasso", "float64", "path",
+                                   N=200, group_size=8, plan=plan,
+                                   survivors=4096)
+    assert peak <= int(2e8)
+
+
+# ---------------------------------------------------------------------------
+# 5. Mesh helpers the shard verifier builds on
+# ---------------------------------------------------------------------------
+
+class _FakeMesh:
+    def __init__(self, size):
+        self.size = size
+
+
+@pytest.mark.parametrize("size,n_folds,want", [
+    (1, 4, False),     # single device: never shard
+    (2, 4, True),
+    (2, 5, False),     # 5 folds over 2 shards: uneven split
+    (4, 8, True),
+    (4, 6, False),
+    (3, 9, True),
+])
+def test_fold_shard_compatible_divisibility(size, n_folds, want):
+    assert fold_shard_compatible(_FakeMesh(size), n_folds) is want
+    assert fold_shard_compatible(None, n_folds) is False
+
+
+def test_shard_over_folds_identity_on_single_device():
+    fn = lambda v: v * 2  # noqa: E731
+    assert shard_over_folds(fn, None, (0,)) is fn
+    assert shard_over_folds(fn, _FakeMesh(1), (0,)) is fn
+
+
+def test_shard_over_folds_abstract_trace_matches_vmap():
+    """Traced under shard_map on an abstract 2-shard mesh, a fold-batched
+    function keeps its global output shapes and introduces no
+    collectives — the property the Layer-4 collective extractor relies
+    on."""
+    mesh = abstract_fold_mesh(2)
+    assert mesh.size == 2
+
+    def body(v, w):
+        return v @ w, v.sum(axis=1)
+
+    S = jax.ShapeDtypeStruct
+    args = (S((4, 6, 3), jnp.float32), S((3, 5), jnp.float32))
+    plain = jax.eval_shape(body, *args)
+    sharded = shard_over_folds(body, mesh, (0, None))
+    closed = jax.make_jaxpr(sharded)(*args)
+    got = [v.aval for v in closed.jaxpr.outvars]
+    want = jax.tree_util.tree_leaves(plain)
+    assert [(v.shape, v.dtype) for v in got] == \
+        [(w.shape, w.dtype) for w in want]
+    cost = resource_audit.walk_cost(closed.jaxpr, 1.0, 1)
+    assert cost["collectives"] == {}

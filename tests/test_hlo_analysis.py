@@ -93,3 +93,40 @@ def test_hbm_slice_accounting():
     t = H.analyze(c.as_text(), c.cost_analysis())
     full_reads = 64 * 512 * 1024 * 4          # if each step read all of x
     assert t["bytes"] < full_reads / 4, "slice traffic should be ~slice-sized"
+
+
+# ---------------------------------------------------------------------------
+# Unified XLA cost/memory normalization (shared by dryrun, roofline, and
+# the Layer-4 resource audit)
+# ---------------------------------------------------------------------------
+
+def test_normalize_cost_analysis_list_and_dict():
+    """`Compiled.cost_analysis()` returns a list of dicts on some jax
+    releases and a bare dict on others; the one normalizer behind every
+    consumer must accept both (and junk)."""
+    assert H.normalize_cost_analysis({"flops": 7.0}) == {"flops": 7.0}
+    assert H.normalize_cost_analysis([{"flops": 7.0}]) == {"flops": 7.0}
+    assert H.normalize_cost_analysis([]) == {}
+    assert H.normalize_cost_analysis(None) == {}
+    assert H.normalize_cost_analysis(["nope"]) == {}
+
+
+def test_compiled_summary_fields():
+    """compiled_summary is the single backend for measured peak memory /
+    roofline terms: its peak formula matches memory_analysis() and its
+    flops come from the loop-aware analyzer."""
+    def f(a, b):
+        return a @ b
+
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    c = _compile(f, a, b)
+    s = H.compiled_summary(c)
+    mem = s["memory"]
+    assert mem["peak_bytes"] == (mem["argument_bytes"] + mem["temp_bytes"]
+                                 + mem["output_bytes"] - mem["alias_bytes"])
+    assert mem["argument_bytes"] >= 64 * 128 * 4 + 128 * 32 * 4
+    assert mem["output_bytes"] >= 64 * 32 * 4
+    expect = 2 * 64 * 128 * 32
+    assert abs(s["roofline"]["flops"] - expect) / expect < 0.01
+    assert s["fits_hbm"] is True
