@@ -516,3 +516,72 @@ def resource_audit_bench(n_folds=3):
         rows.append((f"resource_audit_{kind}_transfer_mb", 0.0,
                      round(card.transfer_bytes / 1e6, 3)))
     return rows
+
+
+def feature_shard_bench(feature_shards=8):
+    """Feature-sharded vs single-device screening parity + throughput.
+
+    Runs the batched SGL path with ``Plan(feature_shards=S)`` against the
+    unsharded engine at the bench dims and FAILS (raises) if the kept
+    feature/group sets differ anywhere on the grid, if accepted betas
+    drift beyond 1e-5 (f32 data; the f64 contract is 1e-8, proven in
+    tier-1 ``tests/test_feature_shard.py``), or if the Layer-4 collective
+    plan of the sharded screen+cert+fit composite is anything but the
+    single partial-fit psum.  On this single-device container the sharded
+    route runs the stacked-vmap executor — the derived column reports the
+    sharded-over-unsharded wall-clock ratio, compile-inclusive (the
+    sharded keys compile fresh here, so expect >> 1 at smoke dims; the
+    payoff is memory, ~linear max-p scaling per device, priced by
+    ``python -m repro.analysis --capacity``).
+
+    NOTE: imports ``repro.analysis`` (enables x64 process-wide) — run.py
+    orders this row LAST with the other analysis-importing suites.
+    """
+    from repro.analysis import compile_audit, resource_audit
+    from repro.core import Plan, Problem, SGLSession
+
+    X, y, _ = data_synth.synthetic_sgl(1, gamma1=0.1, gamma2=0.1, seed=5,
+                                       **SGL_DIMS)
+    X = np.asarray(X, np.float32)
+    y = np.asarray(y, np.float32)
+    spec = GroupSpec.uniform_groups(SGL_DIMS["G"], SGL_DIMS["n"])
+    prob = Problem.sgl(X, y, spec, dtype=np.float32)
+    base = Plan(alpha=1.0, n_lambdas=N_LAMBDA, tol=TOL, safety=1e-6,
+                max_iter=MAX_ITER, check_every=CHECK_EVERY)
+
+    sess = SGLSession(prob)
+    t0 = time.perf_counter()
+    ref = sess.path(base)
+    t_ref = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    sh = sess.path(base.with_(feature_shards=feature_shards))
+    t_sh = time.perf_counter() - t0
+
+    if not np.array_equal(ref.kept_features, sh.kept_features) or \
+            not np.array_equal(ref.kept_groups, sh.kept_groups):
+        raise RuntimeError(
+            "feature-shard mismatch: sharded kept sets differ from the "
+            "single-device engine")
+    drift = float(np.abs(ref.betas - sh.betas).max())
+    if drift > 1e-5:
+        raise RuntimeError(
+            f"feature-shard mismatch: sharded betas drift {drift:.3e} "
+            f"beyond the f32 parity envelope 1e-5")
+
+    shape = compile_audit.ProblemShape.of(prob)
+    key = resource_audit.dominating_key(
+        shape, base.with_(feature_shards=feature_shards), "path")
+    colls = resource_audit.feature_collective_plan(key)
+    if set(colls) != {"psum"} or colls["psum"]["count"] != 1:
+        raise RuntimeError(
+            f"feature-shard mismatch: sharded collective plan "
+            f"{sorted(colls)} is not the single partial-fit psum")
+
+    J = max(len(ref.lambdas), 1)
+    return [
+        ("feature_shard_parity_beta_drift", 0.0, round(drift, 12)),
+        ("feature_shard_sharded_path", round(t_sh / J * 1e6, 1),
+         round(t_sh / max(t_ref, 1e-12), 3)),
+        ("feature_shard_psum_payload_bytes", 0.0,
+         colls["psum"]["payload_bytes"]),
+    ]

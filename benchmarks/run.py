@@ -30,8 +30,11 @@ The ``cv-pallas`` suite compares elastic vs lockstep fold scheduling and
 the fused fold-stack Pallas screening vs the jnp fallback at float32.
 
 ``--smoke`` runs only the fast engine + cv + cv-pallas + session +
-compile-audit + resource-audit comparison suites at reduced dimensions —
-the CI perf-regression gate.  The ``compile-audit`` suite (also in the
+compile-audit + resource-audit + feature-shard comparison suites at
+reduced dimensions — the CI perf-regression gate.  The ``feature-shard``
+suite (also in the full run) raises if ``Plan(feature_shards=8)`` kept
+sets / betas drift from the single-device engine or if the sharded
+collective plan is anything but the single partial-fit psum.  The ``compile-audit`` suite (also in the
 full run) raises if the engine pays any jit compile key that
 ``repro.analysis.compile_audit.predict_keys`` did not statically predict.
 The ``resource-audit`` suite AOT-compiles the dominating path/fold keys
@@ -151,6 +154,7 @@ def main() -> None:
             ("resource-audit",
              functools.partial(paper_tables.resource_audit_bench,
                                n_folds=min(folds, 3))),
+            ("feature-shard", paper_tables.feature_shard_bench),
         ]  # smoke always baselines against the batched engine (CI gate)
     else:
         # ordered so the claim-critical rejection figures and the roofline
@@ -182,6 +186,7 @@ def main() -> None:
             ("resource-audit",
              functools.partial(paper_tables.resource_audit_bench,
                                n_folds=min(folds, 3))),
+            ("feature-shard", paper_tables.feature_shard_bench),
         ]
     only = suite_flag if suite_flag is not None else (argv[0] if argv
                                                      else None)

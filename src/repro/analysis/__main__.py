@@ -63,7 +63,7 @@ def _run_capacity(args) -> int:
     hbm = int(args.hbm_gb * 1e9) if args.hbm_gb else None
     rows = resource_audit.capacity_table(
         plan, hbm_bytes=hbm, N=args.capacity_n,
-        survivors=args.survivors)
+        survivors=args.survivors, feature_shards=args.shards)
     if args.as_json:
         for r in rows:
             print(json.dumps(r, sort_keys=True))
@@ -72,11 +72,15 @@ def _run_capacity(args) -> int:
         / 1e9
     print(f"capacity planner: max p per device ({hbm_gb:.0f} GB HBM, "
           f"N={args.capacity_n}, screened solve bucket <= "
-          f"{args.survivors} features)")
-    print("penalty,dtype,mode,max_p_screened,max_p_unscreened")
+          f"{args.survivors} features, sharded column at "
+          f"{args.shards} feature shards)")
+    print("penalty,dtype,mode,max_p_screened,max_p_unscreened,"
+          "max_p_sharded")
     for r in rows:
+        sharded = r["max_p_sharded"]
         print(f"{r['penalty']},{r['dtype']},{r['mode']},"
-              f"{r['max_p_screened']},{r['max_p_unscreened']}")
+              f"{r['max_p_screened']},{r['max_p_unscreened']},"
+              f"{'-' if sharded is None else sharded}")
     return 0
 
 
@@ -120,6 +124,10 @@ def main(argv=None) -> int:
                          "(default 16384 features)")
     ap.add_argument("--capacity-n", type=int, default=1000,
                     help="sample count N for --capacity (default 1000)")
+    ap.add_argument("--shards", type=int, default=8,
+                    help="feature-shard count for --capacity's sharded "
+                         "column and --write-budgets' feat cards "
+                         "(default 8)")
     ap.add_argument("--verbose", action="store_true",
                     help="list baselined findings too")
     ap.add_argument("--json", action="store_true", dest="as_json",
@@ -134,6 +142,8 @@ def main(argv=None) -> int:
     if args.write_budgets:
         from . import resource_audit
         cards = resource_audit.audit_cards()
+        cards.extend(resource_audit.feature_audit_cards(
+            feature_shards=args.shards))
         resource_audit.write_budgets(cards, args.write_budgets)
         print(f"wrote {len(cards)} budget configs to {args.write_budgets}")
         return 0

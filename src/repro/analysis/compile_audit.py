@@ -130,6 +130,12 @@ def predict_keys(shape: ProblemShape, plan, kinds: Iterable[str] = ("path",
     if "path" in kinds:
         # single-path chunk cap is the engine's hardcoded 64
         lens = chunk_lengths(J, plan.chunk_init, 64)
+        shards = int(getattr(plan, "feature_shards", 0))
+        if shards > 1:
+            from ..distributed.feature_shard import effective_shards
+            shards = effective_shards(G if shape.penalty == "sgl" else p,
+                                      shards)
+        feat = shards > 1
         if shape.penalty == "sgl":
             # + exact G: the S.all() fast path keeps the parent spec
             gbs = sorted(set(group_buckets(G, plan.min_group_bucket))
@@ -137,14 +143,32 @@ def predict_keys(shape: ProblemShape, plan, kinds: Iterable[str] = ("path",
             for p_b in fbs:
                 for g_b in gbs:
                     for len2 in lens:
-                        keys.add(("sgl", N, p, G, shape.dtype,
-                                  plan.max_iter, plan.check_every, pallas,
-                                  p_b, g_b, shape.max_size, len2))
+                        if feat:
+                            # sharded keys swap pallas (forced off) for
+                            # the real-mesh flag, which depends on the
+                            # host's device count — predict both values
+                            for on_mesh in (False, True):
+                                keys.add(("sgl-feat", shards, N, p, G,
+                                          shape.dtype, plan.max_iter,
+                                          plan.check_every, on_mesh, p_b,
+                                          g_b, shape.max_size, len2))
+                        else:
+                            keys.add(("sgl", N, p, G, shape.dtype,
+                                      plan.max_iter, plan.check_every,
+                                      pallas, p_b, g_b, shape.max_size,
+                                      len2))
         else:
             for p_b in fbs:
                 for len2 in lens:
-                    keys.add(("nn", N, p, shape.dtype, plan.max_iter,
-                              plan.check_every, pallas, p_b, len2))
+                    if feat:
+                        for on_mesh in (False, True):
+                            keys.add(("nn-feat", shards, N, p,
+                                      shape.dtype, plan.max_iter,
+                                      plan.check_every, on_mesh, p_b,
+                                      len2))
+                    else:
+                        keys.add(("nn", N, p, shape.dtype, plan.max_iter,
+                                  plan.check_every, pallas, p_b, len2))
 
     if "cv" in kinds:
         lens = chunk_lengths(J, plan.chunk_init, plan.chunk_cap)
@@ -184,7 +208,10 @@ def budget(shape: ProblemShape, plan, kinds=("path", "cv"),
     lc = math.floor(math.log2(max(min(J, 64), 2))) + 2
     total = 0
     if "path" in kinds:
-        total += lf * lg * lc
+        # sharded path keys carry the real-mesh flag (2 values); the shard
+        # count itself is pinned by the plan, so the universe only doubles
+        feat_mult = 2 if int(getattr(plan, "feature_shards", 0)) > 1 else 1
+        total += lf * lg * lc * feat_mult
     if "cv" in kinds:
         total += n_folds * lf * lg * lc
     return total
@@ -241,7 +268,8 @@ def run() -> list:
     ]
     plans = [("default", base),
              ("per-fold", base.with_(center="per-fold")),
-             ("big-chunk", base.with_(chunk_init=32, chunk_cap=128))]
+             ("big-chunk", base.with_(chunk_init=32, chunk_cap=128)),
+             ("feat8", base.with_(feature_shards=8))]
     for shape in shapes:
         for pname, plan in plans:
             if shape.penalty == "nn_lasso" and plan.center == "per-fold":

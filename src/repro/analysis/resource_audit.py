@@ -339,11 +339,70 @@ def _args_for_key(key: tuple):
         resident = [True, False, True, False, False, False, False, False,
                     False]
         return fn, args, resident
+    if kind in ("sgl-feat", "nn-feat"):
+        # PER-DEVICE card: one shard block priced at the static width
+        # envelope (shard_width_bound) — exactly the program each mesh
+        # device runs under shard_map, so the HBM gate applies per device
+        # and --capacity shows the ~linear max-p scaling sharding buys
+        from ..distributed.feature_shard import feature_ops
+        return _feat_trace(key, feature_ops(1, None), 1)
     raise ValueError(f"unknown compile-key kind {kind!r}")
 
 
+def _feat_trace(key: tuple, ops, S_lead: int):
+    """(fn, abstract args, resident flags) of a feature-sharded sweep key,
+    with ``S_lead`` stacked shard blocks executed by ``ops``.
+
+    The block width is the static envelope
+    ``shard_width_bound(p, n_units, S_effective, max_size)`` — the count is
+    degraded through ``effective_shards`` first (the partitioner's rule),
+    so a non-dividing request is priced at the WIDER blocks it actually
+    produces, never the optimistic ``p / requested``."""
+    from ..core.path_engine import sweep_nn_core_feat, sweep_sgl_core_feat
+    from ..distributed.feature_shard import (effective_shards,
+                                             shard_width_bound)
+    S = jax.ShapeDtypeStruct
+    kind = key[0]
+    if kind == "sgl-feat":
+        (_, Sn, N, p, G, dtype_s, max_iter, check_every, _mesh_flag,
+         p_b, g_b, max_size, len2) = key
+        dt = jnp.dtype(dtype_s)
+        S_eff = effective_shards(G, Sn)
+        p_sh = shard_width_bound(p, G, S_eff, max_size)
+        G_sh = max(G // S_eff, 1)
+        fn = functools.partial(sweep_sgl_core_feat, ops=ops,
+                               max_iter=max_iter, check_every=check_every)
+        args = [S((S_lead, N, p_sh), dt), S((N, p_b), dt), S((N,), dt),
+                _abstract_spec(G_sh, p_sh, max_size, dt, lead=(S_lead,)),
+                _abstract_spec(g_b, p_b, max_size, dt),
+                0.5, S((), dt), S((len2,), dt), S((len2,), jnp.bool_),
+                S((p_b,), dt), 1e-9, 1.0]
+        resident = [True, False, True, True, False, False, False, False,
+                    False, False, False, False]
+        return fn, args, resident
+    (_, Sn, N, p, dtype_s, max_iter, check_every, _mesh_flag, p_b,
+     len2) = key
+    dt = jnp.dtype(dtype_s)
+    S_eff = effective_shards(p, Sn)
+    p_sh = shard_width_bound(p, p, S_eff, 1)
+    fn = functools.partial(sweep_nn_core_feat, ops=ops, max_iter=max_iter,
+                           check_every=check_every)
+    args = [S((S_lead, N, p_sh), dt), S((N, p_b), dt), S((N,), dt),
+            S((), dt), S((len2,), dt), S((len2,), jnp.bool_), S((p_b,), dt),
+            1e-9, 1.0]
+    resident = [True, False, True, False, False, False, False, False,
+                False]
+    return fn, args, resident
+
+
+#: index of ``max_iter`` in each compile-key tuple (the while-trip bound
+#: ``walk_cost`` expands iteration loops by)
+_MAX_ITER_IDX = {"sgl": 5, "nn": 4, "sgl-folds": 6, "nn-folds": 5,
+                 "sgl-feat": 6, "nn-feat": 5}
+
+
 def _max_iter_of(key: tuple) -> int:
-    return int(key[5] if key[0] in ("sgl", "nn") else key[6])
+    return int(key[_MAX_ITER_IDX[key[0]]])
 
 
 def _tree_bytes(x) -> int:
@@ -401,15 +460,31 @@ def card_for_key(key: tuple, label: str = "", *, mesh_size: int = 1,
     res_bytes = sum(_tree_bytes(a) for a, r in zip(args, resident) if r)
     h2d = sum(_tree_bytes(a) for a, r in zip(args, resident) if not r)
     cost = walk_cost(closed.jaxpr, 1.0, _max_iter_of(key))
-    Ka = key[1] if key[0].endswith("-folds") else 1
-    n_folds = Ka if n_folds is None else n_folds
-    shard = {
-        "mesh_size": int(mesh_size),
-        "rows": int(Ka),
-        "full_cohort": int(n_folds),
-        "sharded": bool(mesh_size > 1 and Ka % mesh_size == 0),
-        "divisible": bool(mesh_size <= 1 or n_folds % mesh_size == 0),
-    }
+    if key[0].endswith("-feat"):
+        # feature mesh: 'rows' are the shard blocks; divisibility is the
+        # partitioner's group-count rule (effective == requested)
+        from ..distributed.feature_shard import effective_shards
+        Sn = int(key[1])
+        n_units = int(key[4]) if key[0] == "sgl-feat" else int(key[3])
+        S_eff = effective_shards(n_units, Sn)
+        shard = {
+            "mesh_size": S_eff,
+            "rows": Sn,
+            "full_cohort": Sn,
+            "sharded": bool(S_eff > 1),
+            "divisible": bool(S_eff == Sn),
+        }
+        cost = dict(cost, collectives=feature_collective_plan(key))
+    else:
+        Ka = key[1] if key[0].endswith("-folds") else 1
+        n_folds = Ka if n_folds is None else n_folds
+        shard = {
+            "mesh_size": int(mesh_size),
+            "rows": int(Ka),
+            "full_cohort": int(n_folds),
+            "sharded": bool(mesh_size > 1 and Ka % mesh_size == 0),
+            "divisible": bool(mesh_size <= 1 or n_folds % mesh_size == 0),
+        }
     return CostCard(
         label=label or key[0], key=key, arg_bytes=arg_bytes,
         out_bytes=out_bytes, excess_bytes=excess,
@@ -459,6 +534,86 @@ def fold_collective_plan(key: tuple, mesh_size: int = 2) -> dict:
     return cost["collectives"]
 
 
+def feature_collective_plan(key: tuple, screen_fn=None) -> dict:
+    """Collective plan of the feature-sharded layer for a ``*-feat`` key:
+    the canonical screen + certification + partial-fit composite is traced
+    under ``shard_map`` on an abstract 'feature' mesh (no multi-device
+    hardware needed) and every collective primitive is extracted with
+    payload bytes.
+
+    The sharded layer is built so the ONLY collective is the psum of
+    N-sized partial fits (``FeatureOps.fsum``); screens and group stats
+    are feature-local ``fmap`` programs, and the global dual-scaling
+    reduction runs on the gathered (S, G_shard) stack OUTSIDE the mapped
+    body.  In particular no ``all_gather`` of shard blocks may appear — a
+    full-X gather would erase the memory win sharding exists for.  Budget
+    entries for these cards therefore carry
+    ``"allowed_collectives": ["psum"]``; anything else fires
+    ``resource/unexpected-collective``.
+
+    ``screen_fn(ops, Xs, specs_or_None, *std_args)`` substitutes the
+    screen stage (the seeded-violation tests inject an illegally
+    gathering screen); None uses the engine's own grid screen."""
+    if not key[0].endswith("-feat"):
+        raise ValueError("feature collective plans are defined for "
+                         "*-feat keys")
+    from ..distributed.feature_shard import (cert_nn, cert_sgl,
+                                             effective_shards, feature_ops,
+                                             shard_width_bound,
+                                             sharded_fit)
+    from ..launch.mesh import abstract_feature_mesh
+    S = jax.ShapeDtypeStruct
+    kind = key[0]
+    if kind == "sgl-feat":
+        (_, Sn, N, p, G, dtype_s, max_iter, _ce, _m, _p_b, _g_b,
+         max_size, len2) = key
+        n_units = G
+    else:
+        _, Sn, N, p, dtype_s, max_iter, _ce, _m, _p_b, len2 = key
+        n_units, max_size = p, 1
+    S_eff = effective_shards(n_units, int(Sn))
+    if S_eff <= 1:
+        return {}
+    dt = jnp.dtype(dtype_s)
+    ops = feature_ops(S_eff, abstract_feature_mesh(S_eff))
+    p_sh = shard_width_bound(p, n_units, S_eff, max_size)
+    G_sh = max(n_units // S_eff, 1)
+    Xs_a = S((S_eff, N, p_sh), dt)
+    vecs = [S((N,), dt) for _ in range(3)]          # y, theta_bar, n_vec
+    lams = S((len2,), dt)
+    col_s = S((S_eff, p_sh), dt)
+    if kind == "sgl-feat":
+        from ..core.screening import tlfre_screen_grid_feat
+        specs_a = _abstract_spec(G_sh, p_sh, max_size, dt, lead=(S_eff,))
+        gspec_a = S((S_eff, G_sh), dt)
+
+        def prog(Xs, specs, y, lams, theta, nvec, coln, gspec, beta_s,
+                 rho):
+            screen = screen_fn or tlfre_screen_grid_feat
+            kept = screen(ops, Xs, specs, y, 0.5, lams, theta, nvec,
+                          coln, gspec)
+            fit = sharded_fit(ops, Xs, beta_s)       # THE one psum site
+            c_s, s = cert_sgl(ops, Xs, specs, rho / 2.0, 0.5)
+            return kept, fit, c_s, s
+
+        args = [Xs_a, specs_a, vecs[0], lams, vecs[1], vecs[2], col_s,
+                gspec_a, col_s, vecs[0]]
+    else:
+        from ..core.dpc import dpc_screen_grid_feat
+
+        def prog(Xs, y, lams, theta, nvec, coln, beta_s, rho):
+            screen = screen_fn or dpc_screen_grid_feat
+            kept = screen(ops, Xs, y, lams, theta, nvec, coln)
+            fit = sharded_fit(ops, Xs, beta_s)
+            c_s, s = cert_nn(ops, Xs, rho / 2.0)
+            return kept, fit, c_s, s
+
+        args = [Xs_a, vecs[0], lams, vecs[1], vecs[2], col_s, col_s,
+                vecs[0]]
+    closed = jax.make_jaxpr(prog)(*args)
+    return walk_cost(closed.jaxpr, 1.0, _max_iter_of(key))["collectives"]
+
+
 # ---------------------------------------------------------------------------
 # Budgets + findings
 # ---------------------------------------------------------------------------
@@ -483,10 +638,13 @@ def write_budgets(cards: Iterable[CostCard], path: str, *,
     ``--write-baseline``."""
     configs = {}
     for c in sorted(cards, key=lambda c: c.label):
-        configs[c.label] = {
+        entry = {
             "peak_bytes": int(c.peak_bytes * slack),
             "transfer_bytes": int(c.transfer_bytes * slack),
         }
+        if c.key[0].endswith("-feat"):
+            entry["allowed_collectives"] = ["psum"]
+        configs[c.label] = entry
     out = {
         "device_hbm_bytes": int(hbm_bytes
                                 or DEFAULT_BUDGETS["device_hbm_bytes"]),
@@ -514,14 +672,21 @@ def check_cards(cards: Iterable[CostCard], budgets: dict) -> list:
                 f"{hbm / 1e9:.1f} GB device budget for key {c.key[0]} "
                 f"(args {c.arg_bytes / 1e9:.2f} GB + excess "
                 f"{c.excess_bytes / 1e9:.2f} GB)"))
+        # a config entry may widen the global allow-list for ITS card only
+        # (feature-sharded sweeps legitimately psum partial fits; fold
+        # sweeps stay embarrassingly parallel)
+        entry_allowed = configs.get(c.label, {}).get("allowed_collectives")
+        allowed_here = (allowed | set(entry_allowed)
+                        if entry_allowed is not None else allowed)
         for prim, ent in sorted(c.collectives.items()):
-            if prim not in allowed:
+            if prim not in allowed_here:
                 findings.append(Finding(
                     "resource/unexpected-collective", "error",
                     f"{c.label}:{prim}",
                     f"sweep body fires {prim} x{ent['count']} moving "
-                    f"{ent['payload_bytes'] / 1e6:.2f} MB — fold sweeps "
-                    f"must stay embarrassingly parallel"))
+                    f"{ent['payload_bytes'] / 1e6:.2f} MB — only "
+                    f"{sorted(allowed_here) or 'no collectives'} are "
+                    f"allowed for this card"))
         if not c.shard["divisible"]:
             findings.append(Finding(
                 "resource/non-divisible-shard", "error", c.label,
@@ -578,11 +743,27 @@ def dominating_key(shape: ProblemShape, plan, kind: str,
                    else plan.n_folds)
     if kind == "path":
         len2 = max(chunk_lengths(J, plan.chunk_init, 64))
+        shards = int(getattr(plan, "feature_shards", 0))
         if shape.penalty == "sgl":
             g_b = max(max(group_buckets(G, plan.min_group_bucket)), G)
+            if shards > 1:
+                from ..distributed.feature_shard import effective_shards
+                S_eff = effective_shards(G, shards)
+                if S_eff > 1:
+                    # runtime keys carry the EFFECTIVE shard count; the
+                    # mesh flag does not affect pricing (False here)
+                    return ("sgl-feat", S_eff, N, p, G, shape.dtype,
+                            plan.max_iter, plan.check_every, False, p_b,
+                            g_b, shape.max_size, len2)
             return ("sgl", N, p, G, shape.dtype, plan.max_iter,
                     plan.check_every, pallas, p_b, g_b, shape.max_size,
                     len2)
+        if shards > 1:
+            from ..distributed.feature_shard import effective_shards
+            S_eff = effective_shards(p, shards)
+            if S_eff > 1:
+                return ("nn-feat", S_eff, N, p, shape.dtype, plan.max_iter,
+                        plan.check_every, False, p_b, len2)
         return ("nn", N, p, shape.dtype, plan.max_iter, plan.check_every,
                 pallas, p_b, len2)
     len2 = max(chunk_lengths(J, plan.chunk_init, plan.chunk_cap))
@@ -620,14 +801,43 @@ def audit_cards(shapes=None, plan=None, n_folds: int = 4,
     return cards
 
 
+def feature_audit_cards(shapes=None, plan=None,
+                        feature_shards: int = 8) -> list:
+    """Per-device cost cards for the feature-sharded path sweeps: the
+    same representative shapes, priced at the shard-width envelope with
+    the collective plan traced on an abstract 'feature' mesh."""
+    from ..core.problem import Plan
+    plan = plan or Plan(n_lambdas=40, n_folds=4)
+    plan = plan.with_(feature_shards=feature_shards)
+    shapes = shapes or [
+        ProblemShape(N=100, p=500, G=50, max_size=10, penalty="sgl",
+                     dtype="float64"),
+        ProblemShape(N=100, p=500, G=50, max_size=10, penalty="sgl",
+                     dtype="float32"),
+        ProblemShape(N=80, p=300, G=0, max_size=0, penalty="nn_lasso",
+                     dtype="float64"),
+    ]
+    cards = []
+    for shape in shapes:
+        key = dominating_key(shape, plan, "path")
+        if not key[0].endswith("-feat"):
+            continue                  # degenerate: nothing > 1 divides
+        label = (f"{shape.penalty}[{shape.dtype}]"
+                 f"/path-feat{feature_shards}")
+        cards.append(card_for_key(key, label))
+    return cards
+
+
 def run(budgets: Optional[str] = None) -> list:
-    """CLI layer entry: price the representative configurations, extract
-    the sharded fold sweeps' collective plans on an abstract 2-device
-    mesh, and diff everything against ``analysis/budgets.json``."""
+    """CLI layer entry: price the representative configurations (plus
+    their feature-sharded path variants), extract the sharded fold sweeps'
+    collective plans on an abstract 2-device mesh, and diff everything
+    against ``analysis/budgets.json``."""
     from ..core.problem import Plan
     budget_data = load_budgets(budgets)
     plan = Plan(n_lambdas=40, n_folds=4)
     cards = audit_cards(plan=plan, n_folds=4, mesh_size=1)
+    cards.extend(feature_audit_cards(plan=plan, feature_shards=8))
     # re-price the fold cards' collective plans under a sharded layout:
     # AbstractMesh tracing needs no multi-device hardware
     priced = []
@@ -650,11 +860,15 @@ def run(budgets: Optional[str] = None) -> list:
 # ---------------------------------------------------------------------------
 
 def _capacity_key(penalty: str, dtype: str, mode: str, p: int, *, N: int,
-                  group_size: int, plan, survivors: Optional[int]) -> tuple:
+                  group_size: int, plan, survivors: Optional[int],
+                  feature_shards: int = 0) -> tuple:
     """The dominating key of a scaled-up problem: ``G = p / group_size``
     groups of ``group_size``.  ``survivors`` caps the solve bucket (the
     screening win: only ~survivors features reach FISTA); ``None`` prices
-    the unscreened worst case (``p_b = p``)."""
+    the unscreened worst case (``p_b = p``).  ``feature_shards > 1``
+    (path mode only — fold SWEEPS keep the full design) prices the
+    feature-sharded key: the per-device card then holds one shard-width
+    block of X instead of all ``p`` columns."""
     J = (len(plan.lambdas) if plan.lambdas is not None
          else int(plan.n_lambdas))
     if survivors is None:
@@ -665,16 +879,30 @@ def _capacity_key(penalty: str, dtype: str, mode: str, p: int, *, N: int,
     len2 = max(chunk_lengths(J, plan.chunk_init, cap))
     n_folds = (len(plan.folds) if plan.folds is not None
                else plan.n_folds)
+    shards = int(feature_shards) if mode == "path" else 0
     if penalty == "sgl":
         G = max(p // group_size, 1)
         g_b = min(_pow2_ceil(max(p_b // group_size, 1) + 1), G + 1)
         if mode == "path":
+            if shards > 1:
+                from ..distributed.feature_shard import effective_shards
+                S_eff = effective_shards(G, shards)
+                if S_eff > 1:
+                    return ("sgl-feat", S_eff, N, p, G, dtype,
+                            plan.max_iter, plan.check_every, False, p_b,
+                            g_b, group_size, len2)
             return ("sgl", N, p, G, dtype, plan.max_iter,
                     plan.check_every, False, p_b, g_b, group_size, len2)
         return ("sgl-folds", n_folds, N, p, G, dtype, plan.max_iter,
                 plan.check_every, None, p_b, g_b, group_size, len2,
                 plan.center == "per-fold", False)
     if mode == "path":
+        if shards > 1:
+            from ..distributed.feature_shard import effective_shards
+            S_eff = effective_shards(p, shards)
+            if S_eff > 1:
+                return ("nn-feat", S_eff, N, p, dtype, plan.max_iter,
+                        plan.check_every, False, p_b, len2)
         return ("nn", N, p, dtype, plan.max_iter, plan.check_every, False,
                 p_b, len2)
     return ("nn-folds", n_folds, N, p, dtype, plan.max_iter,
@@ -682,16 +910,17 @@ def _capacity_key(penalty: str, dtype: str, mode: str, p: int, *, N: int,
 
 
 def _peak_at(p: int, penalty, dtype, mode, *, N, group_size, plan,
-             survivors) -> int:
+             survivors, feature_shards: int = 0) -> int:
     key = _capacity_key(penalty, dtype, mode, p, N=N,
                         group_size=group_size, plan=plan,
-                        survivors=survivors)
+                        survivors=survivors, feature_shards=feature_shards)
     return card_for_key(key).peak_bytes
 
 
 def capacity_max_p(penalty: str, dtype: str, mode: str, *, plan,
                    hbm_bytes: int, N: int = 1000, group_size: int = 10,
-                   survivors: Optional[int] = 16384) -> int:
+                   survivors: Optional[int] = 16384,
+                   feature_shards: int = 0) -> int:
     """Largest ``p`` whose dominating sweep key fits ``hbm_bytes``.
 
     For a fixed bucket signature the peak envelope is affine in ``p``
@@ -699,46 +928,64 @@ def capacity_max_p(penalty: str, dtype: str, mode: str, *, plan,
     temporary all scale linearly; everything else is pinned by the
     bucket), so two traces fit the line, one confirming trace validates
     the answer, and a short geometric backoff corrects ladder-boundary
-    effects."""
+    effects.
+
+    With ``feature_shards > 1`` every probed ``p`` is aligned so the
+    group (feature) count divides the shard count — the regime the
+    partitioner actually runs at full width; unaligned ``p`` would
+    silently degrade to fewer shards and price wider blocks.  The
+    per-device block width is then ``~p / S``, so the answer scales
+    ~linearly in the shard count."""
+    shards = int(feature_shards) if mode == "path" else 0
+    q = 1
+    if shards > 1:
+        q = group_size * shards if penalty == "sgl" else shards
+
+    def _align(v: int) -> int:
+        return max(q * (v // q), q) if q > 1 else v
+
+    kw = dict(N=N, group_size=group_size, plan=plan, survivors=survivors,
+              feature_shards=shards)
     p1, p2 = 1 << 17, 1 << 19
     if survivors is not None:
         p1 = max(p1, _pow2_ceil(int(survivors)) * 2)
         p2 = max(p2, p1 * 4)
-    f1 = _peak_at(p1, penalty, dtype, mode, N=N, group_size=group_size,
-                  plan=plan, survivors=survivors)
+    p1, p2 = _align(p1), _align(p2)
+    f1 = _peak_at(p1, penalty, dtype, mode, **kw)
     # first probe already over budget: walk the probe pair down until the
     # lower probe fits (the line is re-fit in the fitting regime), giving
     # up only when even a trivial problem is over budget
     while f1 > hbm_bytes and p1 > (1 << 12):
-        p1, p2 = max(p1 // 4, 1 << 12), p1
-        f1 = _peak_at(p1, penalty, dtype, mode, N=N,
-                      group_size=group_size, plan=plan,
-                      survivors=survivors)
+        p1, p2 = max(_align(p1 // 4), _align(1 << 12)), p1
+        f1 = _peak_at(p1, penalty, dtype, mode, **kw)
     if f1 > hbm_bytes:
         return 0
-    f2 = _peak_at(p2, penalty, dtype, mode, N=N, group_size=group_size,
-                  plan=plan, survivors=survivors)
+    f2 = _peak_at(p2, penalty, dtype, mode, **kw)
     slope = (f2 - f1) / float(p2 - p1)
     if slope <= 0:
         raise RuntimeError("peak model is not increasing in p")
     base = f1 - slope * p1
-    cand = int((hbm_bytes - base) / slope)
-    cand = max(cand, p1)
+    cand = _align(max(int((hbm_bytes - base) / slope), p1))
     for _ in range(20):
-        if _peak_at(cand, penalty, dtype, mode, N=N,
-                    group_size=group_size, plan=plan,
-                    survivors=survivors) <= hbm_bytes:
+        if _peak_at(cand, penalty, dtype, mode, **kw) <= hbm_bytes:
             return cand
-        cand = int(cand * 0.96)
+        cand = _align(int(cand * 0.96))
     return cand
 
 
 def capacity_table(plan=None, *, hbm_bytes: Optional[int] = None,
                    N: int = 1000, group_size: int = 10,
-                   survivors: int = 16384) -> list:
+                   survivors: int = 16384,
+                   feature_shards: int = 8) -> list:
     """``--capacity`` rows: max p per device for every (penalty, dtype,
     verb), screened (solve bucket capped at ``survivors`` features — the
-    TLFre operating regime) and unscreened (``p_b = p`` worst case)."""
+    TLFre operating regime) and unscreened (``p_b = p`` worst case).
+
+    ``max_p_sharded`` prices the same screened regime under
+    ``feature_shards``-way column sharding (path mode only — fold sweeps
+    keep the full design, so cv rows report ``None``): each device holds
+    one shard-width block, so the column grows ~linearly in the shard
+    count."""
     from ..core.problem import Plan
     plan = plan or Plan()
     hbm = int(hbm_bytes or DEFAULT_BUDGETS["device_hbm_bytes"])
@@ -754,5 +1001,10 @@ def capacity_table(plan=None, *, hbm_bytes: Optional[int] = None,
                         penalty, dtype, mode, survivors=survivors, **kw),
                     "max_p_unscreened": capacity_max_p(
                         penalty, dtype, mode, survivors=None, **kw),
+                    "max_p_sharded": (capacity_max_p(
+                        penalty, dtype, mode, survivors=survivors,
+                        feature_shards=feature_shards, **kw)
+                        if mode == "path" and feature_shards > 1
+                        else None),
                 })
     return rows

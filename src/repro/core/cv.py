@@ -75,8 +75,10 @@ from .path import _bucket
 from .path_engine import (EngineStats, _expand_set, _feature_bucket,
                           _pallas_active, _pow2_len, margin_fill_nn,
                           margin_fill_sgl, sweep_nn_core, sweep_sgl_core)
+from .dpc import dpc_screen_grid_folds_feat
 from .screening import (gap_safe_grid_radii, gap_safe_screen_grid_folds,
-                        tlfre_screen_grid_folds)
+                        gap_safe_screen_grid_folds_feat,
+                        tlfre_screen_grid_folds, tlfre_screen_grid_folds_feat)
 
 SCHEDULES = ("elastic", "lockstep")
 
@@ -251,6 +253,68 @@ def _screen_folds_nn(X, Y, rem, lam_bars, lam_maxs, theta_bars, n_bound,
     return fk
 
 
+@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("screen",))
+def _screen_folds_sgl_feat(fops, Xs, Y, spec, specs_s, alpha, rem, lam_bars,
+                           lam_maxs, theta_bars, n_bound, beta_prev, beta_s,
+                           c_prev_s, masks, col_n_sf, gspec_sf, safety,
+                           mus_s, *, screen: str):
+    """Feature-sharded ``_screen_folds_sgl``: the (K*L, N) x (N, p) screen
+    GEMM runs per column block (no collective); the Gap-Safe intersection's
+    fit is the one psum.  The penalty term uses the replicated full
+    ``beta_prev`` with the GLOBAL spec (O(K p), no X involved), so the radii
+    match the unsharded screen's.  Returns feat_keep (S, K, L, p_shard)."""
+    from ..distributed.feature_shard import sharded_fit
+    at_max = (lam_bars >= lam_maxs * (1.0 - 1e-12))[:, None]
+    n_vecs = jnp.where(at_max, n_bound, Y / lam_bars[:, None] - theta_bars)
+    _, fk_s, _ = tlfre_screen_grid_folds_feat(
+        fops, Xs, specs_s, Y, alpha, rem, theta_bars, n_vecs, col_n_sf,
+        gspec_sf, safety=safety, mus_s=mus_s)
+    if screen == "gapsafe":
+        if mus_s is None:
+            fit = sharded_fit(fops, Xs, beta_s)
+        else:
+            def body(loc):
+                Xb, bb, mub = loc
+                return bb @ Xb.T, jnp.sum(bb * mub, axis=1)
+            fit, corr = fops.fsum(body, (Xs, beta_s, mus_s))
+            fit = fit - corr[:, None]
+        resid = Y - masks * fit
+        pen = (alpha * jnp.sum(spec.weights.astype(Xs.dtype)[None, :]
+                               * jax.vmap(lambda b: group_norms(spec, b))(
+                                   beta_prev), axis=1)
+               + jnp.sum(jnp.abs(beta_prev), axis=1))
+        radii = jax.vmap(gap_safe_grid_radii)(Y, rem, theta_bars, resid,
+                                              pen) * (1.0 + safety)
+        _, fk_dyn_s = gap_safe_screen_grid_folds_feat(
+            fops, specs_s, alpha, c_prev_s, radii, col_n_sf, gspec_sf)
+        fk_s = fk_s & fk_dyn_s
+    return fk_s
+
+
+@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("screen",))
+def _screen_folds_nn_feat(fops, Xs, Y, rem, lam_bars, lam_maxs, theta_bars,
+                          n_bound, beta_prev, beta_s, c_prev_s, masks,
+                          col_n_sf, safety, *, screen: str):
+    """Feature-sharded ``_screen_folds_nn``.  Returns (S, K, L, p_shard)."""
+    from ..distributed.feature_shard import sharded_fit
+    at_max = (lam_bars >= lam_maxs * (1.0 - 1e-12))[:, None]
+    n_vecs = jnp.where(at_max, n_bound, Y / lam_bars[:, None] - theta_bars)
+    fk_s, _ = dpc_screen_grid_folds_feat(fops, Xs, Y, rem, theta_bars,
+                                         n_vecs, col_n_sf, safety=safety)
+    if screen == "gapsafe":
+        resid = Y - masks * sharded_fit(fops, Xs, beta_s)
+        pen = jnp.sum(beta_prev, axis=1)         # beta >= 0 => l1 = sum
+        radii = jax.vmap(gap_safe_grid_radii)(Y, rem, theta_bars, resid,
+                                              pen) * (1.0 + safety)
+
+        def body(loc, radii):
+            ct, cn = loc
+            return jax.vmap(gap_safe_screen_grid_nn)(ct, radii, cn)
+
+        fk_s = fk_s & fops.fmap(body, (c_prev_s, col_n_sf), radii)
+    return fk_s
+
+
 # ---------------------------------------------------------------------------
 # Fold-batched sweeps: vmap over the fold axis, shard_map across the mesh
 # ---------------------------------------------------------------------------
@@ -405,6 +469,11 @@ class _FoldEngine:
         self.seen_keys = seen_keys
         self.screen_time = 0.0
         self.solve_time = 0.0
+        # feature sharding (screens only — sweeps keep full-X certification);
+        # subclasses populate these when a FeatureShardPlan is supplied
+        self.fshard = None
+        self.fops = None
+        self.Xs = None
 
         K, J, p = self.K, self.J, self.p
         lam_max_safe = np.where(lam_max_np > 0, lam_max_np, 1.0)
@@ -452,7 +521,10 @@ class _FoldEngine:
         ts = time.perf_counter()
         fk_np = np.asarray(self._screen_call(act, rem))  # one host sync
         self.stats.n_screens += 1                        # ONE GEMM issued
-        self.stats.n_pallas_screens += int(self.pallas)
+        # the sharded screen route is jnp-only — the fused fold-stack
+        # kernels only ever run on the unsharded path
+        self.stats.n_pallas_screens += int(self.pallas
+                                           and self.fshard is None)
         self.screen_time += time.perf_counter() - ts
         return fk_np
 
@@ -598,7 +670,7 @@ class _SGLFoldEngine(_FoldEngine):
 
     def __init__(self, *args, spec, alpha, Y, masks_d, col_n_f, gspec_f,
                  lam_max_f, n_bound, mus_d, mus_np,
-                 min_group_bucket: int = 16, **kw):
+                 min_group_bucket: int = 16, fshard=None, **kw):
         super().__init__(*args, **kw)
         self.spec = spec
         self.alpha = alpha
@@ -616,10 +688,40 @@ class _SGLFoldEngine(_FoldEngine):
         self.sizes_np = np.asarray(spec.sizes)
         self.weights_np = np.asarray(spec.weights)
         self.min_group_bucket = min_group_bucket
+        if fshard is not None:
+            from ..distributed import feature_shard as _fs
+            self.fshard = fshard
+            self.fops = _fs.feature_ops(
+                fshard.n_shards, _fs.resolve_feature_mesh(fshard.n_shards))
+            self.Xs = jnp.asarray(fshard.stack_columns(self.X_np))
+            self.specs_s = fshard.specs_stacked
+            self.col_n_sf = jnp.asarray(
+                fshard.shard_features(np.asarray(col_n_f)))
+            self.gspec_sf = jnp.asarray(
+                fshard.shard_groups(np.asarray(gspec_f)))
+            self.mus_sf = (jnp.asarray(fshard.shard_features(
+                np.asarray(mus_d))) if self.centered else None)
 
     def _screen_call(self, act: np.ndarray, rem: np.ndarray):
         a_idx = jnp.asarray(act)
         X = self.X
+        if self.fshard is not None:
+            fk_s = _screen_folds_sgl_feat(
+                self.fops, self.Xs, self.Y[a_idx], self.spec, self.specs_s,
+                self.alpha, jnp.asarray(rem, X.dtype),
+                jnp.asarray(self.lam_bar[act], X.dtype),
+                self.lam_max_f[a_idx],
+                jnp.asarray(self.Theta[act], X.dtype), self.n_bound[a_idx],
+                jnp.asarray(self.Beta[act], X.dtype),
+                jnp.asarray(self.fshard.shard_features(
+                    self.Beta[act].astype(self.X_np.dtype))),
+                jnp.asarray(self.fshard.shard_features(
+                    self.Cprev[act].astype(self.X_np.dtype))),
+                self.masks_d[a_idx], self.col_n_sf[:, a_idx],
+                self.gspec_sf[:, a_idx], self.safety,
+                self.mus_sf[:, a_idx] if self.centered else None,
+                screen=self.screen_mode)
+            return self.fshard.unshard_features(np.asarray(fk_s))
         return _screen_folds_sgl(
             X, self.Y[a_idx], self.spec, self.alpha,
             jnp.asarray(rem, X.dtype),
@@ -698,17 +800,41 @@ class _SGLFoldEngine(_FoldEngine):
 class _NNFoldEngine(_FoldEngine):
     """Nonnegative-Lasso screening (DPC / Gap-Safe) + flat-bucket sweeps."""
 
-    def __init__(self, *args, Y, masks_d, col_n_f, lam_max_f, n_bound, **kw):
+    def __init__(self, *args, Y, masks_d, col_n_f, lam_max_f, n_bound,
+                 fshard=None, **kw):
         super().__init__(*args, **kw)
         self.Y = Y
         self.masks_d = masks_d
         self.col_n_f = col_n_f
         self.lam_max_f = lam_max_f
         self.n_bound = n_bound
+        if fshard is not None:
+            from ..distributed import feature_shard as _fs
+            self.fshard = fshard
+            self.fops = _fs.feature_ops(
+                fshard.n_shards, _fs.resolve_feature_mesh(fshard.n_shards))
+            self.Xs = jnp.asarray(fshard.stack_columns(self.X_np))
+            self.col_n_sf = jnp.asarray(
+                fshard.shard_features(np.asarray(col_n_f)))
 
     def _screen_call(self, act: np.ndarray, rem: np.ndarray):
         a_idx = jnp.asarray(act)
         X = self.X
+        if self.fshard is not None:
+            fk_s = _screen_folds_nn_feat(
+                self.fops, self.Xs, self.Y[a_idx],
+                jnp.asarray(rem, X.dtype),
+                jnp.asarray(self.lam_bar[act], X.dtype),
+                self.lam_max_f[a_idx],
+                jnp.asarray(self.Theta[act], X.dtype), self.n_bound[a_idx],
+                jnp.asarray(self.Beta[act], X.dtype),
+                jnp.asarray(self.fshard.shard_features(
+                    self.Beta[act].astype(self.X_np.dtype))),
+                jnp.asarray(self.fshard.shard_features(
+                    self.Cprev[act].astype(self.X_np.dtype))),
+                self.masks_d[a_idx], self.col_n_sf[:, a_idx], self.safety,
+                screen=self.screen_mode)
+            return self.fshard.unshard_features(np.asarray(fk_s))
         return _screen_folds_nn(
             X, self.Y[a_idx], jnp.asarray(rem, X.dtype),
             jnp.asarray(self.lam_bar[act], X.dtype), self.lam_max_f[a_idx],
@@ -779,7 +905,8 @@ def sgl_fold_paths(X, y, spec: GroupSpec, alpha, masks, lambdas, *,
                    min_group_bucket: int = 16, margin: float = 0.125,
                    chunk_init: int = 8, chunk_cap: int = 64,
                    schedule: str = "elastic", use_pallas=None, mesh=None,
-                   mus=None, init=None, compile_keys=None):
+                   mus=None, init=None, compile_keys=None,
+                   feature_shards: int = 0):
     """Solve the SAME lambda grid on K masked row-subsets of (X, y).
 
     ``masks``: (K, N) 0/1 — 1 marks rows in subset k's training problem.
@@ -870,6 +997,15 @@ def sgl_fold_paths(X, y, spec: GroupSpec, alpha, masks, lambdas, *,
         n_bound = n_bound - jnp.sum(w_star * mus_d, axis=1)[:, None]
     n_bound = masks_d * n_bound
     jax.block_until_ready((col_n_f, gspec_f, n_bound))
+    # feature sharding covers the STACKED GRID SCREENS only; the per-fold
+    # stats above and the bucketed sweeps keep the full-X algebra, so the
+    # sharded fold route certifies against the identical reference numbers
+    fshard = None
+    if int(feature_shards) > 1:
+        from ..distributed.feature_shard import plan_feature_shards
+        fshard = plan_feature_shards(int(feature_shards), p, spec)
+        if fshard.n_shards <= 1:
+            fshard = None
     setup_time = time.perf_counter() - t0
 
     stats = EngineStats()
@@ -882,7 +1018,7 @@ def sgl_fold_paths(X, y, spec: GroupSpec, alpha, masks, lambdas, *,
         spec=spec, alpha=alpha, Y=Y, masks_d=masks_d, col_n_f=col_n_f,
         gspec_f=gspec_f, lam_max_f=lam_max_f, n_bound=n_bound, mus_d=mus_d,
         mus_np=np.asarray(mus, dtype=float) if centered else None,
-        min_group_bucket=min_group_bucket)
+        min_group_bucket=min_group_bucket, fshard=fshard)
     if init is not None:
         eng.load_init(init)
     for k in range(K):
@@ -904,7 +1040,8 @@ def nn_fold_paths(X, y, masks, lambdas, *, screen: str = "dpc", tol=1e-9,
                   check_every: int = 10, min_bucket: int = 64,
                   margin: float = 0.125, chunk_init: int = 8,
                   chunk_cap: int = 64, schedule: str = "elastic",
-                  use_pallas=None, mesh=None, init=None, compile_keys=None):
+                  use_pallas=None, mesh=None, init=None, compile_keys=None,
+                  feature_shards: int = 0):
     """Nonnegative-Lasso analogue of ``sgl_fold_paths`` (DPC / Gap-Safe).
 
     ``y`` is (N,) or per-fold (K, N) rows; ``schedule`` / ``chunk_cap`` /
@@ -937,6 +1074,12 @@ def nn_fold_paths(X, y, masks, lambdas, *, screen: str = "dpc", tol=1e-9,
     lam_max_np = np.asarray(lam_max_f, dtype=float)
     n_bound = masks_d * X[:, np.asarray(i_star_f)].T          # (K, N)
     jax.block_until_ready((col_n_f, n_bound))
+    fshard = None
+    if int(feature_shards) > 1:
+        from ..distributed.feature_shard import plan_feature_shards
+        fshard = plan_feature_shards(int(feature_shards), p, None)
+        if fshard.n_shards <= 1:
+            fshard = None
     setup_time = time.perf_counter() - t0
 
     stats = EngineStats()
@@ -947,7 +1090,7 @@ def nn_fold_paths(X, y, masks, lambdas, *, screen: str = "dpc", tol=1e-9,
         min_bucket=min_bucket, margin=margin, mesh=mesh, pallas=pallas,
         screen_mode=screen, stats=stats, seen_keys=seen_keys,
         Y=Y, masks_d=masks_d, col_n_f=col_n_f, lam_max_f=lam_max_f,
-        n_bound=n_bound)
+        n_bound=n_bound, fshard=fshard)
     if init is not None:
         eng.load_init(init)
     for k in range(K):

@@ -94,6 +94,59 @@ def gap_safe_screen_grid_nn(c_theta, radii, col_norms):
     return omega >= 1.0
 
 
+# ---------------------------------------------------------------------------
+# Feature-sharded Theorem-22 screens (see core.screening for the SGL
+# counterparts and distributed.feature_shard for the executor / layout).
+# The threshold is per-column, so the sharded rule is the unsharded rule on
+# each block; pad columns give omega = 0 < 1 and are never kept.
+# ---------------------------------------------------------------------------
+
+def dpc_screen_grid_feat(ops, Xs, y, lambdas, theta_bar, n_vec,
+                         col_norms_s, safety: float = 0.0):
+    """Sharded ``dpc_screen_grid``: returns (feat_keep (S, L, p_shard),
+    radii (L,))."""
+    from .screening import grid_ball_geometry
+    centers, radii = grid_ball_geometry(y, lambdas, theta_bar, n_vec)
+    radii = radii * (1.0 + safety)
+
+    def body(loc, centers, radii):
+        Xb, cn = loc
+        omega = centers @ Xb + radii[:, None] * cn[None, :]
+        return omega >= 1.0
+
+    return ops.fmap(body, (Xs, col_norms_s), centers, radii), radii
+
+
+def dpc_screen_grid_folds_feat(ops, Xs, Y, lambdas, Theta_bar, N_vecs,
+                               col_norms_sf, safety: float = 0.0):
+    """Sharded ``dpc_screen_grid_folds`` (jnp route only — the fused
+    fold-stack kernel stays a single-device feature).  Returns
+    (feat_keep (S, K, L, p_shard), radii (K, L))."""
+    from .screening import grid_ball_geometry_folds
+    K, L = lambdas.shape
+    N = Y.shape[1]
+    centers, radii = grid_ball_geometry_folds(Y, lambdas, Theta_bar, N_vecs)
+    radii = radii * (1.0 + safety)
+
+    def body(loc, centers, radii):
+        Xb, cn = loc
+        C = (centers.reshape(K * L, N) @ Xb).reshape(K, L, Xb.shape[1])
+        omega = C + radii[:, :, None] * cn[:, None, :]
+        return omega >= 1.0
+
+    return ops.fmap(body, (Xs, col_norms_sf), centers, radii), radii
+
+
+def gap_safe_screen_grid_nn_feat(ops, c_theta_s, radii, col_norms_s):
+    """Sharded ``gap_safe_screen_grid_nn``: stacked fixed center
+    ``c_theta_s`` (S, p_shard).  Returns feat_keep (S, L, p_shard)."""
+    def body(loc, radii):
+        ct, cn = loc
+        return gap_safe_screen_grid_nn(ct, radii, cn)
+
+    return ops.fmap(body, (c_theta_s, col_norms_s), radii)
+
+
 def dual_scaling_nn(xt_rho: jnp.ndarray):
     """Largest s in (0,1] with s * rho dual-feasible for (82)."""
     m = jnp.max(xt_rho)

@@ -65,16 +65,19 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .dpc import (dpc_screen_grid, dual_scaling_nn, gap_safe_screen_grid_nn,
+from .dpc import (dpc_screen_grid, dpc_screen_grid_feat, dual_scaling_nn,
+                  gap_safe_screen_grid_nn, gap_safe_screen_grid_nn_feat,
                   lambda_max_nn, normal_vector_nn)
 from .estimation import normal_vector_sgl
+from .fenchel import shrink
 from .groups import GroupSpec, group_norms
 from .lambda_max import dual_scaling_sgl, lambda_max_sgl
 from .linalg import (column_norms, group_frobenius_norms,
                      group_spectral_norms, spectral_norm)
 from .path import PathResult, _bucket, default_lambda_grid
 from .screening import (gap_safe_grid_radii, gap_safe_screen_grid,
-                        tlfre_screen_grid)
+                        gap_safe_screen_grid_feat, tlfre_screen_grid,
+                        tlfre_screen_grid_feat)
 from .solver import fista_nn_lasso, fista_sgl
 
 
@@ -168,6 +171,17 @@ _gap_safe_grid_jit = functools.partial(
 _gap_safe_radii_jit = jax.jit(gap_safe_grid_radii)
 _dpc_grid_jit = jax.jit(dpc_screen_grid)
 _gap_safe_nn_jit = jax.jit(gap_safe_screen_grid_nn)
+
+# Feature-sharded grid screens: the executor (``FeatureOps``) is static —
+# it decides vmap-vs-shard_map at trace time — everything else is traced.
+_tlfre_feat_jit = functools.partial(jax.jit, static_argnums=(0,))(
+    tlfre_screen_grid_feat)
+_gap_safe_feat_jit = functools.partial(jax.jit, static_argnums=(0,))(
+    gap_safe_screen_grid_feat)
+_dpc_feat_jit = functools.partial(jax.jit, static_argnums=(0,))(
+    dpc_screen_grid_feat)
+_gap_safe_nn_feat_jit = functools.partial(jax.jit, static_argnums=(0,))(
+    gap_safe_screen_grid_nn_feat)
 
 
 def _pad_grid(lambdas_rem: np.ndarray, dtype):
@@ -352,6 +366,124 @@ _sweep_nn = functools.partial(
 
 
 # ---------------------------------------------------------------------------
+# Feature-sharded sweeps.  The solve bucket stays single-device (surviving
+# columns are gathered host-side exactly as in the unsharded engine), but the
+# in-scan FULL-problem certification runs feature-parallel: the cert GEMV is
+# a per-shard partial ``X_b^T rho`` and the Lemma-9 scaling reduces shard
+# maxima/minima — both exactly associative, so kept-sets and accepted betas
+# match the unsharded engine bitwise (f64).  ``c_theta`` stays in the stacked
+# (S, p_shard) layout across segments; only the host margin ranking sees the
+# unsharded view.  No mu support: fold sweeps keep full-X certification.
+# ---------------------------------------------------------------------------
+
+def sweep_sgl_core_feat(Xs, X_sub, y, specs, sub_spec: GroupSpec, alpha,
+                        lipschitz, lams, valid, beta0, tol, gap_scale, *,
+                        ops, max_iter: int, check_every: int):
+    from ..distributed.feature_shard import cert_sgl
+    N = y.shape[0]
+    S_n, _, p_sh = Xs.shape
+
+    def step(carry, xs):
+        beta, alive = carry
+        lam, ok, idx = xs
+
+        def run(b):
+            res = fista_sgl(X_sub, y, sub_spec, lam, alpha, lipschitz, b,
+                            max_iter=max_iter, check_every=check_every,
+                            tol=tol, prox=None)
+            resid = y - X_sub @ res.beta
+            rho = resid / lam
+            c_s, s = cert_sgl(ops, Xs, specs, rho, alpha)
+            c_s = c_s.astype(b.dtype)
+            theta = (s * rho).astype(b.dtype)
+            pen = (alpha * jnp.sum(sub_spec.weights.astype(b.dtype)
+                                   * group_norms(sub_spec, res.beta))
+                   + jnp.sum(jnp.abs(res.beta)))
+            pval = 0.5 * jnp.vdot(resid, resid) + lam * pen
+            d = y - lam * theta
+            dval = 0.5 * jnp.vdot(y, y) - 0.5 * jnp.vdot(d, d)
+            gap = pval - dval
+            good = (gap <= tol * gap_scale * 1.01) | \
+                   ((idx == 0) & (res.iters >= max_iter))
+            return (res.beta, theta, (s * c_s).astype(b.dtype), good,
+                    res.iters)
+
+        def skip(b):
+            return (b, jnp.zeros(N, b.dtype),
+                    jnp.zeros((S_n, p_sh), b.dtype),
+                    jnp.asarray(False), jnp.asarray(0))
+
+        beta_new, theta, ctheta, good, its = jax.lax.cond(
+            alive & ok, run, skip, beta)
+        return (beta_new, alive & good), (beta_new, theta, ctheta, good, its)
+
+    idxs = jnp.arange(lams.shape[0])
+    _, out = jax.lax.scan(step, (beta0, jnp.asarray(True)),
+                          (lams, valid, idxs))
+    return out   # (betas, thetas, cthetas (m, S, p_shard), good, iters)
+
+
+def sweep_nn_core_feat(Xs, X_sub, y, lipschitz, lams, valid, beta0, tol,
+                       gap_scale, *, ops, max_iter: int, check_every: int):
+    from ..distributed.feature_shard import cert_nn
+    N = y.shape[0]
+    S_n, _, p_sh = Xs.shape
+
+    def step(carry, xs):
+        beta, alive = carry
+        lam, ok, idx = xs
+
+        def run(b):
+            res = fista_nn_lasso(X_sub, y, lam, lipschitz, b,
+                                 max_iter=max_iter, check_every=check_every,
+                                 tol=tol)
+            resid = y - X_sub @ res.beta
+            rho = resid / lam
+            c_s, s = cert_nn(ops, Xs, rho)
+            c_s = c_s.astype(b.dtype)
+            theta = (s * rho).astype(b.dtype)
+            pval = 0.5 * jnp.vdot(resid, resid) + lam * jnp.sum(res.beta)
+            d = y - lam * theta
+            dval = 0.5 * jnp.vdot(y, y) - 0.5 * jnp.vdot(d, d)
+            gap = pval - dval
+            good = (gap <= tol * gap_scale * 1.01) | \
+                   ((idx == 0) & (res.iters >= max_iter))
+            return (res.beta, theta, (s * c_s).astype(b.dtype), good,
+                    res.iters)
+
+        def skip(b):
+            return (b, jnp.zeros(N, b.dtype),
+                    jnp.zeros((S_n, p_sh), b.dtype),
+                    jnp.asarray(False), jnp.asarray(0))
+
+        beta_new, theta, ctheta, good, its = jax.lax.cond(
+            alive & ok, run, skip, beta)
+        return (beta_new, alive & good), (beta_new, theta, ctheta, good, its)
+
+    idxs = jnp.arange(lams.shape[0])
+    _, out = jax.lax.scan(step, (beta0, jnp.asarray(True)),
+                          (lams, valid, idxs))
+    return out
+
+
+# jit cache for the sharded sweeps: ``ops`` (executor + mesh) is baked in
+# via partial — FeatureOps is a hashable frozen dataclass, so the same
+# (executor, iteration-budget) pair reuses one jitted callable process-wide.
+_FEAT_SWEEPS: dict = {}
+
+
+def _feat_sweep(kind: str, ops, max_iter: int, check_every: int):
+    key = (kind, ops, max_iter, check_every)
+    fn = _FEAT_SWEEPS.get(key)
+    if fn is None:
+        core = sweep_sgl_core_feat if kind == "sgl" else sweep_nn_core_feat
+        fn = jax.jit(functools.partial(core, ops=ops, max_iter=max_iter,
+                                       check_every=check_every))
+        _FEAT_SWEEPS[key] = fn
+    return fn
+
+
+# ---------------------------------------------------------------------------
 # SGL
 # ---------------------------------------------------------------------------
 
@@ -362,6 +494,7 @@ def sgl_path_batched(X, y, spec: GroupSpec, alpha, *, lambdas=None,
                      check_every: int = 10, use_pallas: Optional[bool] = None,
                      min_bucket: int = 64, min_group_bucket: int = 16,
                      margin: float = 0.125, chunk_init: int = 8,
+                     feature_shards: int = 0,
                      compile_keys: Optional[set] = None) -> PathResult:
     """Batched SGL path: grid screening, speculative bucketed sweeps with
     in-scan certification.
@@ -370,6 +503,17 @@ def sgl_path_batched(X, y, spec: GroupSpec, alpha, *, lambdas=None,
     starts, and every accepted solution carries a full-problem duality-gap
     certificate at the solver tolerance, so the betas agree with the legacy
     driver to solver precision.
+
+    ``feature_shards > 1`` runs the screening GEMMs, group-stat reductions
+    and in-scan certification feature-parallel over a group-aligned column
+    partition (``distributed.feature_shard``; shard_map on a 'feature' mesh
+    when the host has the devices, stacked-vmap otherwise).  Kept-group
+    sets and accepted betas match the unsharded engine — bitwise in f64 —
+    because every cross-shard reduction (min of shrink roots, max of
+    correlations) is exactly associative; the solve bucket itself stays
+    single-device.  The shard count degrades to the largest divisor of the
+    group count (``effective_shards``); pallas kernels never engage on the
+    sharded route.
 
     ``compile_keys`` is an optional persistent set of sweep-shape keys
     (owned by ``SGLSession``): jax's jit cache is process-global, so a
@@ -383,19 +527,51 @@ def sgl_path_batched(X, y, spec: GroupSpec, alpha, *, lambdas=None,
     y = jnp.asarray(y)
     N, p = X.shape
     G = spec.num_groups
-    pallas = _pallas_active(use_pallas, X.dtype)
+
+    fshard = None
+    if feature_shards and int(feature_shards) > 1:
+        from ..distributed import feature_shard as _fs
+        plan_fs = _fs.plan_feature_shards(int(feature_shards), p, spec)
+        if plan_fs.n_shards > 1:
+            fshard = plan_fs
+    pallas = _pallas_active(use_pallas, X.dtype) and fshard is None
 
     t0 = time.perf_counter()
-    xty = X.T @ y
-    lam_max, g_star = lambda_max_sgl(spec, xty, alpha)
-    lam_max = float(lam_max)
-    col_n = column_norms(X)
-    if specnorm_method == "power":
-        gspec = group_spectral_norms(X, spec)
+    if fshard is not None:
+        fmesh = _fs.resolve_feature_mesh(fshard.n_shards)
+        fops = _fs.feature_ops(fshard.n_shards, fmesh)
+        Xs = jnp.asarray(fshard.stack_columns(np.asarray(X)))
+        specs_s = fshard.specs_stacked
+        xty_s = _fs.sharded_xtv(fops, Xs, y)
+        xty_np = fshard.unshard_features(np.asarray(xty_s))
+        xty = jnp.asarray(xty_np)
+        lam_max, g_star = lambda_max_sgl(spec, xty, alpha)
+        lam_max = float(lam_max)
+        col_n_s = _fs.sharded_column_norms(fops, Xs)
+        if specnorm_method == "power":
+            gspec_s = _fs.sharded_group_spectral_norms(fops, Xs, specs_s)
+        else:
+            gspec_s = _fs.sharded_group_frobenius_norms(fops, Xs, specs_s)
+        # Theorem-15 boundary normal X w*, feature-parallel: w* is supported
+        # on the argmax group only, so X w* is a partial-GEMV psum
+        w_s = shrink(_fs.sharded_xtv(fops, Xs, y / lam_max))
+        gid_stack = jnp.asarray(fshard.shard_features(
+            np.asarray(spec.group_ids) + 1) - 1)            # pads -> -1
+        n_boundary = _fs.sharded_fit(
+            fops, Xs, jnp.where(gid_stack == g_star, w_s, 0.0))
+        L_full = None          # only the full-bucket fallback needs it
+        jax.block_until_ready((col_n_s, gspec_s, n_boundary))
     else:
-        gspec = group_frobenius_norms(X, spec)
-    L_full = spectral_norm(X) ** 2
-    jax.block_until_ready((col_n, gspec, L_full))
+        xty = X.T @ y
+        lam_max, g_star = lambda_max_sgl(spec, xty, alpha)
+        lam_max = float(lam_max)
+        col_n = column_norms(X)
+        if specnorm_method == "power":
+            gspec = group_spectral_norms(X, spec)
+        else:
+            gspec = group_frobenius_norms(X, spec)
+        L_full = spectral_norm(X) ** 2
+        jax.block_until_ready((col_n, gspec, L_full))
     setup_time = time.perf_counter() - t0
 
     if lambdas is None:
@@ -417,7 +593,11 @@ def sgl_path_batched(X, y, spec: GroupSpec, alpha, *, lambdas=None,
     gap_scale = max(float(0.5 * jnp.vdot(y, y)), 1e-30)
 
     theta_bar = y / lam_max             # exact dual at lam_max (Thm 8)
-    c_prev = xty / lam_max              # X^T theta_bar
+    if fshard is not None:
+        c_prev_s = xty_s / lam_max      # stacked (S, p_shard) X^T theta_bar
+        c_prev = xty_np / lam_max       # host view for the margin ranking
+    else:
+        c_prev = xty / lam_max          # X^T theta_bar
     lam_bar = lam_max
     beta_dev = jnp.zeros(p, X.dtype)
     beta_full = np.zeros(p)
@@ -434,6 +614,30 @@ def sgl_path_batched(X, y, spec: GroupSpec, alpha, *, lambdas=None,
         ts = time.perf_counter()
         if screen == "none":
             fk_np = np.ones((J - j, p), dtype=bool)
+        elif fshard is not None:
+            # host-side Theorem-15 branch (lam_bar/lam_max are host floats):
+            # the boundary normal was precomputed sharded in setup
+            at_max = lam_bar >= lam_max * (1.0 - 1e-12)
+            n_vec = n_boundary if at_max else (y / lam_bar - theta_bar)
+            _, fk_s, _ = _tlfre_feat_jit(
+                fops, Xs, specs_s, y, alpha, rem, theta_bar, n_vec,
+                col_n_s, gspec_s, safety=safety)
+            if screen == "gapsafe":
+                beta_s = jnp.asarray(fshard.shard_features(
+                    beta_full.astype(X_np.dtype)))
+                resid = y - _fs.sharded_fit(fops, Xs, beta_s)
+                pen = (alpha * jnp.sum(spec.weights *
+                                       group_norms(spec, beta_dev))
+                       + jnp.sum(jnp.abs(beta_dev)))
+                radii = _gap_safe_radii_jit(y, rem, theta_bar, resid,
+                                            pen) * (1.0 + safety)
+                _, fk_dyn_s = _gap_safe_feat_jit(fops, specs_s, alpha,
+                                                 c_prev_s, radii, col_n_s,
+                                                 gspec_s)
+                fk_s = fk_s & fk_dyn_s
+            fk_np = fshard.unshard_features(
+                np.asarray(fk_s))[:L_rem]       # one host sync
+            stats.n_screens += 1
         else:
             n_vec = normal_vector_sgl(X, y, spec, lam_bar, lam_max,
                                       theta_bar, g_star)
@@ -465,7 +669,11 @@ def sgl_path_batched(X, y, spec: GroupSpec, alpha, *, lambdas=None,
                  else len(row_counts))
             lam_bar = float(lambdas[j + k - 1])
             theta_bar = y / lam_bar
-            c_prev = xty / lam_bar
+            if fshard is not None:
+                c_prev_s = xty_s / lam_bar
+                c_prev = xty_np / lam_bar
+            else:
+                c_prev = xty / lam_bar
             beta_dev = jnp.zeros(p, X.dtype)
             beta_full = np.zeros(p)
             j += k
@@ -487,6 +695,8 @@ def sgl_path_batched(X, y, spec: GroupSpec, alpha, *, lambdas=None,
         ts = time.perf_counter()
         if S.all():
             sub_spec, col_idx = spec, np.arange(p)
+            if L_full is None:
+                L_full = spectral_norm(X) ** 2
             X_sub, L_sub = X, L_full
             p_b, g_b = p, G
         else:
@@ -508,16 +718,28 @@ def sgl_path_batched(X, y, spec: GroupSpec, alpha, *, lambdas=None,
         # the key must cover every dim jax's jit cache discriminates on —
         # a persistent compile_keys set spans problems (serving), so shape
         # and static args belong in it, not just the bucket dims
-        key = ("sgl", N, p, G, str(X.dtype), max_iter, check_every, pallas,
-               p_b, sub_spec.num_groups, sub_spec.max_size, len2)
+        if fshard is not None:
+            key = ("sgl-feat", fshard.n_shards, N, p, G, str(X.dtype),
+                   max_iter, check_every, fmesh is not None, p_b,
+                   sub_spec.num_groups, sub_spec.max_size, len2)
+        else:
+            key = ("sgl", N, p, G, str(X.dtype), max_iter, check_every,
+                   pallas, p_b, sub_spec.num_groups, sub_spec.max_size, len2)
         if key not in seen_keys:
             seen_keys.add(key)
             stats.n_compilations += 1
-        betas_b, thetas_b, cthetas_b, good_b, iters_b = _sweep_sgl(
-            X, X_sub, y, spec, sub_spec, alpha, L_sub,
-            jnp.asarray(lam_pad, X.dtype), jnp.asarray(valid),
-            jnp.asarray(beta0), tol, gap_scale, max_iter=max_iter,
-            check_every=check_every, use_pallas=pallas)
+        if fshard is not None:
+            betas_b, thetas_b, cthetas_b, good_b, iters_b = _feat_sweep(
+                "sgl", fops, max_iter, check_every)(
+                    Xs, X_sub, y, specs_s, sub_spec, alpha, L_sub,
+                    jnp.asarray(lam_pad, X.dtype), jnp.asarray(valid),
+                    jnp.asarray(beta0), tol, gap_scale)
+        else:
+            betas_b, thetas_b, cthetas_b, good_b, iters_b = _sweep_sgl(
+                X, X_sub, y, spec, sub_spec, alpha, L_sub,
+                jnp.asarray(lam_pad, X.dtype), jnp.asarray(valid),
+                jnp.asarray(beta0), tol, gap_scale, max_iter=max_iter,
+                check_every=check_every, use_pallas=pallas)
         good_np = np.asarray(good_b[:m])     # one host sync
         k = int(np.argmin(good_np)) if not good_np.all() else m
         if k == 0:
@@ -526,7 +748,11 @@ def sgl_path_batched(X, y, spec: GroupSpec, alpha, *, lambdas=None,
             k = 1
         stats.n_rejected += int(m - k)
         theta_bar = thetas_b[k - 1]
-        c_prev = cthetas_b[k - 1]
+        if fshard is not None:
+            c_prev_s = cthetas_b[k - 1]
+            c_prev = fshard.unshard_features(np.asarray(c_prev_s))
+        else:
+            c_prev = cthetas_b[k - 1]
         betas_np = np.asarray(betas_b[:k])
         iters_np = np.asarray(iters_b[:k])
         jax.block_until_ready(theta_bar)
@@ -563,28 +789,52 @@ def nn_lasso_path_batched(X, y, *, lambdas=None, n_lambdas: int = 100,
                           safety: float = 0.0, check_every: int = 10,
                           use_pallas: Optional[bool] = None,
                           min_bucket: int = 64, margin: float = 0.125,
-                          chunk_init: int = 8,
+                          chunk_init: int = 8, feature_shards: int = 0,
                           compile_keys: Optional[set] = None) -> PathResult:
     """Batched nonnegative-Lasso path: whole-grid DPC / Gap-Safe rules,
     speculative bucketed sweeps with in-scan certification.
-    ``compile_keys`` as in ``sgl_path_batched``."""
+    ``feature_shards`` / ``compile_keys`` as in ``sgl_path_batched`` (the
+    nn partition is singleton-column: equal blocks when the shard count
+    divides p, degraded otherwise)."""
     if screen not in ("dpc", "gapsafe", "none"):
         raise ValueError(f"unknown screen mode {screen!r}")
     X = jnp.asarray(X)
     y = jnp.asarray(y)
     N, p = X.shape
-    pallas = _pallas_active(use_pallas, X.dtype)
+
+    fshard = None
+    if feature_shards and int(feature_shards) > 1:
+        from ..distributed import feature_shard as _fs
+        plan_fs = _fs.plan_feature_shards(int(feature_shards), p, None)
+        if plan_fs.n_shards > 1:
+            fshard = plan_fs
+    pallas = _pallas_active(use_pallas, X.dtype) and fshard is None
 
     t0 = time.perf_counter()
-    xty = X.T @ y
-    lam_max, i_star = lambda_max_nn(xty)
-    lam_max = float(lam_max)
+    if fshard is not None:
+        fmesh = _fs.resolve_feature_mesh(fshard.n_shards)
+        fops = _fs.feature_ops(fshard.n_shards, fmesh)
+        Xs = jnp.asarray(fshard.stack_columns(np.asarray(X)))
+        xty_s = _fs.sharded_xtv(fops, Xs, y)
+        xty_np = fshard.unshard_features(np.asarray(xty_s))
+        xty = jnp.asarray(xty_np)
+        lam_max, i_star = lambda_max_nn(xty)
+        lam_max = float(lam_max)
+        col_n_s = _fs.sharded_column_norms(fops, Xs)
+        # Theorem-21 boundary normal is the argmax COLUMN — host gather
+        x_star = jnp.asarray(np.asarray(X)[:, int(i_star)])
+        L_full = None
+        jax.block_until_ready((col_n_s, x_star))
+    else:
+        xty = X.T @ y
+        lam_max, i_star = lambda_max_nn(xty)
+        lam_max = float(lam_max)
+        col_n = column_norms(X)
+        L_full = spectral_norm(X) ** 2
+        jax.block_until_ready((col_n, L_full))
     if lam_max <= 0:
         raise ValueError("max_i <x_i, y> <= 0: nonnegative Lasso solution is "
                          "identically zero for every lambda > 0")
-    col_n = column_norms(X)
-    L_full = spectral_norm(X) ** 2
-    jax.block_until_ready((col_n, L_full))
     setup_time = time.perf_counter() - t0
 
     if lambdas is None:
@@ -602,7 +852,11 @@ def nn_lasso_path_batched(X, y, *, lambdas=None, n_lambdas: int = 100,
     gap_scale = max(float(0.5 * jnp.vdot(y, y)), 1e-30)
 
     theta_bar = y / lam_max
-    c_prev = xty / lam_max
+    if fshard is not None:
+        c_prev_s = xty_s / lam_max
+        c_prev = xty_np / lam_max
+    else:
+        c_prev = xty / lam_max
     lam_bar = lam_max
     beta_dev = jnp.zeros(p, X.dtype)
     beta_full = np.zeros(p)
@@ -618,6 +872,22 @@ def nn_lasso_path_batched(X, y, *, lambdas=None, n_lambdas: int = 100,
         ts = time.perf_counter()
         if screen == "none":
             fk_np = np.ones((J - j, p), dtype=bool)
+        elif fshard is not None:
+            at_max = lam_bar >= lam_max * (1.0 - 1e-12)
+            n_vec = x_star if at_max else (y / lam_bar - theta_bar)
+            fk_s, _ = _dpc_feat_jit(fops, Xs, y, rem, theta_bar, n_vec,
+                                    col_n_s, safety=safety)
+            if screen == "gapsafe":
+                beta_s = jnp.asarray(fshard.shard_features(
+                    beta_full.astype(X_np.dtype)))
+                resid = y - _fs.sharded_fit(fops, Xs, beta_s)
+                pen = jnp.sum(beta_dev)          # beta >= 0 => l1 = sum
+                radii = _gap_safe_radii_jit(y, rem, theta_bar, resid,
+                                            pen) * (1.0 + safety)
+                fk_s = fk_s & _gap_safe_nn_feat_jit(fops, c_prev_s, radii,
+                                                    col_n_s)
+            fk_np = fshard.unshard_features(np.asarray(fk_s))[:L_rem]
+            stats.n_screens += 1
         else:
             n_vec = normal_vector_nn(X, y, lam_bar, lam_max, theta_bar,
                                      i_star)
@@ -639,7 +909,11 @@ def nn_lasso_path_batched(X, y, *, lambdas=None, n_lambdas: int = 100,
                  else len(row_counts))
             lam_bar = float(lambdas[j + k - 1])
             theta_bar = y / lam_bar
-            c_prev = xty / lam_bar
+            if fshard is not None:
+                c_prev_s = xty_s / lam_bar
+                c_prev = xty_np / lam_bar
+            else:
+                c_prev = xty / lam_bar
             beta_dev = jnp.zeros(p, X.dtype)
             beta_full = np.zeros(p)
             j += k
@@ -656,6 +930,8 @@ def nn_lasso_path_batched(X, y, *, lambdas=None, n_lambdas: int = 100,
         ts = time.perf_counter()
         if S.all():
             col_idx = np.arange(p)
+            if L_full is None:
+                L_full = spectral_norm(X) ** 2
             X_sub, L_sub = X, L_full
             p_b = p
         else:
@@ -672,22 +948,37 @@ def nn_lasso_path_batched(X, y, *, lambdas=None, n_lambdas: int = 100,
         lam_pad = np.concatenate(
             [lam_chunk, np.full(len2 - m, lam_chunk[-1])])
         valid = np.arange(len2) < m
-        key = ("nn", N, p, str(X.dtype), max_iter, check_every, pallas,
-               p_b, len2)
+        if fshard is not None:
+            key = ("nn-feat", fshard.n_shards, N, p, str(X.dtype),
+                   max_iter, check_every, fmesh is not None, p_b, len2)
+        else:
+            key = ("nn", N, p, str(X.dtype), max_iter, check_every, pallas,
+                   p_b, len2)
         if key not in seen_keys:
             seen_keys.add(key)
             stats.n_compilations += 1
-        betas_b, thetas_b, cthetas_b, good_b, iters_b = _sweep_nn(
-            X, X_sub, y, L_sub, jnp.asarray(lam_pad, X.dtype),
-            jnp.asarray(valid), jnp.asarray(beta0), tol, gap_scale,
-            max_iter=max_iter, check_every=check_every, use_pallas=pallas)
+        if fshard is not None:
+            betas_b, thetas_b, cthetas_b, good_b, iters_b = _feat_sweep(
+                "nn", fops, max_iter, check_every)(
+                    Xs, X_sub, y, L_sub, jnp.asarray(lam_pad, X.dtype),
+                    jnp.asarray(valid), jnp.asarray(beta0), tol, gap_scale)
+        else:
+            betas_b, thetas_b, cthetas_b, good_b, iters_b = _sweep_nn(
+                X, X_sub, y, L_sub, jnp.asarray(lam_pad, X.dtype),
+                jnp.asarray(valid), jnp.asarray(beta0), tol, gap_scale,
+                max_iter=max_iter, check_every=check_every,
+                use_pallas=pallas)
         good_np = np.asarray(good_b[:m])
         k = int(np.argmin(good_np)) if not good_np.all() else m
         if k == 0:
             k = 1
         stats.n_rejected += int(m - k)
         theta_bar = thetas_b[k - 1]
-        c_prev = cthetas_b[k - 1]
+        if fshard is not None:
+            c_prev_s = cthetas_b[k - 1]
+            c_prev = fshard.unshard_features(np.asarray(c_prev_s))
+        else:
+            c_prev = cthetas_b[k - 1]
         betas_np = np.asarray(betas_b[:k])
         iters_np = np.asarray(iters_b[:k])
         jax.block_until_ready(theta_bar)

@@ -183,6 +183,15 @@ class Plan:
     batch_size: int = 10
     # ---- execution --------------------------------------------------------
     mesh: object = None          # launch.mesh.make_fold_mesh(...) or None
+    feature_shards: int = 0      # > 1: group-aligned column sharding of X —
+    #                              screening GEMMs, group stats and in-scan
+    #                              certification run feature-parallel
+    #                              (shard_map on a 'feature' mesh when the
+    #                              host has the devices, stacked-vmap
+    #                              otherwise); degrades to the largest
+    #                              divisor of the group count.  Kept sets /
+    #                              betas match the unsharded engine
+    #                              (bitwise in f64).  0/1: unsharded.
 
     def with_(self, **overrides) -> "Plan":
         """A copy with the given fields replaced (a Plan is immutable)."""
@@ -211,6 +220,11 @@ class Plan:
             raise ValueError(f"unknown center mode {self.center!r}")
         if self.selection not in ("min", "1se"):
             raise ValueError(f"unknown selection rule {self.selection!r}")
+        if int(self.feature_shards) < 0:
+            raise ValueError("feature_shards must be >= 0")
+        if int(self.feature_shards) > 1 and self.engine != "batched":
+            raise ValueError("feature_shards > 1 requires engine='batched' "
+                             "(the legacy driver is single-device)")
         if penalty == "nn_lasso" and self.center == "per-fold":
             raise ValueError("per-fold centering is not defined for the "
                              "nonnegative Lasso (centering X breaks the "

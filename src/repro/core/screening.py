@@ -279,6 +279,106 @@ def gap_safe_screen_grid(spec: GroupSpec, alpha, c_theta, radii, col_norms,
                        use_pallas)
 
 
+# ---------------------------------------------------------------------------
+# Feature-sharded grid screens.
+#
+# Column-sharded counterparts of the grid screens above: ``ops`` is a
+# ``distributed.feature_shard.FeatureOps`` executor, ``Xs`` the stacked
+# ``(S, N, p_shard)`` blocks, ``specs`` the stacked local GroupSpecs, and the
+# per-shard norms carry a leading shard axis.  The ball geometry (an N-space
+# computation) stays global; the GEMM + Theorem-15/16 rules run entirely
+# feature-local per shard — no collective fires (the Layer-4 audit pins
+# this).  Pad columns/groups are arithmetically inert (see
+# ``distributed.feature_shard``), so the stacked keep masks gather back to
+# exactly the single-device masks.
+# ---------------------------------------------------------------------------
+
+def tlfre_screen_grid_feat(ops, Xs, specs, y, alpha, lambdas, theta_bar,
+                           n_vec, col_norms_s, group_specnorms_s,
+                           safety: float = 0.0):
+    """Sharded ``tlfre_screen_grid``: returns (group_keep (S, L, G_shard),
+    feat_keep (S, L, p_shard), radii (L,))."""
+    centers, radii = grid_ball_geometry(y, lambdas, theta_bar, n_vec)
+    radii = radii * (1.0 + safety)
+
+    def body(loc, centers, radii, alpha):
+        Xb, spec_loc, cn, gs = loc
+        C = centers @ Xb
+        return _grid_rules(spec_loc, alpha, C, radii, cn, gs, False)
+
+    group_keep_s, feat_keep_s = ops.fmap(
+        body, (Xs, specs, col_norms_s, group_specnorms_s),
+        centers, radii, alpha)
+    return group_keep_s, feat_keep_s, radii
+
+
+def gap_safe_screen_grid_feat(ops, specs, alpha, c_theta_s, radii,
+                              col_norms_s, group_specnorms_s):
+    """Sharded ``gap_safe_screen_grid``: the fixed center arrives already
+    stacked (``c_theta_s`` (S, p_shard), e.g. the certified duals the
+    sharded sweep emits).  Returns (group_keep (S, L, G_shard),
+    feat_keep (S, L, p_shard))."""
+    def body(loc, radii, alpha):
+        spec_loc, ct, cn, gs = loc
+        return gap_safe_screen_grid(spec_loc, alpha, ct, radii, cn, gs,
+                                    False)
+
+    return ops.fmap(body, (specs, c_theta_s, col_norms_s,
+                           group_specnorms_s), radii, alpha)
+
+
+def tlfre_screen_grid_folds_feat(ops, Xs, specs, Y, alpha, lambdas,
+                                 Theta_bar, N_vecs, col_norms_sf,
+                                 group_specnorms_sf, safety: float = 0.0,
+                                 mus_s=None):
+    """Sharded ``tlfre_screen_grid_folds``: per-fold norms are stacked
+    (S, K, p_shard)/(S, K, G_shard), ``mus_s`` the stacked per-fold column
+    means for centered CV.  Returns (group_keep (S, K, L, G_shard),
+    feat_keep (S, K, L, p_shard), radii (K, L))."""
+    K, L = lambdas.shape
+    N = Y.shape[1]
+    centers, radii = grid_ball_geometry_folds(Y, lambdas, Theta_bar, N_vecs)
+    radii = radii * (1.0 + safety)
+    csum = centers.sum(axis=2)                                    # (K, L)
+
+    if mus_s is None:
+        def body(loc, centers, radii, alpha):
+            Xb, spec_loc, cn, gs = loc
+            C = (centers.reshape(K * L, N) @ Xb).reshape(K, L, Xb.shape[1])
+            return _grid_rules_folds(spec_loc, alpha, C, radii, cn, gs,
+                                     False)
+
+        gk_s, fk_s = ops.fmap(
+            body, (Xs, specs, col_norms_sf, group_specnorms_sf),
+            centers, radii, alpha)
+    else:
+        def body(loc, centers, csum, radii, alpha):
+            Xb, spec_loc, cn, gs, mu = loc
+            C = (centers.reshape(K * L, N) @ Xb).reshape(K, L, Xb.shape[1])
+            C = C - csum[:, :, None] * mu[:, None, :]
+            return _grid_rules_folds(spec_loc, alpha, C, radii, cn, gs,
+                                     False)
+
+        gk_s, fk_s = ops.fmap(
+            body, (Xs, specs, col_norms_sf, group_specnorms_sf, mus_s),
+            centers, csum, radii, alpha)
+    return gk_s, fk_s, radii
+
+
+def gap_safe_screen_grid_folds_feat(ops, specs, alpha, c_thetas_s, radii,
+                                    col_norms_sf, group_specnorms_sf):
+    """Sharded ``gap_safe_screen_grid_folds``: stacked per-fold centers
+    ``c_thetas_s`` (S, K, p_shard).  Returns (group_keep
+    (S, K, L, G_shard), feat_keep (S, K, L, p_shard))."""
+    def body(loc, radii, alpha):
+        spec_loc, ct, cn, gs = loc
+        return gap_safe_screen_grid_folds(spec_loc, alpha, ct, radii, cn,
+                                          gs, False)
+
+    return ops.fmap(body, (specs, c_thetas_s, col_norms_sf,
+                           group_specnorms_sf), radii, alpha)
+
+
 def gap_safe_grid_radii(y, lambdas, theta, resid, penalty):
     """sqrt(2 * gap_l) / lam_l per grid point, for primal iterate beta with
     residual ``resid = y - X beta`` and penalty ``Omega(beta)`` (so

@@ -211,7 +211,9 @@ class SGLSession:
                 check_every=plan.check_every, use_pallas=plan.use_pallas,
                 min_bucket=plan.min_bucket,
                 min_group_bucket=plan.min_group_bucket, margin=plan.margin,
-                chunk_init=plan.chunk_init, compile_keys=self.compile_keys)
+                chunk_init=plan.chunk_init,
+                feature_shards=plan.feature_shards,
+                compile_keys=self.compile_keys)
         else:
             res = nn_lasso_path_batched(
                 prob.X, prob.y, lambdas=plan.lambdas,
@@ -220,6 +222,7 @@ class SGLSession:
                 safety=plan.safety, check_every=plan.check_every,
                 use_pallas=plan.use_pallas, min_bucket=plan.min_bucket,
                 margin=plan.margin, chunk_init=plan.chunk_init,
+                feature_shards=plan.feature_shards,
                 compile_keys=self.compile_keys)
         self._absorb(res.stats)
         return res
@@ -256,7 +259,8 @@ class SGLSession:
                 min_group_bucket=plan.min_group_bucket, margin=plan.margin,
                 chunk_init=plan.chunk_init, chunk_cap=plan.chunk_cap,
                 schedule=plan.schedule, use_pallas=plan.use_pallas,
-                mesh=plan.mesh, mus=mus, compile_keys=self.compile_keys)
+                mesh=plan.mesh, mus=mus, compile_keys=self.compile_keys,
+                feature_shards=plan.feature_shards)
         else:
             betas, kept, iters, stats, times = nn_fold_paths(
                 prob.X, y_rows, masks, lambdas, screen=screen, tol=plan.tol,
@@ -265,7 +269,8 @@ class SGLSession:
                 margin=plan.margin, chunk_init=plan.chunk_init,
                 chunk_cap=plan.chunk_cap, schedule=plan.schedule,
                 use_pallas=plan.use_pallas, mesh=plan.mesh,
-                compile_keys=self.compile_keys)
+                compile_keys=self.compile_keys,
+                feature_shards=plan.feature_shards)
         res = _cv_statistics(np.asarray(prob.X), np.asarray(prob.y), folds,
                              np.asarray(lambdas, float), betas, lam_max,
                              kept, stats, times, iters=iters, mus=mus,
@@ -299,8 +304,10 @@ class SGLSession:
         else:
             theta, c_theta, xty, lam_max_f = _fold_duals_nn(
                 prob.X, Y, masks_d, betas, lam_ref)
-        theta = np.asarray(theta, dtype=float)
-        c_theta = np.asarray(c_theta, dtype=float)
+        # np.array, not asarray: device arrays view as read-only and the
+        # at-max branch below rewrites rows in place
+        theta = np.array(theta, dtype=float)
+        c_theta = np.array(c_theta, dtype=float)
         xty = np.asarray(xty, dtype=float)
         lam_max_f = np.asarray(lam_max_f, dtype=float)
         beta0 = np.asarray(coarse.fold_betas[:, j_ref], dtype=float).copy()
@@ -381,7 +388,8 @@ class SGLSession:
                 chunk_init=plan.chunk_init, chunk_cap=plan.chunk_cap,
                 schedule=plan.schedule, use_pallas=plan.use_pallas,
                 mesh=plan.mesh, mus=st.mus, init=init,
-                compile_keys=self.compile_keys)
+                compile_keys=self.compile_keys,
+                feature_shards=plan.feature_shards)
         else:
             betas, kept, iters, stats, times = nn_fold_paths(
                 prob.X, st.y_rows, st.masks, fine, screen=screen,
@@ -390,7 +398,8 @@ class SGLSession:
                 margin=plan.margin, chunk_init=plan.chunk_init,
                 chunk_cap=plan.chunk_cap, schedule=plan.schedule,
                 use_pallas=plan.use_pallas, mesh=plan.mesh, init=init,
-                compile_keys=self.compile_keys)
+                compile_keys=self.compile_keys,
+                feature_shards=plan.feature_shards)
         fine_res = _cv_statistics(np.asarray(prob.X), np.asarray(prob.y),
                                   coarse.folds, fine, betas, coarse.lam_max,
                                   kept, stats, times, iters=iters,
@@ -434,7 +443,8 @@ class SGLSession:
                 min_group_bucket=plan.min_group_bucket, margin=plan.margin,
                 chunk_init=plan.chunk_init, chunk_cap=plan.chunk_cap,
                 schedule=plan.schedule, use_pallas=plan.use_pallas,
-                mesh=plan.mesh, compile_keys=self.compile_keys)
+                mesh=plan.mesh, compile_keys=self.compile_keys,
+                feature_shards=plan.feature_shards)
             counts += (np.abs(betas) > plan.active_tol).sum(axis=0)
             agg.merge(stats, buckets=False)
         self._absorb(agg)

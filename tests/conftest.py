@@ -8,10 +8,28 @@ NOTE: XLA_FLAGS --xla_force_host_platform_device_count is deliberately NOT
 set here — smoke tests and benches must see the 1 real CPU device; only the
 dry-run entrypoint forces 512 (see src/repro/launch/dryrun.py).
 """
+import gc
+
 import numpy as np
 import jax
+import pytest
 
 jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _release_compiled_executables():
+    """Drop jit caches after each test module.
+
+    Every compiled XLA:CPU executable keeps mmapped JIT code pages alive;
+    across the whole suite in one process the map count otherwise climbs
+    past the kernel's vm.max_map_count default (65530) and the next
+    backend_compile dies with SIGSEGV.  Cross-module cache hits are rare
+    (shapes are module-local), so this costs little wall time.
+    """
+    yield
+    jax.clear_caches()
+    gc.collect()
 
 
 def rand_cases(n_cases, *dims, seed=0):

@@ -473,3 +473,111 @@ def test_shard_over_folds_abstract_trace_matches_vmap():
         [(w.shape, w.dtype) for w in want]
     cost = resource_audit.walk_cost(closed.jaxpr, 1.0, 1)
     assert cost["collectives"] == {}
+
+
+# ---------------------------------------------------------------------------
+# 6. Feature-sharded screening: collective plan + 2-D mesh banding (PR 9)
+# ---------------------------------------------------------------------------
+
+def _feat_key(penalty="sgl"):
+    plan = Plan(n_lambdas=12, feature_shards=8)
+    if penalty == "sgl":
+        shape = compile_audit.ProblemShape(N=40, p=96, G=24, max_size=4,
+                                           penalty="sgl", dtype="float64")
+    else:
+        shape = compile_audit.ProblemShape(N=40, p=96, G=0, max_size=0,
+                                           penalty="nn_lasso",
+                                           dtype="float64")
+    return resource_audit.dominating_key(shape, plan, "path")
+
+
+@pytest.mark.parametrize("penalty", ["sgl", "nn_lasso"])
+def test_feature_collective_plan_is_psum_only(penalty):
+    """AbstractMesh snapshot of the sharded screen+cert+fit composite:
+    the plan is EXACTLY one psum — the (N,)-payload partial-fit
+    reduction — and in particular contains no all_gather of X blocks
+    (which would erase the memory win sharding exists for)."""
+    key = _feat_key(penalty)
+    assert key[0].endswith("-feat") and key[1] == 8
+    plan_c = resource_audit.feature_collective_plan(key)
+    assert set(plan_c) == {"psum"}
+    assert plan_c["psum"]["count"] == 1
+    assert plan_c["psum"]["payload_bytes"] == 40 * 8   # one (N,) f64 fit
+    # degenerate 1-shard key: no mesh, no collectives
+    one = (key[0], 1) + key[2:]
+    assert resource_audit.feature_collective_plan(one) == {}
+
+
+def test_feature_collective_plan_rejects_unsharded_keys():
+    key = ("sgl", 40, 96, 24, "float64", 100, 10, False, 96, 25, 4, 8)
+    with pytest.raises(ValueError):
+        resource_audit.feature_collective_plan(key)
+
+
+def test_seeded_gathering_screen_is_caught():
+    """A sharded screen that all-gathers the full X onto every device is
+    the violation the psum-only budget exists to catch: the extractor
+    sees the gather, and check_cards fires unexpected-collective even
+    though the config explicitly allows psum."""
+    key = _feat_key("sgl")
+
+    def leaky_screen(ops, Xs, specs, y, alpha, lams, theta, nvec, coln,
+                     gspec):
+        def body(Xb):
+            full = jax.lax.all_gather(Xb, "feature")   # (S, N, p_sh)
+            return full.sum(axis=(0, 1))               # on EVERY device
+        return ops.fmap(body, Xs)
+
+    plan_c = resource_audit.feature_collective_plan(key,
+                                                    screen_fn=leaky_screen)
+    assert "all_gather" in plan_c and "psum" in plan_c
+
+    card = resource_audit.card_for_key(key, "seeded-gather")
+    card = __import__("dataclasses").replace(card, collectives=plan_c)
+    budgets = dict(resource_audit.DEFAULT_BUDGETS)
+    budgets["configs"] = {"seeded-gather":
+                          {"peak_bytes": card.peak_bytes,
+                           "transfer_bytes": card.transfer_bytes,
+                           "allowed_collectives": ["psum"]}}
+    found = resource_audit.check_cards([card], budgets)
+    assert [f.rule for f in found] == ["resource/unexpected-collective"]
+    assert "all_gather" in found[0].detail
+    # the engine's own plan passes under the same psum-only entry
+    clean = __import__("dataclasses").replace(
+        card, collectives=resource_audit.feature_collective_plan(key))
+    assert resource_audit.check_cards([clean], budgets) == []
+
+
+def test_feat_compile_keys_predicted_and_paid():
+    """A sharded session pays only keys the static audit predicted, and
+    the universe stays within the (doubled) polylog budget."""
+    prob = _small_sgl_problem()
+    plan = Plan(n_lambdas=12, tol=1e-6, max_iter=2000, feature_shards=8)
+    sess = SGLSession(prob, plan)
+    sess.path()
+    shape = compile_audit.ProblemShape.of(prob)
+    universe = compile_audit.predict_keys(shape, plan, kinds=("path",))
+    assert any(k[0] == "sgl-feat" for k in sess.compile_keys)
+    assert compile_audit.verify_paid_keys(sess.compile_keys, universe) == []
+    assert len(universe) <= compile_audit.budget(shape, plan,
+                                                 kinds=("path",))
+
+
+class _FakeMesh2D:
+    """Test double for a 2-D folds x features mesh (shape dict + size)."""
+    def __init__(self, fold, feature):
+        self.shape = {"fold": fold, "feature": feature}
+        self.size = fold * feature
+
+
+@pytest.mark.parametrize("n_folds,want", [(2, True), (3, False),
+                                          (4, True), (8, True)])
+def test_fold_shard_compatible_on_2d_mesh(n_folds, want):
+    """Regression: on a 2x4 folds x features mesh only the fold-axis
+    size (2) gates cohort banding — a K=3 cohort must fall back to vmap,
+    while K=2/4/8 shard; demanding divisibility by all 8 devices would
+    wrongly reject every one of them."""
+    mesh = _FakeMesh2D(2, 4)
+    assert fold_shard_compatible(mesh, n_folds) is want
+    # a pure feature mesh (fold axis 1) never shards the fold rows
+    assert fold_shard_compatible(_FakeMesh2D(1, 8), n_folds) is False

@@ -1,0 +1,350 @@
+"""Feature-sharded two-layer screening: the sharded engine is the SAME
+algorithm.
+
+Two layers of proof:
+
+  1. Partition correctness — the group-aligned column partitioner never
+     splits a group across shards, degrades its shard count exactly like
+     ``distributed.sharding.divisible``, and its host-side layout shuttles
+     round-trip losslessly (pads arithmetically inert).
+  2. Parity — ``feature_shards > 1`` reproduces the single-device engine:
+     identical kept-group/kept-feature sets and bitwise-equal f64 betas
+     (every cross-shard reduction — min of shrink roots, max of
+     correlations — is exactly associative), across every screen mode,
+     both the single-path and the fold-stacked grid screens, ragged group
+     sizes, and the degenerate 1-shard partition.
+
+CI additionally runs this file under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (both
+``JAX_ENABLE_X64`` settings): the real-mesh tests below skip when fewer
+than 8 devices are visible (plain tier-1 run exercises the stacked-vmap
+executor — same math, one device) and engage ``shard_map`` on a real
+'feature' mesh when CI forces the devices, where accepted betas must
+match to 1e-8 and kept sets exactly.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from conftest import rand_cases
+
+from repro.core.cv import nn_fold_paths, sgl_fold_paths
+from repro.core.groups import GroupSpec
+from repro.core.path_engine import nn_lasso_path_batched, sgl_path_batched
+from repro.core.problem import Plan, Problem
+from repro.core.session import SGLSession
+from repro.distributed.feature_shard import (FeatureShardPlan,
+                                             effective_shards, feature_ops,
+                                             plan_feature_shards,
+                                             resolve_feature_mesh,
+                                             shard_width_bound, sharded_fit,
+                                             sharded_xtv)
+from repro.launch.mesh import make_feature_mesh
+
+MULTI_DEVICE = len(jax.devices()) >= 8
+# the sharded route's cross-shard reductions are exactly associative, but
+# XLA's per-block GEMV tiling differs from the full-X GEMM, so setup stats
+# (xty, lambda_max) can move in the last ulp; kept SETS must still match
+# exactly, betas to well under the 1e-8 acceptance bar
+BETA_ATOL = 1e-12 if not MULTI_DEVICE else 1e-8
+
+
+def _sgl_problem(seed=0, N=40, sizes=(6,) * 16, dtype=np.float64):
+    rng = np.random.default_rng(seed)
+    spec = GroupSpec.from_sizes(list(sizes))
+    p = int(np.sum(sizes))
+    X = rng.standard_normal((N, p)).astype(dtype)
+    beta = np.zeros(p)
+    for g in rng.choice(len(sizes), 3, replace=False):
+        s0 = int(np.asarray(spec.starts)[g])
+        w = int(np.asarray(spec.sizes)[g])
+        beta[s0:s0 + max(w // 2, 1)] = rng.standard_normal(max(w // 2, 1))
+    y = (X @ beta + 0.01 * rng.standard_normal(N)).astype(dtype)
+    return X, y, spec
+
+
+def _nn_problem(seed=0, N=40, p=96, dtype=np.float64):
+    rng = np.random.default_rng(seed)
+    X = np.abs(rng.standard_normal((N, p))).astype(dtype)
+    beta = np.zeros(p)
+    beta[rng.choice(p, 8, replace=False)] = np.abs(rng.standard_normal(8))
+    y = (X @ beta + 0.01 * rng.standard_normal(N)).astype(dtype)
+    return X, y
+
+
+def _fold_masks(N, K, seed=0):
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(N)
+    masks = np.zeros((K, N))
+    for k in range(K):
+        masks[k, np.setdiff1d(perm, perm[k::K])] = 1.0
+    return masks
+
+
+# ---------------------------------------------------------------------------
+# 1. Partition correctness
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_units,requested", rand_cases(
+    16, ("int", 1, 96), ("int", 1, 12), seed=21))
+def test_effective_shards_matches_bruteforce(n_units, requested):
+    """effective_shards degrades exactly like ``divisible``: the largest
+    c <= requested with n_units % c == 0, never below 1."""
+    want = max([c for c in range(1, min(requested, n_units) + 1)
+                if n_units % c == 0] or [1])
+    got = effective_shards(n_units, requested)
+    assert got == want
+    assert n_units % got == 0
+
+
+@pytest.mark.parametrize("seed,requested", rand_cases(
+    10, ("int", 0, 10**6), ("int", 2, 9), seed=22))
+def test_partitioner_never_splits_a_group(seed, requested):
+    """Every shard block covers whole groups: block boundaries land
+    exactly on group starts, and each block holds units_per_shard
+    consecutive groups."""
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(1, 14, size=int(rng.integers(4, 24))).tolist()
+    spec = GroupSpec.from_sizes(sizes)
+    p = int(sum(sizes))
+    fp = plan_feature_shards(requested, p, spec)
+    starts = np.asarray(spec.starts)
+    gid = np.asarray(spec.group_ids)
+    assert fp.n_shards == effective_shards(len(sizes), requested)
+    assert len(sizes) % fp.n_shards == 0
+    for s in range(fp.n_shards):
+        c0, w = int(fp.col_starts[s]), int(fp.widths[s])
+        # block start is a group start; block end is the next group start
+        assert c0 in set(starts.tolist()) | {0}
+        assert (c0 + w) in set(starts.tolist()) | {p}
+        covered = np.unique(gid[c0:c0 + w])
+        assert len(covered) == fp.units_per_shard
+        # no group leaks outside the block
+        for g in covered:
+            cols = np.nonzero(gid == g)[0]
+            assert cols.min() >= c0 and cols.max() < c0 + w
+
+
+@pytest.mark.parametrize("seed,requested", rand_cases(
+    8, ("int", 0, 10**6), ("int", 2, 9), seed=23))
+def test_layout_shuttles_roundtrip(seed, requested):
+    """stack_columns / shard_features / shard_groups and their inverses
+    are exact inverses on the real columns; pads stay zero."""
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(1, 10, size=12).tolist()
+    spec = GroupSpec.from_sizes(sizes)
+    p = int(sum(sizes))
+    fp = plan_feature_shards(requested, p, spec)
+    X = rng.standard_normal((7, p))
+    v = rng.standard_normal(p)
+    g = rng.standard_normal(len(sizes))
+    np.testing.assert_array_equal(fp.unshard_features(fp.stack_columns(X)),
+                                  X)
+    np.testing.assert_array_equal(fp.unshard_features(fp.shard_features(v)),
+                                  v)
+    np.testing.assert_array_equal(fp.unshard_groups(fp.shard_groups(g)), g)
+    # pads are zero -> arithmetically inert in every GEMM/reduction
+    Xs = fp.stack_columns(X)
+    assert np.all(Xs * ~fp.col_mask[:, None, :] == 0.0)
+
+
+def test_degenerate_partitions():
+    """requested=1, prime unit counts, and requested > units all collapse
+    to sane single/whole-unit partitions."""
+    spec = GroupSpec.uniform_groups(13, 4)          # prime group count
+    fp = plan_feature_shards(8, 52, spec)
+    assert fp.n_shards == 1 and fp.p_shard == 52
+    fp1 = plan_feature_shards(1, 52, spec)
+    assert fp1.n_shards == 1
+    fp_nn = plan_feature_shards(97, 96, None)       # more shards than cols
+    assert fp_nn.n_shards == effective_shards(96, 97) == 96
+
+
+@pytest.mark.parametrize("seed,requested", rand_cases(
+    8, ("int", 0, 10**6), ("int", 2, 9), seed=24))
+def test_shard_width_bound_is_an_envelope(seed, requested):
+    """The static width bound the resource audit prices at never
+    under-estimates the partitioner's real padded block width."""
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(1, 11, size=18).tolist()
+    spec = GroupSpec.from_sizes(sizes)
+    p = int(sum(sizes))
+    fp = plan_feature_shards(requested, p, spec)
+    assert fp.p_shard <= shard_width_bound(p, 18, fp.n_shards,
+                                           int(max(sizes)))
+
+
+# ---------------------------------------------------------------------------
+# 2. Single-path parity (grid screens + in-scan certification)
+# ---------------------------------------------------------------------------
+
+def _path_pair(screen, dtype=np.float64, seed=3, shards=8, sizes=(6,) * 16):
+    X, y, spec = _sgl_problem(seed=seed, sizes=sizes, dtype=dtype)
+    kw = dict(n_lambdas=12, min_ratio=0.05, screen=screen, tol=1e-9,
+              safety=1e-6)
+    ref = sgl_path_batched(X, y, spec, 0.5, **kw)
+    sh = sgl_path_batched(X, y, spec, 0.5, feature_shards=shards, **kw)
+    return ref, sh
+
+
+@pytest.mark.parametrize("screen", ["tlfre", "gapsafe", "none"])
+def test_sgl_path_parity_f64(screen):
+    """Sharded f64 path == unsharded path: identical kept-group /
+    kept-feature sets and (single device) bitwise betas."""
+    ref, sh = _path_pair(screen)
+    np.testing.assert_array_equal(ref.kept_features, sh.kept_features)
+    np.testing.assert_array_equal(ref.kept_groups, sh.kept_groups)
+    assert np.abs(ref.betas - sh.betas).max() <= BETA_ATOL
+    # the grid anchors at lam_max from the (ulp-level shape-dependent) xty
+    np.testing.assert_allclose(ref.lambdas, sh.lambdas, rtol=1e-12)
+
+
+@pytest.mark.parametrize("screen", ["dpc", "gapsafe", "none"])
+def test_nn_path_parity_f64(screen):
+    X, y = _nn_problem(seed=4)
+    kw = dict(n_lambdas=12, min_ratio=0.05, screen=screen, tol=1e-9,
+              safety=1e-6)
+    ref = nn_lasso_path_batched(X, y, **kw)
+    sh = nn_lasso_path_batched(X, y, feature_shards=8, **kw)
+    np.testing.assert_array_equal(ref.kept_features, sh.kept_features)
+    assert np.abs(ref.betas - sh.betas).max() <= BETA_ATOL
+
+
+def test_sgl_path_parity_ragged_f64():
+    """Ragged group sizes: 10 groups over 8 requested shards degrade to 5
+    shards of 2 groups with unequal padded widths — still exact."""
+    sizes = (7, 11, 5, 13, 9, 8, 17, 6, 12, 8)
+    ref, sh = _path_pair("tlfre", sizes=sizes)
+    np.testing.assert_array_equal(ref.kept_features, sh.kept_features)
+    np.testing.assert_array_equal(ref.kept_groups, sh.kept_groups)
+    assert np.abs(ref.betas - sh.betas).max() <= BETA_ATOL
+
+
+def test_sgl_path_parity_f32():
+    """f32 parity is to solver precision, not bitwise: the sharded route
+    swaps the Pallas screen for the jnp fmap, so bucket contents can
+    differ while both remain safe — betas agree to ~1e-5."""
+    ref, sh = _path_pair("tlfre", dtype=np.float32)
+    assert ref.betas.dtype == sh.betas.dtype
+    assert np.abs(ref.betas - sh.betas).max() < 5e-5
+
+
+def test_feature_shards_one_is_unsharded():
+    """feature_shards in {0, 1} take the identical unsharded route."""
+    X, y, spec = _sgl_problem(seed=6)
+    kw = dict(n_lambdas=10, min_ratio=0.05, screen="tlfre", tol=1e-9)
+    r0 = sgl_path_batched(X, y, spec, 0.5, feature_shards=0, **kw)
+    r1 = sgl_path_batched(X, y, spec, 0.5, feature_shards=1, **kw)
+    np.testing.assert_array_equal(r0.betas, r1.betas)
+    np.testing.assert_array_equal(r0.kept_features, r1.kept_features)
+
+
+# ---------------------------------------------------------------------------
+# 3. Fold-stacked parity (cv / refine / stability screens)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("screen,centered", [
+    ("tlfre", False), ("gapsafe", False), ("none", False),
+    ("tlfre", True), ("gapsafe", True)])
+def test_sgl_fold_paths_parity_f64(screen, centered):
+    """The fold-stacked (K*L, p) grid screens shard exactly like the
+    single-path screens — per-fold kept masks and betas match."""
+    X, y, spec = _sgl_problem(seed=7, sizes=(6,) * 16)
+    N = X.shape[0]
+    masks = _fold_masks(N, 3, seed=7)
+    from repro.core.path import default_lambda_grid
+    from repro.core.path_engine import lambda_max_sgl
+    lam_max, _ = lambda_max_sgl(spec, jnp.asarray(y @ X), 0.5)
+    grid = default_lambda_grid(float(lam_max), 12, 0.05)
+    mus = (masks @ X) / masks.sum(axis=1)[:, None] if centered else None
+    yy = y
+    if centered:
+        ybar = (masks @ y) / masks.sum(axis=1)
+        yy = np.broadcast_to(y, (3, N)) - ybar[:, None]
+    ref = sgl_fold_paths(X, yy, spec, 0.5, masks, grid, screen=screen,
+                         tol=1e-9, mus=mus)
+    sh = sgl_fold_paths(X, yy, spec, 0.5, masks, grid, screen=screen,
+                        tol=1e-9, mus=mus, feature_shards=8)
+    np.testing.assert_array_equal(np.asarray(ref[1]), np.asarray(sh[1]))
+    assert np.abs(np.asarray(ref[0]) - np.asarray(sh[0])).max() <= BETA_ATOL
+
+
+@pytest.mark.parametrize("screen", ["dpc", "gapsafe"])
+def test_nn_fold_paths_parity_f64(screen):
+    X, y = _nn_problem(seed=8)
+    masks = _fold_masks(X.shape[0], 3, seed=8)
+    from repro.core.path import default_lambda_grid
+    from repro.core.path_engine import lambda_max_nn
+    lam_max, _ = lambda_max_nn(jnp.asarray(y @ X))
+    grid = default_lambda_grid(float(lam_max), 12, 0.05)
+    ref = nn_fold_paths(X, y, masks, grid, screen=screen, tol=1e-9)
+    sh = nn_fold_paths(X, y, masks, grid, screen=screen, tol=1e-9,
+                       feature_shards=8)
+    np.testing.assert_array_equal(np.asarray(ref[1]), np.asarray(sh[1]))
+    assert np.abs(np.asarray(ref[0]) - np.asarray(sh[0])).max() <= BETA_ATOL
+
+
+def test_session_cv_parity_ragged():
+    """Plan(feature_shards=8) through the full session CV on ragged
+    groups (degrades to 5 shards): identical MSE path and best index."""
+    X, y, spec = _sgl_problem(
+        seed=9, sizes=(7, 11, 5, 13, 9, 8, 17, 6, 12, 8))
+    prob = Problem.sgl(X, y, spec)
+    plan = Plan(n_lambdas=10, min_ratio=0.05, n_folds=3, tol=1e-9)
+    r_ref = SGLSession(prob).cv(plan)
+    r_sh = SGLSession(prob).cv(plan.with_(feature_shards=8))
+    assert np.abs(r_ref.mse_path - r_sh.mse_path).max() <= BETA_ATOL
+    assert r_ref.best_index == r_sh.best_index
+
+
+# ---------------------------------------------------------------------------
+# 4. Real-mesh tests — need the forced-8-device CI environment
+# ---------------------------------------------------------------------------
+
+needs_mesh = pytest.mark.skipif(
+    not MULTI_DEVICE,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+@needs_mesh
+def test_real_feature_mesh_resolves():
+    mesh = make_feature_mesh(8)
+    assert mesh is not None and mesh.shape["feature"] == 8
+    assert resolve_feature_mesh(8) is not None
+    # a 16-shard request exceeds the 8 forced devices -> vmap fallback
+    assert make_feature_mesh(16) is None
+
+
+@needs_mesh
+def test_shard_map_executor_matches_vmap():
+    """The same FeatureOps program under the real mesh and under the
+    stacked-vmap executor: identical stacked correlations, fit psum
+    equal to the dense GEMV to 1e-12."""
+    rng = np.random.default_rng(11)
+    spec = GroupSpec.uniform_groups(16, 6)
+    fp = plan_feature_shards(8, 96, spec)
+    X = rng.standard_normal((30, 96))
+    v = rng.standard_normal(30)
+    b = rng.standard_normal(96)
+    Xs = jnp.asarray(fp.stack_columns(X))
+    bs = jnp.asarray(fp.shard_features(b))
+    ops_mesh = feature_ops(fp.n_shards, resolve_feature_mesh(fp.n_shards))
+    ops_vmap = feature_ops(fp.n_shards, None)
+    c_m = np.asarray(sharded_xtv(ops_mesh, Xs, jnp.asarray(v)))
+    c_v = np.asarray(sharded_xtv(ops_vmap, Xs, jnp.asarray(v)))
+    np.testing.assert_array_equal(c_m, c_v)
+    fit_m = np.asarray(sharded_fit(ops_mesh, Xs, bs))
+    assert np.abs(fit_m - X @ b).max() < 1e-12
+
+
+@needs_mesh
+def test_real_mesh_path_parity():
+    """Acceptance: on 8 forced devices, Plan(feature_shards=8) keeps the
+    exact kept sets of the single-device engine and betas to 1e-8."""
+    X, y, spec = _sgl_problem(seed=12, sizes=(6,) * 16)
+    kw = dict(n_lambdas=12, min_ratio=0.05, screen="tlfre", tol=1e-9)
+    ref = sgl_path_batched(X, y, spec, 0.5, **kw)
+    sh = sgl_path_batched(X, y, spec, 0.5, feature_shards=8, **kw)
+    np.testing.assert_array_equal(ref.kept_features, sh.kept_features)
+    np.testing.assert_array_equal(ref.kept_groups, sh.kept_groups)
+    assert np.abs(ref.betas - sh.betas).max() <= 1e-8

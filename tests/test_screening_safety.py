@@ -147,3 +147,72 @@ def test_rejection_ratio_bookkeeping():
     m = (spec.num_features - 4)
     assert abs(r1 - (spec.num_features - 8) / m) < 1e-12
     assert r2 == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Feature-sharded screening stays safe (PR 9)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,screen", [
+    (s, sc) for s in rand_cases(4, ("int", 0, 10**6), seed=16)
+    for sc in ("tlfre", "gapsafe")])
+def test_sharded_screened_path_never_discards_active(seed, screen):
+    """Safety survives the feature-sharded route: the sharded screened
+    path reproduces the unscreened baseline (a discarded active feature
+    would show up as a beta mismatch), while still rejecting features."""
+    from repro.core.path_engine import sgl_path_batched
+    X, y, spec = _problem(seed, N=50, G=20, n=5)
+    kw = dict(n_lambdas=12, min_ratio=0.05, tol=1e-11, safety=1e-6)
+    res_s = sgl_path_batched(np.asarray(X), np.asarray(y), spec, 1.0,
+                             screen=screen, feature_shards=8, **kw)
+    res_b = sgl_path_batched(np.asarray(X), np.asarray(y), spec, 1.0,
+                             screen="none", **kw)
+    np.testing.assert_allclose(res_s.betas, res_b.betas, atol=5e-6)
+    assert res_s.kept_features[1] < spec.num_features
+
+
+@pytest.mark.parametrize("seed", rand_cases(3, ("int", 0, 10**6), seed=17))
+def test_sharded_nn_path_never_discards_active(seed):
+    from repro.core.path_engine import nn_lasso_path_batched
+    rng = np.random.default_rng(seed)
+    N, p = 40, 150
+    X = rng.standard_normal((N, p))
+    beta = np.zeros(p)
+    beta[rng.choice(p, 12, replace=False)] = np.abs(rng.standard_normal(12))
+    y = X @ beta + 0.01 * rng.standard_normal(N)
+    kw = dict(n_lambdas=12, min_ratio=0.05, tol=1e-11, safety=1e-6)
+    res_s = nn_lasso_path_batched(X, y, screen="dpc", feature_shards=8, **kw)
+    res_b = nn_lasso_path_batched(X, y, screen="none", **kw)
+    np.testing.assert_allclose(res_s.betas, res_b.betas, atol=5e-6)
+    assert res_s.kept_features[1] < p
+
+
+@pytest.mark.parametrize("seed,requested", rand_cases(
+    8, ("int", 0, 10**6), ("int", 2, 9), seed=18))
+def test_feature_partition_is_group_aligned(seed, requested):
+    """Safety precondition of the sharded screens: the column partition
+    never splits a group (Theorem-15 L1 rules act on whole groups), and
+    the shard count degrades exactly like ``distributed.sharding``'s
+    divisibility rule."""
+    from repro.distributed.feature_shard import (effective_shards,
+                                                 plan_feature_shards)
+    from repro.distributed.sharding import divisible
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(1, 12, size=int(rng.integers(3, 30))).tolist()
+    spec = GroupSpec.from_sizes(sizes)
+    p = int(sum(sizes))
+    fp = plan_feature_shards(requested, p, spec)
+    gid = np.asarray(spec.group_ids)
+    # degradation law: largest c <= requested with divisible(G, c)
+    want = max([c for c in range(1, min(requested, len(sizes)) + 1)
+                if divisible(len(sizes), {"feature": c}, "feature")] or [1])
+    assert fp.n_shards == effective_shards(len(sizes), requested) == want
+    # alignment: every group's columns live in exactly one shard block
+    for g in range(len(sizes)):
+        cols = np.nonzero(gid == g)[0]
+        owner = [s for s in range(fp.n_shards)
+                 if int(fp.col_starts[s]) <= cols[0]
+                 < int(fp.col_starts[s]) + int(fp.widths[s])]
+        assert len(owner) == 1
+        s = owner[0]
+        assert cols[-1] < int(fp.col_starts[s]) + int(fp.widths[s])
