@@ -391,6 +391,58 @@ def session_bench(n_folds=3):
     ]
 
 
+def loss_logistic_bench():
+    """Sparse-group logistic path: Gap-Safe screened vs unscreened, warm.
+
+    The loss-generic engine acceptance row: the same session runs the
+    lambda grid with ``screen="gapsafe"`` (logistic-dual Gap-Safe balls)
+    and ``screen="none"``, both timed on their second pass so the row
+    measures screening, not the jit cache.  Raises if the screened betas
+    drift from the unscreened ones (the rule must be SAFE) — the smoke
+    variant of this row is the CI gate for the logistic path."""
+    from repro.core import Plan, Problem, SGLSession
+
+    N, G, n = SGL_DIMS["N"], SGL_DIMS["G"], SGL_DIMS["n"]
+    p = G * n
+    rng = np.random.default_rng(7)
+    X = rng.standard_normal((N, p))
+    beta = np.zeros(p)
+    hot = rng.choice(G, max(G // 20, 2), replace=False)
+    for g in hot:
+        beta[g * n:(g + 1) * n] = rng.standard_normal(n)
+    logits = X @ beta / np.sqrt(n * len(hot))
+    y = (logits + 0.5 * rng.standard_normal(N) > 0).astype(float)
+    spec = GroupSpec.uniform_groups(G, n)
+    prob = Problem.sgl_logistic(X, y, spec)
+    plan = Plan(alpha=0.9, n_lambdas=N_LAMBDA, min_ratio=0.1, tol=TOL,
+                max_iter=MAX_ITER, check_every=CHECK_EVERY,
+                screen="gapsafe")
+    sess = SGLSession(prob)
+    for _ in range(2):
+        t0 = time.perf_counter()
+        res_s = sess.path(plan)
+        t_s = time.perf_counter() - t0
+    for _ in range(2):
+        t0 = time.perf_counter()
+        res_b = sess.path(plan.with_(screen="none"))
+        t_b = time.perf_counter() - t0
+    agree = float(np.max(np.abs(np.asarray(res_s.betas)
+                                - np.asarray(res_b.betas))))
+    # both sides converge to a relative gap of TOL on differently-padded
+    # subproblems, so betas agree only to solver tolerance (~sqrt(gap));
+    # a SAFE-rule violation shows up orders of magnitude above this
+    if agree > 1e-3:
+        raise RuntimeError(
+            f"logistic Gap-Safe screening is UNSAFE at bench dims: "
+            f"screened betas drift {agree:.2e} from the unscreened path")
+    return [
+        ("logistic_path_screened", t_s / N_LAMBDA * 1e6,
+         round(t_b / max(t_s, 1e-9), 2)),
+        ("logistic_path_unscreened", t_b / N_LAMBDA * 1e6, 1.0),
+        ("logistic_screen_agree_max_abs", 0.0, round(agree, 8)),
+    ]
+
+
 def compile_audit_bench(n_folds=3):
     """Static compile-key audit vs the keys a real session actually pays.
 

@@ -146,6 +146,7 @@ def main() -> None:
                                             n_folds=min(folds, 3))),
             ("session", functools.partial(paper_tables.session_bench,
                                           n_folds=min(folds, 3))),
+            ("loss-logistic", paper_tables.loss_logistic_bench),
             # LAST: these import repro.analysis, which enables x64
             # process-wide
             ("compile-audit",
@@ -178,6 +179,7 @@ def main() -> None:
                                             n_folds=folds)),
             ("session", functools.partial(paper_tables.session_bench,
                                           n_folds=folds)),
+            ("loss-logistic", paper_tables.loss_logistic_bench),
             # LAST: these import repro.analysis, which enables x64
             # process-wide
             ("compile-audit",

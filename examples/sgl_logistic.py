@@ -1,0 +1,71 @@
+"""Sparse-group logistic regression through the loss-generic engine.
+
+Solves a Gap-Safe-screened lambda path on a synthetic binary
+classification problem (the engine's FISTA cores, duality gaps, and
+screening all run from the logistic `Loss` object), compares it against
+the unscreened path, adds adaptive per-group / per-feature penalty
+weights, and finishes with the sklearn-style `SGLClassifier` facade —
+single-lambda fit, probabilities, accuracy, and `GridSearchCV`
+compatibility via `get_params`/`set_params`.
+
+    PYTHONPATH=src python examples/sgl_logistic.py
+"""
+import numpy as np
+
+from repro.api import SGLClassifier
+from repro.core import GroupSpec, Plan, Problem, SGLSession
+
+# --- synthetic binary problem ---------------------------------------------
+rng = np.random.default_rng(0)
+N, G, n = 200, 40, 5
+p = G * n
+X = rng.standard_normal((N, p))
+beta_true = np.zeros(p)
+for g in rng.choice(G, 4, replace=False):          # 4 active groups
+    beta_true[g * n: g * n + 3] = rng.standard_normal(3)
+y = (rng.uniform(size=N) < 1.0 / (1.0 + np.exp(-X @ beta_true))).astype(float)
+
+spec = GroupSpec.uniform_groups(G, n)
+kw = dict(alpha=0.9, n_lambdas=20, min_ratio=0.05, tol=1e-8, max_iter=20000)
+
+# --- Gap-Safe-screened logistic path vs unscreened ------------------------
+session = SGLSession(Problem.sgl_logistic(X, y, spec))
+res = session.path(Plan(screen="gapsafe", **kw))
+base = session.path(Plan(screen="none", **kw))
+
+print(f"lambda_max = {res.lam_max:.4f}")
+print("lam/lam_max   kept features (of %d)   kept groups (of %d)" % (p, G))
+for j in range(0, 20, 4):
+    print(f"  {res.lambdas[j]/res.lam_max:8.3f}   {res.kept_features[j]:8d}"
+          f"              {res.kept_groups[j]:6d}")
+agree = np.max(np.abs(np.asarray(res.betas) - np.asarray(base.betas)))
+print(f"max |beta_screened - beta_unscreened| = {agree:.2e}  (safe rule)")
+
+# --- adaptive per-group / per-feature weights ride the same engine --------
+wspec = GroupSpec.from_sizes([n] * G,
+                             weights=rng.uniform(0.5, 2.0, G),
+                             feature_weights=rng.uniform(0.5, 2.0, p))
+wres = SGLSession(Problem.sgl_logistic(X, y, wspec)).path(
+    Plan(screen="gapsafe", **kw))
+print(f"adaptive-weight path: kept {wres.kept_features[-1]} features at "
+      f"lam/lam_max = {wres.lambdas[-1]/wres.lam_max:.3f}")
+
+# --- sklearn-style facade -------------------------------------------------
+lam = 0.2 * res.lam_max
+clf = SGLClassifier(lam=lam, alpha=0.9, groups=[n] * G).fit(X, y)
+proba = clf.predict_proba(X[:5])
+print(f"SGLClassifier(lam={lam:.3f}): accuracy {clf.score(X, y):.3f}, "
+      f"{np.count_nonzero(clf.coef_)} nonzero coefficients "
+      f"({clf.kept_features_} survived the screen)")
+print("predict_proba [P(y=0), P(y=1)] head:", np.round(proba, 3).tolist())
+
+# estimators implement get_params/set_params, so model selection just works
+try:
+    from sklearn.model_selection import GridSearchCV
+    gs = GridSearchCV(SGLClassifier(alpha=0.9, groups=[n] * G),
+                      {"lam": [0.5 * res.lam_max, 0.2 * res.lam_max]},
+                      cv=2).fit(X, y)
+    print(f"GridSearchCV best lam = {gs.best_params_['lam']:.3f} "
+          f"(accuracy {gs.best_score_:.3f})")
+except ImportError:
+    print("sklearn not installed - skipping GridSearchCV demo")

@@ -105,6 +105,9 @@ STATIC_PARAM_NAMES = {
     "max_iter", "check_every", "use_pallas", "interpret", "screen",
     "penalty", "prox", "centered", "schedule", "kind", "mesh", "n_folds",
     "specnorm_method", "safety", "engine", "selection", "center",
+    # Loss singletons are frozen hashable dataclasses closed over at trace
+    # time — branching on loss.gamma etc. is trace-time control flow
+    "loss",
 }
 
 # (file, enclosing function) pairs where block_until_ready is sanctioned:
@@ -227,15 +230,20 @@ def _lint_traced(qual, node, relpath, fmap):
             _agg(fmap, "ast/host-sync-in-traced", "error", loc, sub.lineno,
                  f"{_call_name(sub)}() on a traced value")
         elif isinstance(sub, ast.If):
-            # names tested only as `x is None` / `x is not None` probe the
-            # pytree STRUCTURE (static), not the tracer value
+            # names tested only as `x is None` / `x.attr is None` (either
+            # polarity) probe the pytree STRUCTURE, not the tracer value:
+            # an optional leaf (e.g. spec.feature_weights) is part of the
+            # treedef, so the branch is resolved at trace time
             exempt = set()
             for cmp_ in ast.walk(sub.test):
                 if (isinstance(cmp_, ast.Compare)
                         and len(cmp_.ops) == 1
-                        and isinstance(cmp_.ops[0], (ast.Is, ast.IsNot))
-                        and isinstance(cmp_.left, ast.Name)):
-                    exempt.add(cmp_.left.id)
+                        and isinstance(cmp_.ops[0], (ast.Is, ast.IsNot))):
+                    root = cmp_.left
+                    while isinstance(root, ast.Attribute):
+                        root = root.value
+                    if isinstance(root, ast.Name):
+                        exempt.add(root.id)
             offenders = (_names_in(sub.test) & dyn) - exempt
             if offenders:
                 _agg(fmap, "ast/tracer-branch", "error", loc, sub.lineno,

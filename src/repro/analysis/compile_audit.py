@@ -90,6 +90,8 @@ class ProblemShape:
     max_size: int               # 0 for nn_lasso
     penalty: str                # "sgl" | "nn_lasso"
     dtype: str                  # str(X.dtype): "float32" | "float64"
+    loss: str = "squared"       # Problem.loss: "squared" | "logistic"
+    weighted: bool = False      # spec carries adaptive feature weights
 
     @classmethod
     def of(cls, problem) -> "ProblemShape":
@@ -97,7 +99,10 @@ class ProblemShape:
         return cls(N=problem.n_samples, p=problem.n_features,
                    G=spec.num_groups if spec is not None else 0,
                    max_size=spec.max_size if spec is not None else 0,
-                   penalty=problem.penalty, dtype=str(problem.dtype))
+                   penalty=problem.penalty, dtype=str(problem.dtype),
+                   loss=getattr(problem, "loss", "squared"),
+                   weighted=(spec is not None
+                             and spec.feature_weights is not None))
 
 
 def _resolve_pallas(plan, dtype: str) -> bool:
@@ -122,6 +127,13 @@ def predict_keys(shape: ProblemShape, plan, kinds: Iterable[str] = ("path",
     N, p, G = shape.N, shape.p, shape.G
     J = _grid_len(plan)
     pallas = _resolve_pallas(plan, shape.dtype)
+    # the loss rides at the END of every key tuple (Plan(loss=...) is a
+    # compile-key dimension; nn_lasso is squared-only by construction)
+    loss = plan.resolved_loss(shape.loss)
+    if loss != "squared":
+        pallas = False          # the fused kernels are squared-only
+    if shape.weighted or getattr(plan, "feature_weights", None) is not None:
+        pallas = False          # ...and assume unit l1 thresholds
     keys: set = set()
     fbs = feature_buckets(p, plan.min_bucket)
     if n_folds is None:
@@ -151,12 +163,12 @@ def predict_keys(shape: ProblemShape, plan, kinds: Iterable[str] = ("path",
                                 keys.add(("sgl-feat", shards, N, p, G,
                                           shape.dtype, plan.max_iter,
                                           plan.check_every, on_mesh, p_b,
-                                          g_b, shape.max_size, len2))
+                                          g_b, shape.max_size, len2, loss))
                         else:
                             keys.add(("sgl", N, p, G, shape.dtype,
                                       plan.max_iter, plan.check_every,
                                       pallas, p_b, g_b, shape.max_size,
-                                      len2))
+                                      len2, loss))
         else:
             for p_b in fbs:
                 for len2 in lens:
@@ -165,12 +177,15 @@ def predict_keys(shape: ProblemShape, plan, kinds: Iterable[str] = ("path",
                             keys.add(("nn-feat", shards, N, p,
                                       shape.dtype, plan.max_iter,
                                       plan.check_every, on_mesh, p_b,
-                                      len2))
+                                      len2, "squared"))
                     else:
                         keys.add(("nn", N, p, shape.dtype, plan.max_iter,
-                                  plan.check_every, pallas, p_b, len2))
+                                  plan.check_every, pallas, p_b, len2,
+                                  "squared"))
 
-    if "cv" in kinds:
+    if "cv" in kinds and loss == "squared":
+        # fold-batched paths require the masked-row embedding, which only
+        # the squared loss supports — the engine raises before compiling
         lens = chunk_lengths(J, plan.chunk_init, plan.chunk_cap)
         centered = plan.center == "per-fold"
         if shape.penalty == "sgl":
@@ -182,14 +197,14 @@ def predict_keys(shape: ProblemShape, plan, kinds: Iterable[str] = ("path",
                             keys.add(("sgl-folds", Ka, N, p, G, shape.dtype,
                                       plan.max_iter, plan.check_every,
                                       plan.mesh, p_b, g_b, shape.max_size,
-                                      len2, centered, pallas))
+                                      len2, centered, pallas, loss))
         else:
             for Ka in range(1, n_folds + 1):
                 for p_b in fbs:
                     for len2 in lens:
                         keys.add(("nn-folds", Ka, N, p, shape.dtype,
                                   plan.max_iter, plan.check_every,
-                                  plan.mesh, p_b, len2, pallas))
+                                  plan.mesh, p_b, len2, pallas, "squared"))
     return keys
 
 
@@ -277,4 +292,11 @@ def run() -> list:
             findings.extend(audit(
                 shape, plan,
                 label=f"{shape.penalty}[{shape.dtype}]/{pname}"))
+    # the loss is a compile-key dimension: a logistic problem (Gap-Safe
+    # screening, path kind only — folds are squared-only) must stay inside
+    # the same polylog budget
+    logit = ProblemShape(N=100, p=500, G=50, max_size=10, penalty="sgl",
+                         dtype="float64", loss="logistic")
+    findings.extend(audit(logit, base.with_(screen="gapsafe"),
+                          kinds=("path",), label="sgl[logistic]/gapsafe"))
     return findings

@@ -212,9 +212,13 @@ def _entries():
     sweep_kw = dict(max_iter=_MAX_ITER, check_every=_CHECK_EVERY,
                     use_pallas=False)
 
-    def sweep_sgl(dtype, centered):
+    def sweep_sgl(dtype, centered, loss=None):
+        from ..core.losses import get_loss
         r = _rep(dtype)
-        fn = functools.partial(sweep_sgl_core, **sweep_kw)
+        kw = dict(sweep_kw)
+        if loss is not None:
+            kw["loss"] = get_loss(loss)
+        fn = functools.partial(sweep_sgl_core, **kw)
         args = [r["X"], r["X_sub"], r["y"], r["spec"], r["sub_spec"], 0.9,
                 r["lip"], r["lams"], r["valid"], r["beta0"], 1e-9, 1.0]
         if centered:
@@ -312,12 +316,24 @@ def _entries():
         return _sess._fold_duals_nn, [r["X"], r["Y"], r["masks"], betas,
                                       1.0]
 
-    def fista_sgl_entry(dtype):
+    def fista_sgl_entry(dtype, loss=None):
+        from ..core.losses import get_loss
         r = _rep(dtype)
-        fn = functools.partial(fista_sgl, max_iter=_MAX_ITER,
-                               check_every=_CHECK_EVERY, tol=1e-9)
+        kw = dict(max_iter=_MAX_ITER, check_every=_CHECK_EVERY, tol=1e-9)
+        if loss is not None:
+            kw["loss"] = get_loss(loss)
+        fn = functools.partial(fista_sgl, **kw)
         return fn, [r["X_sub"], r["y"], r["sub_spec"], 0.5, 0.9, r["lip"],
                     r["beta0"]]
+
+    def grid_radii_logistic(dtype):
+        from ..core.losses import LOGISTIC
+        r = _rep(dtype)
+        fit = jnp.zeros(_N, dtype)
+        resid = LOGISTIC.residual(r["y"], fit)
+        fn = functools.partial(_scr.gap_safe_grid_radii_loss, LOGISTIC)
+        return fn, [r["y"], r["lams"], r["y"], fit, resid,
+                    jnp.asarray(1.0, dtype)]
 
     def fista_nn_entry(dtype):
         r = _rep(dtype)
@@ -347,6 +363,8 @@ def _entries():
     return [
         ("sweep_sgl", lambda d: sweep_sgl(d, False), _P, 1),
         ("sweep_sgl_centered", lambda d: sweep_sgl(d, True), _P, 1),
+        ("sweep_sgl_logistic",
+         lambda d: sweep_sgl(d, False, loss="logistic"), _P, 1),
         ("sweep_nn", sweep_nn, _P, 1),
         ("fold_sweep_sgl", lambda d: fold_sweep_sgl(d, False), _P, 1),
         ("fold_sweep_sgl_centered", lambda d: fold_sweep_sgl(d, True),
@@ -363,7 +381,10 @@ def _entries():
         ("fold_duals_sgl", fold_duals_sgl, _P, None),
         ("fold_duals_nn", fold_duals_nn, _P, None),
         ("fista_sgl", fista_sgl_entry, _P, None),
+        ("fista_sgl_logistic",
+         lambda d: fista_sgl_entry(d, loss="logistic"), _P, None),
         ("fista_nn", fista_nn_entry, _P, None),
+        ("grid_radii_logistic", grid_radii_logistic, _P, None),
         ("serve_lambda_max_sgl", lambda d: serve_lambda_max(d, "sgl"),
          _P, None),
         ("serve_lambda_max_nn", lambda d: serve_lambda_max(d, "nn_lasso"),

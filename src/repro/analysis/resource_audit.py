@@ -263,8 +263,20 @@ def _abstract_spec(G: int, p: int, n_max: int, dtype, lead=()):
     leaves = (S(lead + (G,), jnp.int32), S(lead + (G,), jnp.int32),
               S(lead + (p,), jnp.int32), S(lead + (G,), dtype),
               S(lead + (G, n_max), jnp.int32),
-              S(lead + (G, n_max), jnp.bool_))
+              S(lead + (G, n_max), jnp.bool_),
+              None)                       # feature_weights: unweighted
     return GroupSpec.tree_unflatten((G, p, n_max, False), leaves)
+
+
+def _strip_loss(key: tuple):
+    """Split a compile key into (dims, loss-name).  Since the loss became
+    a key dimension it rides at the END of every tuple; keys from before
+    that change (committed baselines, hand-written tests) have no suffix
+    and price as squared."""
+    if key and isinstance(key[-1], str) and key[-1] in ("squared",
+                                                        "logistic"):
+        return key[:-1], key[-1]
+    return key, "squared"
 
 
 def _args_for_key(key: tuple):
@@ -276,7 +288,10 @@ def _args_for_key(key: tuple):
     for the whole session (X, y/Y, the parent GroupSpec, fold means) —
     everything else is rebuilt and shipped per launch.
     """
+    from ..core.losses import get_loss
     from ..core.path_engine import sweep_nn_core, sweep_sgl_core
+    key, loss_name = _strip_loss(key)
+    loss = get_loss(loss_name)
     kind = key[0]
     S = jax.ShapeDtypeStruct
     if kind == "sgl":
@@ -284,7 +299,8 @@ def _args_for_key(key: tuple):
          p_b, g_b, max_size, len2) = key
         dt = jnp.dtype(dtype_s)
         fn = functools.partial(sweep_sgl_core, max_iter=max_iter,
-                               check_every=check_every, use_pallas=pallas)
+                               check_every=check_every, use_pallas=pallas,
+                               loss=loss)
         args = [S((N, p), dt), S((N, p_b), dt), S((N,), dt),
                 _abstract_spec(G, p, max_size, dt),
                 _abstract_spec(g_b, p_b, max_size, dt),
@@ -311,7 +327,8 @@ def _args_for_key(key: tuple):
         dt = jnp.dtype(dtype_s)
         axes = _SGL_SWEEP_AXES + ((0,) if centered else ())
         core = functools.partial(sweep_sgl_core, max_iter=max_iter,
-                                 check_every=check_every, use_pallas=pallas)
+                                 check_every=check_every, use_pallas=pallas,
+                                 loss=loss)
         fn = jax.vmap(core, in_axes=axes)
         args = [S((N, p), dt), S((Ka, N, p_b), dt), S((Ka, N), dt),
                 _abstract_spec(G, p, max_size, dt),
@@ -557,6 +574,7 @@ def feature_collective_plan(key: tuple, screen_fn=None) -> dict:
     if not key[0].endswith("-feat"):
         raise ValueError("feature collective plans are defined for "
                          "*-feat keys")
+    key, _loss_name = _strip_loss(key)   # sharded layer is squared-only
     from ..distributed.feature_shard import (cert_nn, cert_sgl,
                                              effective_shards, feature_ops,
                                              shard_width_bound,
@@ -737,6 +755,10 @@ def dominating_key(shape: ProblemShape, plan, kind: str,
     N, p, G = shape.N, shape.p, shape.G
     J = _grid_len(plan)
     pallas = _resolve_pallas(plan, shape.dtype)
+    loss = plan.resolved_loss(shape.loss)
+    if loss != "squared" or shape.weighted or \
+            getattr(plan, "feature_weights", None) is not None:
+        pallas = False         # fused kernels are squared/unweighted-only
     p_b = max(feature_buckets(p, plan.min_bucket))
     if n_folds is None:
         n_folds = (len(plan.folds) if plan.folds is not None
@@ -754,26 +776,26 @@ def dominating_key(shape: ProblemShape, plan, kind: str,
                     # mesh flag does not affect pricing (False here)
                     return ("sgl-feat", S_eff, N, p, G, shape.dtype,
                             plan.max_iter, plan.check_every, False, p_b,
-                            g_b, shape.max_size, len2)
+                            g_b, shape.max_size, len2, loss)
             return ("sgl", N, p, G, shape.dtype, plan.max_iter,
                     plan.check_every, pallas, p_b, g_b, shape.max_size,
-                    len2)
+                    len2, loss)
         if shards > 1:
             from ..distributed.feature_shard import effective_shards
             S_eff = effective_shards(p, shards)
             if S_eff > 1:
                 return ("nn-feat", S_eff, N, p, shape.dtype, plan.max_iter,
-                        plan.check_every, False, p_b, len2)
+                        plan.check_every, False, p_b, len2, "squared")
         return ("nn", N, p, shape.dtype, plan.max_iter, plan.check_every,
-                pallas, p_b, len2)
+                pallas, p_b, len2, "squared")
     len2 = max(chunk_lengths(J, plan.chunk_init, plan.chunk_cap))
     if shape.penalty == "sgl":
         g_b = max(group_buckets(G, plan.min_group_bucket))
         return ("sgl-folds", n_folds, N, p, G, shape.dtype, plan.max_iter,
                 plan.check_every, plan.mesh, p_b, g_b, shape.max_size,
-                len2, plan.center == "per-fold", pallas)
+                len2, plan.center == "per-fold", pallas, loss)
     return ("nn-folds", n_folds, N, p, shape.dtype, plan.max_iter,
-            plan.check_every, plan.mesh, p_b, len2, pallas)
+            plan.check_every, plan.mesh, p_b, len2, pallas, "squared")
 
 
 def audit_cards(shapes=None, plan=None, n_folds: int = 4,
@@ -838,6 +860,12 @@ def run(budgets: Optional[str] = None) -> list:
     plan = Plan(n_lambdas=40, n_folds=4)
     cards = audit_cards(plan=plan, n_folds=4, mesh_size=1)
     cards.extend(feature_audit_cards(plan=plan, feature_shards=8))
+    # the loss dimension gets its own card: the logistic path sweep traces
+    # a different gap certificate (folds are squared-only, so path kind)
+    logit = ProblemShape(N=100, p=500, G=50, max_size=10, penalty="sgl",
+                         dtype="float64", loss="logistic")
+    cards.append(card_for_key(dominating_key(logit, plan, "path"),
+                              "sgl[logistic]/path"))
     # re-price the fold cards' collective plans under a sharded layout:
     # AbstractMesh tracing needs no multi-device hardware
     priced = []

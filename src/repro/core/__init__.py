@@ -7,6 +7,8 @@ Public surface (declarative API — preferred):
 
 Building blocks:
   GroupSpec            group bookkeeping (ragged + padded-dense views)
+  Loss, SQUARED, LOGISTIC, get_loss   smooth data-fit terms (loss-generic
+                       solvers, Gap-Safe screening, gap certification)
   shrink, proj_binf    the decomposition operators (Lemma 3 / Remark 2)
   lambda_max_sgl, lambda1_max, lambda2_max, lambda_max_nn
   estimate_dual_ball, gap_safe_ball
@@ -21,13 +23,16 @@ from .groups import (GroupSpec, group_sum, group_norms, group_max_abs,
                      pad_groups, broadcast_to_features)
 from .fenchel import (shrink, proj_binf, dual_decompose, sgl_dual_feasible,
                       sgl_feasibility_margin, sgl_primal_objective,
-                      sgl_dual_objective)
+                      sgl_dual_objective, sgl_penalty, weighted_l1)
+from .losses import (Loss, SquaredLoss, LogisticLoss, SQUARED, LOGISTIC,
+                     get_loss)
 from .lambda_max import (lambda_max_sgl, lambda1_max, lambda2_max,
                          group_shrink_roots, dual_scaling_sgl)
 from .estimation import DualBall, estimate_dual_ball, gap_safe_ball, normal_vector_sgl
 from .screening import (ScreenResult, tlfre_screen, sup_shrink_norm,
                         screen_stats, tlfre_screen_grid, gap_safe_screen_grid,
-                        gap_safe_grid_radii, grid_ball_geometry)
+                        gap_safe_grid_radii, gap_safe_grid_radii_loss,
+                        grid_ball_geometry)
 from .dpc import (lambda_max_nn, dpc_screen, dpc_screen_grid,
                   normal_vector_nn, dual_scaling_nn,
                   nn_primal_objective, nn_dual_objective)

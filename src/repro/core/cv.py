@@ -67,9 +67,10 @@ import jax
 import jax.numpy as jnp
 
 from .dpc import dpc_screen_grid_folds, gap_safe_screen_grid_nn, lambda_max_nn
-from .fenchel import shrink
+from .fenchel import shrink, weighted_l1
 from .groups import GroupSpec, group_norms
 from .lambda_max import lambda_max_sgl
+from .losses import SQUARED, Loss, get_loss
 from .linalg import group_spectral_norms, spectral_norm
 from .path import _bucket
 from .path_engine import (EngineStats, _expand_set, _feature_bucket,
@@ -222,10 +223,14 @@ def _screen_folds_sgl(X, Y, spec, alpha, rem, lam_bars, lam_maxs, theta_bars,
         if mus is not None:     # centered fit: (X - 1 mu^T) beta
             fit = fit - jnp.sum(beta_prev * mus, axis=1)[:, None]
         resid = Y - masks * fit
+        if spec.feature_weights is None:
+            l1 = jnp.sum(jnp.abs(beta_prev), axis=1)
+        else:
+            l1 = jax.vmap(lambda b: weighted_l1(spec, b))(beta_prev)
         pen = (alpha * jnp.sum(spec.weights.astype(X.dtype)[None, :]
                                * jax.vmap(lambda b: group_norms(spec, b))(
                                    beta_prev), axis=1)
-               + jnp.sum(jnp.abs(beta_prev), axis=1))
+               + l1)
         radii = jax.vmap(gap_safe_grid_radii)(Y, rem, theta_bars, resid,
                                               pen) * (1.0 + safety)
         _, fk_dyn = gap_safe_screen_grid_folds(spec, alpha, c_prev, radii,
@@ -326,7 +331,7 @@ _FOLD_SWEEPS: dict = {}
 
 def _fold_sweep(kind: str, mesh, n_folds: int, max_iter: int,
                 check_every: int, centered: bool = False,
-                use_pallas: bool = False):
+                use_pallas: bool = False, loss: Loss = SQUARED):
     """Jitted fold-batched sweep, cached per (kind, mesh, statics).
 
     vmaps the single-fold segment sweep over a leading fold axis; when a
@@ -336,6 +341,7 @@ def _fold_sweep(kind: str, mesh, n_folds: int, max_iter: int,
     ``shard_map``.  ``centered`` adds the per-fold column-mean argument
     (axis 0) for leakage-free per-fold centering; ``use_pallas`` routes the
     FISTA prox and certification GEMV through the fused f32 kernels.
+    ``loss`` (SGL only) swaps the smooth data-fit term of the sweep core.
     """
     core, axes = ((sweep_sgl_core, _SGL_SWEEP_AXES) if kind == "sgl"
                   else (sweep_nn_core, _NN_SWEEP_AXES))
@@ -347,12 +353,14 @@ def _fold_sweep(kind: str, mesh, n_folds: int, max_iter: int,
     # make_fold_mesh calls share one cache entry (id() would re-trace per
     # call and pin dead meshes forever)
     key = (kind, mesh if use_shard else None, max_iter, check_every,
-           centered, use_pallas)
+           centered, use_pallas, loss.name)
     fn = _FOLD_SWEEPS.get(key)
     if fn is None:
-        f = jax.vmap(functools.partial(core, max_iter=max_iter,
-                                       check_every=check_every,
-                                       use_pallas=use_pallas), in_axes=axes)
+        kwargs = dict(max_iter=max_iter, check_every=check_every,
+                      use_pallas=use_pallas)
+        if kind == "sgl":
+            kwargs["loss"] = loss
+        f = jax.vmap(functools.partial(core, **kwargs), in_axes=axes)
         if use_shard:
             from ..launch.mesh import shard_over_folds
             f = shard_over_folds(f, mesh, axes)
@@ -670,10 +678,14 @@ class _SGLFoldEngine(_FoldEngine):
 
     def __init__(self, *args, spec, alpha, Y, masks_d, col_n_f, gspec_f,
                  lam_max_f, n_bound, mus_d, mus_np,
-                 min_group_bucket: int = 16, fshard=None, **kw):
+                 min_group_bucket: int = 16, fshard=None,
+                 loss: Loss = SQUARED, **kw):
         super().__init__(*args, **kw)
         self.spec = spec
         self.alpha = alpha
+        self.loss = loss
+        self.fw_np = (None if spec.feature_weights is None
+                      else np.asarray(spec.feature_weights))
         self.Y = Y
         self.masks_d = masks_d
         self.col_n_f = col_n_f
@@ -745,7 +757,7 @@ class _SGLFoldEngine(_FoldEngine):
         for (k, _, _, _), S in zip(cohort, S_list):
             # same margin rule as the single-fold engine, per-fold c_prev
             margin_fill_sgl(S, self.Cprev[k], self.gid, self.sizes_np,
-                            self.weights_np, p_b, g_b)
+                            self.weights_np, p_b, g_b, self.fw_np)
 
         Ka = len(cohort)
         m_ks = [mk for _, _, mk, _ in cohort]
@@ -776,13 +788,14 @@ class _SGLFoldEngine(_FoldEngine):
         # sets span calls (and, in serving, problems of different N/dtype)
         key = ("sgl-folds", Ka, N, p, G, str(X.dtype), self.max_iter,
                self.check_every, self.mesh, p_b, g_b, self.spec.max_size,
-               len2, self.centered, self.pallas)
+               len2, self.centered, self.pallas, self.loss.name)
         if key not in self.seen_keys:
             self.seen_keys.add(key)
             self.stats.n_compilations += 1
         k_rows = jnp.asarray(np.asarray([k for k, _, _, _ in cohort]))
         runner = _fold_sweep("sgl", self.mesh, Ka, self.max_iter,
-                             self.check_every, self.centered, self.pallas)
+                             self.check_every, self.centered, self.pallas,
+                             loss=self.loss)
         sweep_args = [
             X, X_subs_d, self.Y[k_rows], self.spec, _stack_specs(sub_specs),
             self.alpha, L_subs, jnp.asarray(lam_pads, X.dtype),
@@ -876,7 +889,8 @@ class _NNFoldEngine(_FoldEngine):
         X_subs_d = jnp.asarray(X_subs)
         L_subs = _spectral_norms_f(X_subs_d)
         key = ("nn-folds", Ka, N, p, str(X.dtype), self.max_iter,
-               self.check_every, self.mesh, p_b, len2, self.pallas)
+               self.check_every, self.mesh, p_b, len2, self.pallas,
+               "squared")
         if key not in self.seen_keys:
             self.seen_keys.add(key)
             self.stats.n_compilations += 1
@@ -906,7 +920,7 @@ def sgl_fold_paths(X, y, spec: GroupSpec, alpha, masks, lambdas, *,
                    chunk_init: int = 8, chunk_cap: int = 64,
                    schedule: str = "elastic", use_pallas=None, mesh=None,
                    mus=None, init=None, compile_keys=None,
-                   feature_shards: int = 0):
+                   feature_shards: int = 0, loss=SQUARED):
     """Solve the SAME lambda grid on K masked row-subsets of (X, y).
 
     ``masks``: (K, N) 0/1 — 1 marks rows in subset k's training problem.
@@ -938,12 +952,27 @@ def sgl_fold_paths(X, y, spec: GroupSpec, alpha, masks, lambdas, *,
     screening/warm-start chain there instead of at each fold's lambda_max.
     ``compile_keys`` (optional set): persistent sweep-shape cache shared
     across calls, as in ``sgl_path_batched``.
+
+    ``loss`` must support the masked-row embedding (``f(0, 0) == 0`` per
+    sample); losses that don't (e.g. logistic) raise ``NotImplementedError``
+    — solve per-fold single paths instead.
     """
     if screen not in ("tlfre", "gapsafe", "none"):
         raise ValueError(f"unknown screen mode {screen!r}")
     if schedule not in SCHEDULES:
         raise ValueError(f"unknown schedule {schedule!r}; expected one of "
                          f"{SCHEDULES}")
+    loss = get_loss(loss)
+    if not loss.supports_masked_rows:
+        # the masked-row embedding needs f(0, 0) == 0 per sample so held-out
+        # rows drop out of every inner product; the logistic NLL has
+        # f(0, 0) = log 2, so fold batching would corrupt every certificate
+        raise NotImplementedError(
+            f"fold-batched paths require a loss whose masked rows vanish; "
+            f"{loss.name!r} does not support the masked-row embedding")
+    if int(feature_shards) > 1 and spec.feature_weights is not None:
+        raise ValueError("feature_shards does not support adaptive feature "
+                         "weights; drop one or the other")
     X = jnp.asarray(X)
     N, p = X.shape
     G = spec.num_groups
@@ -955,7 +984,10 @@ def sgl_fold_paths(X, y, spec: GroupSpec, alpha, masks, lambdas, *,
     lambdas = np.asarray(lambdas, dtype=float)
     J = len(lambdas)
     centered = mus is not None
-    pallas = _pallas_active(use_pallas, X.dtype)
+    # the fused f32 kernels assume unit l1 thresholds; adaptive feature
+    # weights fall back to the jnp route (same gate as the path engine)
+    pallas = (_pallas_active(use_pallas, X.dtype)
+              and spec.feature_weights is None)
 
     # ---- per-fold geometry, batched into a handful of GEMMs ---------------
     t0 = time.perf_counter()
@@ -1018,7 +1050,7 @@ def sgl_fold_paths(X, y, spec: GroupSpec, alpha, masks, lambdas, *,
         spec=spec, alpha=alpha, Y=Y, masks_d=masks_d, col_n_f=col_n_f,
         gspec_f=gspec_f, lam_max_f=lam_max_f, n_bound=n_bound, mus_d=mus_d,
         mus_np=np.asarray(mus, dtype=float) if centered else None,
-        min_group_bucket=min_group_bucket, fshard=fshard)
+        min_group_bucket=min_group_bucket, fshard=fshard, loss=loss)
     if init is not None:
         eng.load_init(init)
     for k in range(K):

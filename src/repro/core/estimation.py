@@ -75,11 +75,19 @@ def estimate_dual_ball(y, lam, lam_bar, theta_bar, n_vec) -> DualBall:
                     radius=0.5 * jnp.linalg.norm(v_perp))
 
 
-def gap_safe_ball(theta_feasible, primal_value, dual_value, lam) -> DualBall:
+def gap_safe_ball(theta_feasible, primal_value, dual_value, lam,
+                  gamma: float = 1.0) -> DualBall:
     """Beyond-paper: Gap-Safe ball (Fercoq et al., 2015) reusing the same
-    Theorem-15 sup machinery.  The dual (13) is lam^2-strongly concave, so
+    Theorem-15 sup machinery.  For a loss with smoothness constant ``gamma``
+    (gradient ``gamma``-Lipschitz per sample; 1 for squared, 1/4 for
+    logistic) the dual is ``lam^2/gamma``-strongly concave, so
 
-        ||theta* - theta|| <= sqrt(2 * gap) / lam .
+        ||theta* - theta|| <= sqrt(2 * gamma * gap) / lam .
+
+    The scaling is gated on ``gamma != 1.0`` so squared-loss graphs are
+    unchanged.
     """
     gap = jnp.maximum(primal_value - dual_value, 0.0)
+    if gamma != 1.0:
+        gap = gamma * gap
     return DualBall(center=theta_feasible, radius=jnp.sqrt(2.0 * gap) / lam)

@@ -40,10 +40,13 @@ def sgl_feasibility_margin(spec: GroupSpec, xt_theta: jnp.ndarray,
                            alpha: jnp.ndarray) -> jnp.ndarray:
     """Per-group feasibility margin of the Fenchel dual (13).
 
-    Returns ``||S_1(X_g^T theta)|| - alpha*w_g``; theta is dual-feasible iff
-    every entry is <= 0.
+    Returns ``||S_w(X_g^T theta)|| - alpha*w_g``; theta is dual-feasible iff
+    every entry is <= 0.  The shrinkage threshold is the adaptive per-feature
+    weight when the spec carries one (``S_1`` otherwise — the paper's case).
     """
-    return (group_norms(spec, shrink(xt_theta))
+    gamma = (1.0 if spec.feature_weights is None
+             else spec.feature_weights.astype(xt_theta.dtype))
+    return (group_norms(spec, shrink(xt_theta, gamma))
             - alpha * spec.weights.astype(xt_theta.dtype))
 
 
@@ -58,12 +61,28 @@ def sgl_dual_objective(y: jnp.ndarray, theta: jnp.ndarray, lam) -> jnp.ndarray:
     return 0.5 * jnp.vdot(y, y) - 0.5 * jnp.vdot(d, d)
 
 
+def weighted_l1(spec: GroupSpec, beta) -> jnp.ndarray:
+    """l1 part of the SGL penalty: ``sum w_f |beta_f]`` when the spec carries
+    adaptive feature weights, the classical ``sum |beta_f|`` otherwise (the
+    unweighted expression is kept literal so squared-loss graphs are
+    unchanged)."""
+    if spec.feature_weights is None:
+        return jnp.sum(jnp.abs(beta))
+    return jnp.sum(spec.feature_weights.astype(beta.dtype) * jnp.abs(beta))
+
+
+def sgl_penalty(spec: GroupSpec, beta, alpha) -> jnp.ndarray:
+    """SGL penalty ``alpha * sum_g W_g ||beta_g|| + sum_f w_f |beta_f|``
+    (adaptive weights included; loss-independent)."""
+    return (alpha * jnp.sum(spec.weights.astype(beta.dtype)
+                            * group_norms(spec, beta))
+            + weighted_l1(spec, beta))
+
+
 def sgl_primal_objective(X, y, beta, spec: GroupSpec, lam, alpha):
     """Objective of problem (3)."""
     r = y - X @ beta
-    pen = alpha * jnp.sum(spec.weights.astype(beta.dtype)
-                          * group_norms(spec, beta)) \
-        + jnp.sum(jnp.abs(beta))
+    pen = sgl_penalty(spec, beta, alpha)
     return 0.5 * jnp.vdot(r, r) + lam * pen
 
 

@@ -11,6 +11,13 @@ partition of ``p`` features:
 ``weights`` generalises the paper's ``sqrt(n_g)`` group weights so that a
 *reduced* problem (after feature-level screening removed some columns) keeps
 the ORIGINAL group weights — required for screening to stay exact.
+
+``feature_weights`` (optional, ``(p,)`` positive) generalises the l1 part to
+the adaptive SGL penalty ``sum_f w_f |beta_f|``.  ``None`` (the default)
+means the classical unweighted l1 and keeps every emitted graph identical to
+the pre-adaptive engine (a ``None`` pytree child contributes no leaves).
+Subset constructors carry the kept features' weights; padding columns get
+weight 1.0 (they are exactly zero, so any positive weight is equivalent).
 """
 from __future__ import annotations
 
@@ -35,21 +42,23 @@ class GroupSpec:
     num_features: int         # static
     max_size: int             # static
     uniform: bool             # static: all groups share one size
+    feature_weights: object = None   # (p,) float adaptive l1 weights, or None
 
     # -- pytree plumbing ----------------------------------------------------
     def tree_flatten(self):
         children = (self.sizes, self.starts, self.group_ids, self.weights,
-                    self.pad_index, self.pad_mask)
+                    self.pad_index, self.pad_mask, self.feature_weights)
         aux = (self.num_groups, self.num_features, self.max_size, self.uniform)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, *aux)
+        return cls(*children[:6], *aux, children[6])
 
     # -- constructors --------------------------------------------------------
     @classmethod
-    def from_sizes(cls, sizes: Sequence[int], weights=None) -> "GroupSpec":
+    def from_sizes(cls, sizes: Sequence[int], weights=None,
+                   feature_weights=None) -> "GroupSpec":
         sizes_np = np.asarray(sizes, dtype=np.int32)
         if sizes_np.ndim != 1 or (sizes_np <= 0).any():
             raise ValueError("group sizes must be a 1-D positive vector")
@@ -67,6 +76,15 @@ class GroupSpec:
             w_np = np.asarray(weights, dtype=np.float64)
             if w_np.shape != (G,):
                 raise ValueError("weights must have shape (G,)")
+        if feature_weights is not None:
+            fw_np = np.asarray(feature_weights, dtype=np.float64)
+            if fw_np.shape != (p,):
+                raise ValueError("feature_weights must have shape (p,)")
+            if (fw_np <= 0).any():
+                raise ValueError("feature_weights must be strictly positive")
+            fw = jnp.asarray(fw_np)
+        else:
+            fw = None
         return cls(
             sizes=jnp.asarray(sizes_np),
             starts=jnp.asarray(starts_np),
@@ -78,6 +96,7 @@ class GroupSpec:
             num_features=p,
             max_size=n_max,
             uniform=bool((sizes_np == sizes_np[0]).all()),
+            feature_weights=fw,
         )
 
     @classmethod
@@ -139,13 +158,23 @@ class GroupSpec:
         pad_mask = np.arange(n_max)[None, :] < np.minimum(sizes, n_max)[:, None]
         pad_idx = np.where(pad_mask, np.minimum(pad_idx, p_bucket - 1), 0)
 
+        if self.feature_weights is not None:
+            # padding columns are exactly zero, so their l1 weight (1.0) is
+            # inert; kept columns carry their original adaptive weight
+            fw_full = np.asarray(self.feature_weights)
+            fw = np.ones(p_bucket, dtype=np.float64)
+            fw[:p_kept] = fw_full[col_idx]
+            fw = jnp.asarray(fw)
+        else:
+            fw = None
+
         spec = GroupSpec(
             sizes=jnp.asarray(sizes), starts=jnp.asarray(starts),
             group_ids=jnp.asarray(group_ids), weights=jnp.asarray(weights),
             pad_index=jnp.asarray(pad_idx.astype(np.int32)),
             pad_mask=jnp.asarray(pad_mask),
             num_groups=g_bucket, num_features=p_bucket, max_size=n_max,
-            uniform=False)
+            uniform=False, feature_weights=fw)
         return spec, col_idx
 
     def subset(self, feat_keep: np.ndarray) -> tuple["GroupSpec", np.ndarray]:
@@ -161,7 +190,10 @@ class GroupSpec:
         gid = np.asarray(self.group_ids)[col_idx]
         w_full = np.asarray(self.weights)
         kept_groups, counts = np.unique(gid, return_counts=True)
-        spec = GroupSpec.from_sizes(counts, weights=w_full[kept_groups])
+        fw = (None if self.feature_weights is None
+              else np.asarray(self.feature_weights)[col_idx])
+        spec = GroupSpec.from_sizes(counts, weights=w_full[kept_groups],
+                                    feature_weights=fw)
         return spec, col_idx
 
 

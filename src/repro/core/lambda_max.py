@@ -70,13 +70,67 @@ def _padded_segment_roots(z: jnp.ndarray, target_sq: jnp.ndarray) -> jnp.ndarray
     return jnp.max(cand, axis=1)
 
 
+def _padded_segment_roots_w(z: jnp.ndarray, w: jnp.ndarray,
+                            target_sq: jnp.ndarray) -> jnp.ndarray:
+    """Adaptive-l1 generalisation: root of
+    ``sum_i (z_i/rho - w_i)_+^2 == target_sq`` per row.
+
+    z, w: (G, n_max) nonnegative (invalid slots zero in BOTH), target_sq:
+    (G,).  Feature i is active iff ``z_i/w_i > rho``, so segments are ordered
+    by the ratio; within segment k the equation is the quadratic
+
+        (||w^(k)||^2 - T) rho^2 - 2 <z^(k), w^(k)> rho + ||z^(k)||^2 = 0
+
+    which reduces to ``_padded_segment_roots`` when w == 1.  Padding slots
+    carry w == 0 and z == 0, so they never contribute.
+    """
+    tiny = jnp.asarray(1e-30, z.dtype)
+    ratio = jnp.where(w > 0, z / jnp.maximum(w, tiny), 0.0)
+    order = jnp.argsort(-ratio, axis=1)              # descending ratio
+    zs = jnp.take_along_axis(z, order, axis=1)
+    ws = jnp.take_along_axis(w, order, axis=1)
+    rs = jnp.take_along_axis(ratio, order, axis=1)
+    cs_zw = jnp.cumsum(zs * ws, axis=1)
+    cs_z2 = jnp.cumsum(zs * zs, axis=1)
+    cs_w2 = jnp.cumsum(ws * ws, axis=1)
+
+    a = cs_w2 - target_sq[:, None]
+    b = -2.0 * cs_zw
+    c = cs_z2
+    disc = jnp.maximum(b * b - 4.0 * a * c, 0.0)
+    sq = jnp.sqrt(disc)
+    safe_a = jnp.where(jnp.abs(a) > tiny, a, tiny)
+    r_plus = (-b + sq) / (2.0 * safe_a)
+    r_minus = (-b - sq) / (2.0 * safe_a)
+    r_lin = jnp.where(cs_zw > 0, cs_z2 / (2.0 * cs_zw), 0.0)
+    seg_tol = jnp.maximum(jnp.asarray(1e-9, z.dtype),
+                          128.0 * jnp.finfo(z.dtype).eps)
+    lin = jnp.abs(a) <= seg_tol * jnp.maximum(cs_w2, target_sq[:, None])
+
+    hi = rs                                          # segment bounds in rho
+    lo = jnp.concatenate([rs[:, 1:], jnp.zeros_like(rs[:, :1])], axis=1)
+    span = jnp.maximum(hi[:, :1], 1.0)
+    eps = seg_tol * span
+
+    def in_seg(r):
+        return (r >= lo - eps) & (r <= hi + eps) & (r > 0)
+
+    cand = jnp.where(lin & in_seg(r_lin), r_lin, 0.0)
+    cand = jnp.maximum(cand, jnp.where(~lin & in_seg(r_plus), r_plus, 0.0))
+    cand = jnp.maximum(cand, jnp.where(~lin & in_seg(r_minus), r_minus, 0.0))
+    return jnp.max(cand, axis=1)
+
+
 def group_shrink_roots(spec: GroupSpec, c: jnp.ndarray, alpha) -> jnp.ndarray:
     """rho_g per group for c = X^T y (Lemma 9, weighted).  Shape (G,)."""
     z = pad_groups(spec, jnp.abs(c))
     # weights are float64 master data; compute in c's dtype so f32 hot
     # loops stay f32 (_padded_segment_roots' seg_tol is dtype-aware)
     target_sq = (alpha * spec.weights.astype(z.dtype)) ** 2
-    return _padded_segment_roots(z, target_sq)
+    if spec.feature_weights is None:
+        return _padded_segment_roots(z, target_sq)
+    w = pad_groups(spec, spec.feature_weights.astype(z.dtype))
+    return _padded_segment_roots_w(z, w, target_sq)
 
 
 def lambda_max_sgl(spec: GroupSpec, xty: jnp.ndarray, alpha):

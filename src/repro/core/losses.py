@@ -1,0 +1,179 @@
+"""Loss objects: the smooth data-fit term behind the loss-generic engine.
+
+Every layer that used to assume squared loss (FISTA cores, the in-scan
+duality-gap certification, Gap-Safe ball radii, ``lambda_max``) now
+receives one of these frozen singletons.  A ``Loss`` is hashable, so it
+can ride in jit static arguments and in the engine's persistent compile
+keys (``loss.name`` is appended to every sweep-shape key).
+
+The squared-loss methods are the LITERAL expressions the engine used
+before the refactor — ``residual`` is ``y - u``, ``primal_value`` is
+``0.5 * vdot(resid, resid)``, ``dual_value`` is
+``0.5*vdot(y,y) - 0.5*vdot(y - lam*theta, y - lam*theta)`` — so threading
+``SQUARED`` through the engine is an identity transformation on the
+emitted graphs (float64 paths are bit-identical to the pre-refactor
+engine; ``tests/test_loss_generic.py`` pins this against a golden
+snapshot).
+
+``gamma`` is the smoothness constant of the per-sample loss (gradient
+Lipschitz constant in the fit ``u``): 1 for squared loss, 1/4 for
+logistic.  It scales both the FISTA step (``L = gamma * ||X||^2``) and
+the Gap-Safe ball radius (``sqrt(2*gamma*gap)/lam`` — the dual is
+``1/gamma``-strongly concave).  The engine gates the scaling on
+``gamma != 1.0`` so squared-loss traces are unchanged.
+
+``supports_masked_rows`` marks whether zero-padded rows are neutral for
+the loss: the fold-batched CV drivers embed each fold as a zero-masked
+copy of the design, which is exact for squared loss (a zero row
+contributes zero residual and zero objective) but NOT for logistic
+(``f(y=0, u=0) = log 2`` and the gradient at zero is ``-1/2``), so the
+CV drivers refuse losses without it rather than silently mis-certifying.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+_LOG2 = math.log(2.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Loss:
+    """Base interface; concrete losses override every method.
+
+    ``grad(y, u)`` / ``residual(y, u)`` are negatives of each other, but
+    both exist so every call site keeps its historical expression (the
+    solver wants the gradient, the certifier wants the residual).
+    ``residual_at_zero(y)`` is ``residual(y, 0)`` without materializing a
+    zero fit — for squared loss it returns ``y`` itself, keeping the
+    ``X.T @ y`` setup GEMV and the zero-prefix dual ``y / lam`` literal.
+    """
+    name: str = "base"
+    gamma: float = 1.0               # smoothness constant of the unit loss
+    supports_masked_rows: bool = True
+
+    def grad(self, y, u):
+        raise NotImplementedError
+
+    def residual(self, y, u):
+        raise NotImplementedError
+
+    def residual_at_zero(self, y):
+        raise NotImplementedError
+
+    def primal_value(self, y, fit, resid):
+        raise NotImplementedError
+
+    def dual_value(self, y, theta, lam):
+        raise NotImplementedError
+
+    def gap_scale(self, y):
+        raise NotImplementedError
+
+    def gap_scale_host(self, y) -> float:
+        raise NotImplementedError
+
+    def effective_tol(self, tol, dtype):
+        """Dtype-aware gap tolerance: certificates compare the FULL-problem
+        duality gap against ``tol * gap_scale``; below ~64 ulp the gap is
+        rounding noise and a float32 run would spin to ``max_iter`` and
+        drop its certificate (the way ``lambda_max`` once dropped
+        piecewise-quadratic roots to cancellation).  The floor is far
+        below every realistic float64 tolerance, so float64 behavior is
+        unchanged."""
+        return jnp.maximum(tol, 64.0 * float(jnp.finfo(dtype).eps))
+
+
+@dataclasses.dataclass(frozen=True)
+class SquaredLoss(Loss):
+    """f(u) = 0.5 * ||y - u||^2 — the paper's loss; TLFre applies."""
+    name: str = "squared"
+    gamma: float = 1.0
+    supports_masked_rows: bool = True
+
+    def grad(self, y, u):
+        return u - y
+
+    def residual(self, y, u):
+        return y - u
+
+    def residual_at_zero(self, y):
+        return y
+
+    def primal_value(self, y, fit, resid):
+        return 0.5 * jnp.vdot(resid, resid)
+
+    def dual_value(self, y, theta, lam):
+        d = y - lam * theta
+        return 0.5 * jnp.vdot(y, y) - 0.5 * jnp.vdot(d, d)
+
+    def gap_scale(self, y):
+        return jnp.maximum(0.5 * jnp.vdot(y, y), 1e-30)
+
+    def gap_scale_host(self, y) -> float:
+        return max(float(0.5 * jnp.vdot(y, y)), 1e-30)
+
+
+@dataclasses.dataclass(frozen=True)
+class LogisticLoss(Loss):
+    """f(u) = sum(log(1 + e^u) - y*u), y in {0, 1}.
+
+    The dual feasible point is the scaled residual ``theta = s*(y -
+    sigmoid(u))/lam`` with the Lemma-9 scaling ``s in (0, 1]`` — then
+    ``pi = y - lam*theta = (1-s)*y + s*sigmoid(u)`` lies in (0, 1)
+    automatically, so the binary-entropy dual is always finite and the
+    squared-loss scaling machinery (``dual_scaling_sgl``) is reused
+    verbatim.  TLFre's Theorem-12 ball is a squared-loss variational
+    identity, so logistic paths screen with Gap-Safe balls only.
+    """
+    name: str = "logistic"
+    gamma: float = 0.25
+    supports_masked_rows: bool = False
+
+    def grad(self, y, u):
+        return jax.nn.sigmoid(u) - y
+
+    def residual(self, y, u):
+        return y - jax.nn.sigmoid(u)
+
+    def residual_at_zero(self, y):
+        return y - 0.5
+
+    def primal_value(self, y, fit, resid):
+        # log(1 + e^u) - y*u via logaddexp: stable for |u| large
+        return jnp.sum(jnp.logaddexp(0.0, fit) - y * fit)
+
+    def dual_value(self, y, theta, lam):
+        # negative binary entropy of pi = y - lam*theta; the clip only
+        # guards rounding — Lemma-9 scaled duals satisfy pi in (0, 1)
+        pi = y - lam * theta
+        eps = float(jnp.finfo(pi.dtype).eps)
+        pi = jnp.clip(pi, eps, 1.0 - eps)
+        return -jnp.sum(pi * jnp.log(pi) + (1.0 - pi) * jnp.log1p(-pi))
+
+    def gap_scale(self, y):
+        # primal value at beta = 0 (the analogue of 0.5*||y||^2)
+        return jnp.asarray(y.shape[0] * _LOG2, y.dtype)
+
+    def gap_scale_host(self, y) -> float:
+        return float(y.shape[0]) * _LOG2
+
+
+SQUARED = SquaredLoss()
+LOGISTIC = LogisticLoss()
+
+_REGISTRY = {SQUARED.name: SQUARED, LOGISTIC.name: LOGISTIC}
+
+
+def get_loss(name) -> Loss:
+    """Resolve a loss by name; passes ``Loss`` instances through."""
+    if isinstance(name, Loss):
+        return name
+    loss = _REGISTRY.get(name)
+    if loss is None:
+        raise ValueError(
+            f"unknown loss {name!r}: expected one of {sorted(_REGISTRY)}")
+    return loss

@@ -69,15 +69,16 @@ from .dpc import (dpc_screen_grid, dpc_screen_grid_feat, dual_scaling_nn,
                   gap_safe_screen_grid_nn, gap_safe_screen_grid_nn_feat,
                   lambda_max_nn, normal_vector_nn)
 from .estimation import normal_vector_sgl
-from .fenchel import shrink
+from .fenchel import shrink, sgl_penalty, weighted_l1
 from .groups import GroupSpec, group_norms
 from .lambda_max import dual_scaling_sgl, lambda_max_sgl
 from .linalg import (column_norms, group_frobenius_norms,
                      group_spectral_norms, spectral_norm)
+from .losses import SQUARED, Loss, get_loss
 from .path import PathResult, _bucket, default_lambda_grid
-from .screening import (gap_safe_grid_radii, gap_safe_screen_grid,
-                        gap_safe_screen_grid_feat, tlfre_screen_grid,
-                        tlfre_screen_grid_feat)
+from .screening import (gap_safe_grid_radii, gap_safe_grid_radii_loss,
+                        gap_safe_screen_grid, gap_safe_screen_grid_feat,
+                        tlfre_screen_grid, tlfre_screen_grid_feat)
 from .solver import fista_nn_lasso, fista_sgl
 
 
@@ -169,6 +170,10 @@ _tlfre_grid_jit = functools.partial(jax.jit, static_argnames=("use_pallas",))(
 _gap_safe_grid_jit = functools.partial(
     jax.jit, static_argnames=("use_pallas",))(gap_safe_screen_grid)
 _gap_safe_radii_jit = jax.jit(gap_safe_grid_radii)
+# loss-generic radii: the Loss singleton is hashable, so it rides as a
+# static positional (one retrace per loss, not per call)
+_gap_safe_radii_loss_jit = functools.partial(
+    jax.jit, static_argnums=(0,))(gap_safe_grid_radii_loss)
 _dpc_grid_jit = jax.jit(dpc_screen_grid)
 _gap_safe_nn_jit = jax.jit(gap_safe_screen_grid_nn)
 
@@ -216,16 +221,18 @@ def _expand_set(base, fk_np, cap: int):
 
 
 def margin_fill_sgl(S, c_prev_np, gid, sizes_np, weights_np, p_b: int,
-                    g_b: int):
+                    g_b: int, feature_weights_np=None):
     """Fill spare bucket capacity with whole groups ranked by their dual
     correlation (Lemma-9 margin at the latest exact dual ``c_prev``).
 
     Shared by the single-fold engine and the fold-batched CV drivers so the
-    speculative-set rule cannot drift between them.  Mutates ``S``."""
+    speculative-set rule cannot drift between them.  Mutates ``S``.  With
+    adaptive l1 weights the shrinkage threshold is per-feature."""
     if S.all():
         return
     G = len(sizes_np)
-    shr = np.sign(c_prev_np) * np.maximum(np.abs(c_prev_np) - 1.0, 0.0)
+    thresh = 1.0 if feature_weights_np is None else feature_weights_np
+    shr = np.sign(c_prev_np) * np.maximum(np.abs(c_prev_np) - thresh, 0.0)
     score = np.sqrt(np.bincount(gid, weights=shr * shr,
                                 minlength=G)) / weights_np
     g_S = np.unique(gid[S])
@@ -261,16 +268,20 @@ def margin_fill_nn(S, c_prev_np, p_b: int):
 
 def sweep_sgl_core(X, X_sub, y, spec: GroupSpec, sub_spec: GroupSpec, alpha,
                    lipschitz, lams, valid, beta0, tol, gap_scale, mu=None, *,
-                   max_iter: int, check_every: int, use_pallas: bool):
+                   max_iter: int, check_every: int, use_pallas: bool,
+                   loss: Loss = SQUARED):
     """``mu`` (optional, (p,)): per-fold column means for leakage-free
     centering — the certification GEMV runs against the SHARED design, so
     the centered full-problem correlation is the rank-one correction
     ``X^T rho - mu * sum(rho)`` (``X_sub`` is already materialized
     centered+masked by the caller).  ``mu=None`` keeps the exact
-    uncentered graph."""
+    uncentered graph.  ``loss`` (static) swaps the smooth data-fit term in
+    both the inner solver and the full-problem certificate; the squared
+    singleton emits the historical graph bit-for-bit."""
     prox = _padded_prox(sub_spec) if use_pallas else None
     N = y.shape[0]
     p = X.shape[1]
+    tol = loss.effective_tol(tol, y.dtype)
 
     def step(carry, xs):
         beta, alive = carry
@@ -279,20 +290,18 @@ def sweep_sgl_core(X, X_sub, y, spec: GroupSpec, sub_spec: GroupSpec, alpha,
         def run(b):
             res = fista_sgl(X_sub, y, sub_spec, lam, alpha, lipschitz, b,
                             max_iter=max_iter, check_every=check_every,
-                            tol=tol, prox=prox)
-            resid = y - X_sub @ res.beta
+                            tol=tol, prox=prox, loss=loss)
+            fit = X_sub @ res.beta
+            resid = loss.residual(y, fit)
             rho = resid / lam
             c = _xtv(X, rho, use_pallas).astype(b.dtype)   # full-X GEMV
             if mu is not None:
                 c = c - (mu * jnp.sum(rho)).astype(b.dtype)
             s = dual_scaling_sgl(spec, c, alpha)
             theta = (s * rho).astype(b.dtype)
-            pen = (alpha * jnp.sum(sub_spec.weights.astype(b.dtype)
-                                   * group_norms(sub_spec, res.beta))
-                   + jnp.sum(jnp.abs(res.beta)))
-            pval = 0.5 * jnp.vdot(resid, resid) + lam * pen
-            d = y - lam * theta
-            dval = 0.5 * jnp.vdot(y, y) - 0.5 * jnp.vdot(d, d)
+            pen = sgl_penalty(sub_spec, res.beta, alpha)
+            pval = loss.primal_value(y, fit, resid) + lam * pen
+            dval = loss.dual_value(y, theta, lam)
             gap = pval - dval
             # a max_iter-capped solve only certifies on the provably safe
             # row 0 (legacy accepts its best-effort solution there too)
@@ -315,7 +324,8 @@ def sweep_sgl_core(X, X_sub, y, spec: GroupSpec, sub_spec: GroupSpec, alpha,
 
 
 _sweep_sgl = functools.partial(
-    jax.jit, static_argnames=("max_iter", "check_every", "use_pallas"))(
+    jax.jit,
+    static_argnames=("max_iter", "check_every", "use_pallas", "loss"))(
         sweep_sgl_core)
 
 
@@ -324,6 +334,7 @@ def sweep_nn_core(X, X_sub, y, lipschitz, lams, valid, beta0, tol,
                   use_pallas: bool):
     N = y.shape[0]
     p = X.shape[1]
+    tol = SQUARED.effective_tol(tol, y.dtype)
 
     def step(carry, xs):
         beta, alive = carry
@@ -382,6 +393,7 @@ def sweep_sgl_core_feat(Xs, X_sub, y, specs, sub_spec: GroupSpec, alpha,
     from ..distributed.feature_shard import cert_sgl
     N = y.shape[0]
     S_n, _, p_sh = Xs.shape
+    tol = SQUARED.effective_tol(tol, y.dtype)
 
     def step(carry, xs):
         beta, alive = carry
@@ -428,6 +440,7 @@ def sweep_nn_core_feat(Xs, X_sub, y, lipschitz, lams, valid, beta0, tol,
     from ..distributed.feature_shard import cert_nn
     N = y.shape[0]
     S_n, _, p_sh = Xs.shape
+    tol = SQUARED.effective_tol(tol, y.dtype)
 
     def step(carry, xs):
         beta, alive = carry
@@ -495,7 +508,8 @@ def sgl_path_batched(X, y, spec: GroupSpec, alpha, *, lambdas=None,
                      min_bucket: int = 64, min_group_bucket: int = 16,
                      margin: float = 0.125, chunk_init: int = 8,
                      feature_shards: int = 0,
-                     compile_keys: Optional[set] = None) -> PathResult:
+                     compile_keys: Optional[set] = None,
+                     loss=SQUARED) -> PathResult:
     """Batched SGL path: grid screening, speculative bucketed sweeps with
     in-scan certification.
 
@@ -520,9 +534,20 @@ def sgl_path_batched(X, y, spec: GroupSpec, alpha, *, lambdas=None,
     shape seen in ANY earlier call never recompiles — threading one set
     across calls makes ``EngineStats.n_compilations`` count compilations
     actually paid, not shapes per call.
+
+    ``loss`` (a ``core.losses`` singleton or name) swaps the smooth
+    data-fit term.  Non-squared losses screen with Gap-Safe balls only
+    (TLFre's Theorem-12 ball is squared-loss algebra) and run the pure-jnp
+    route (no Pallas kernels, no feature shards).
     """
     if screen not in ("tlfre", "gapsafe", "none"):
         raise ValueError(f"unknown screen mode {screen!r}")
+    loss = get_loss(loss)
+    squared = loss.name == "squared"
+    if not squared and screen == "tlfre":
+        raise ValueError(
+            f"screen='tlfre' requires squared loss (Theorem 12 is "
+            f"squared-loss algebra); use screen='gapsafe' for {loss.name}")
     X = jnp.asarray(X)
     y = jnp.asarray(y)
     N, p = X.shape
@@ -530,11 +555,17 @@ def sgl_path_batched(X, y, spec: GroupSpec, alpha, *, lambdas=None,
 
     fshard = None
     if feature_shards and int(feature_shards) > 1:
+        if not squared or spec.feature_weights is not None:
+            raise ValueError(
+                "feature_shards requires squared loss and no adaptive "
+                "feature weights (the sharded cert/spec stacking does not "
+                "carry them)")
         from ..distributed import feature_shard as _fs
         plan_fs = _fs.plan_feature_shards(int(feature_shards), p, spec)
         if plan_fs.n_shards > 1:
             fshard = plan_fs
-    pallas = _pallas_active(use_pallas, X.dtype) and fshard is None
+    pallas = (_pallas_active(use_pallas, X.dtype) and fshard is None
+              and squared and spec.feature_weights is None)
 
     t0 = time.perf_counter()
     if fshard is not None:
@@ -560,9 +591,13 @@ def sgl_path_batched(X, y, spec: GroupSpec, alpha, *, lambdas=None,
         n_boundary = _fs.sharded_fit(
             fops, Xs, jnp.where(gid_stack == g_star, w_s, 0.0))
         L_full = None          # only the full-bucket fallback needs it
+        r0 = y                 # sharded route is squared-loss only
         jax.block_until_ready((col_n_s, gspec_s, n_boundary))
     else:
-        xty = X.T @ y
+        # -grad of the loss at beta = 0; y itself for squared loss, so the
+        # squared setup GEMV X.T @ y is unchanged
+        r0 = loss.residual_at_zero(y)
+        xty = X.T @ r0
         lam_max, g_star = lambda_max_sgl(spec, xty, alpha)
         lam_max = float(lam_max)
         col_n = column_norms(X)
@@ -590,9 +625,11 @@ def sgl_path_batched(X, y, spec: GroupSpec, alpha, *, lambdas=None,
     gid = np.asarray(spec.group_ids)
     sizes_np = np.asarray(spec.sizes)
     weights_np = np.asarray(spec.weights)
-    gap_scale = max(float(0.5 * jnp.vdot(y, y)), 1e-30)
+    fw_np = (None if spec.feature_weights is None
+             else np.asarray(spec.feature_weights))
+    gap_scale = loss.gap_scale_host(y)
 
-    theta_bar = y / lam_max             # exact dual at lam_max (Thm 8)
+    theta_bar = r0 / lam_max            # exact dual at lam_max (Thm 8)
     if fshard is not None:
         c_prev_s = xty_s / lam_max      # stacked (S, p_shard) X^T theta_bar
         c_prev = xty_np / lam_max       # host view for the margin ranking
@@ -638,6 +675,20 @@ def sgl_path_batched(X, y, spec: GroupSpec, alpha, *, lambdas=None,
             fk_np = fshard.unshard_features(
                 np.asarray(fk_s))[:L_rem]       # one host sync
             stats.n_screens += 1
+        elif not squared:
+            # non-squared losses have no Theorem-12 ball; the Gap-Safe
+            # ball around the latest certified dual is the only safe rule
+            fit = X @ beta_dev
+            resid = loss.residual(y, fit)
+            pen = (alpha * jnp.sum(spec.weights *
+                                   group_norms(spec, beta_dev))
+                   + weighted_l1(spec, beta_dev))
+            radii = _gap_safe_radii_loss_jit(
+                loss, y, rem, theta_bar, fit, resid, pen) * (1.0 + safety)
+            _, fk = _gap_safe_grid_jit(spec, alpha, c_prev, radii,
+                                       col_n, gspec, use_pallas=False)
+            fk_np = np.asarray(fk)[:L_rem]      # one host sync
+            stats.n_screens += 1
         else:
             n_vec = normal_vector_sgl(X, y, spec, lam_bar, lam_max,
                                       theta_bar, g_star)
@@ -650,7 +701,7 @@ def sgl_path_batched(X, y, spec: GroupSpec, alpha, *, lambdas=None,
                 resid = y - X @ beta_dev
                 pen = (alpha * jnp.sum(spec.weights *
                                        group_norms(spec, beta_dev))
-                       + jnp.sum(jnp.abs(beta_dev)))
+                       + weighted_l1(spec, beta_dev))
                 radii = _gap_safe_radii_jit(y, rem, theta_bar, resid,
                                             pen) * (1.0 + safety)
                 _, fk_dyn = _gap_safe_grid_jit(spec, alpha, c_prev, radii,
@@ -668,7 +719,7 @@ def sgl_path_batched(X, y, spec: GroupSpec, alpha, *, lambdas=None,
             k = (int(np.argmax(row_counts > 0)) if row_counts.any()
                  else len(row_counts))
             lam_bar = float(lambdas[j + k - 1])
-            theta_bar = y / lam_bar
+            theta_bar = r0 / lam_bar
             if fshard is not None:
                 c_prev_s = xty_s / lam_bar
                 c_prev = xty_np / lam_bar
@@ -687,7 +738,7 @@ def sgl_path_batched(X, y, spec: GroupSpec, alpha, *, lambdas=None,
         g_S = np.unique(gid[S])
         g_b = min(_bucket(len(g_S) + 2, min_group_bucket), G + 1)
         margin_fill_sgl(S, np.asarray(c_prev), gid, sizes_np, weights_np,
-                        p_b, g_b)
+                        p_b, g_b, fw_np)
 
         m = min(J - j, spec_m)
 
@@ -717,14 +768,16 @@ def sgl_path_batched(X, y, spec: GroupSpec, alpha, *, lambdas=None,
         valid = np.arange(len2) < m
         # the key must cover every dim jax's jit cache discriminates on —
         # a persistent compile_keys set spans problems (serving), so shape
-        # and static args belong in it, not just the bucket dims
+        # and static args belong in it, not just the bucket dims; the loss
+        # name rides at the END so positional readers stay valid
         if fshard is not None:
             key = ("sgl-feat", fshard.n_shards, N, p, G, str(X.dtype),
                    max_iter, check_every, fmesh is not None, p_b,
-                   sub_spec.num_groups, sub_spec.max_size, len2)
+                   sub_spec.num_groups, sub_spec.max_size, len2, loss.name)
         else:
             key = ("sgl", N, p, G, str(X.dtype), max_iter, check_every,
-                   pallas, p_b, sub_spec.num_groups, sub_spec.max_size, len2)
+                   pallas, p_b, sub_spec.num_groups, sub_spec.max_size, len2,
+                   loss.name)
         if key not in seen_keys:
             seen_keys.add(key)
             stats.n_compilations += 1
@@ -739,7 +792,7 @@ def sgl_path_batched(X, y, spec: GroupSpec, alpha, *, lambdas=None,
                 X, X_sub, y, spec, sub_spec, alpha, L_sub,
                 jnp.asarray(lam_pad, X.dtype), jnp.asarray(valid),
                 jnp.asarray(beta0), tol, gap_scale, max_iter=max_iter,
-                check_every=check_every, use_pallas=pallas)
+                check_every=check_every, use_pallas=pallas, loss=loss)
         good_np = np.asarray(good_b[:m])     # one host sync
         k = int(np.argmin(good_np)) if not good_np.all() else m
         if k == 0:
@@ -950,10 +1003,11 @@ def nn_lasso_path_batched(X, y, *, lambdas=None, n_lambdas: int = 100,
         valid = np.arange(len2) < m
         if fshard is not None:
             key = ("nn-feat", fshard.n_shards, N, p, str(X.dtype),
-                   max_iter, check_every, fmesh is not None, p_b, len2)
+                   max_iter, check_every, fmesh is not None, p_b, len2,
+                   "squared")
         else:
             key = ("nn", N, p, str(X.dtype), max_iter, check_every, pallas,
-                   p_b, len2)
+                   p_b, len2, "squared")
         if key not in seen_keys:
             seen_keys.add(key)
             stats.n_compilations += 1

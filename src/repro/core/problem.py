@@ -32,10 +32,14 @@ import jax.numpy as jnp
 from .groups import GroupSpec
 
 PENALTIES = ("sgl", "nn_lasso")
+LOSSES = ("squared", "logistic")
 
-# screening rules per penalty family; "auto" resolves to the first entry
+# screening rules per penalty family; "auto" resolves to the first entry.
+# TLFre's variational dual geometry is squared-loss-only, so non-squared
+# losses restrict to the Gap-Safe family (see _SCREENS_NON_SQUARED).
 _SCREENS = {"sgl": ("tlfre", "gapsafe", "none"),
             "nn_lasso": ("dpc", "gapsafe", "none")}
+_SCREENS_NON_SQUARED = ("gapsafe", "none")
 
 _WARNED: set = set()
 
@@ -84,11 +88,18 @@ class Problem:
     y: jnp.ndarray               # (N,) response
     spec: Optional[GroupSpec]    # group structure (None only for nn_lasso)
     penalty: str                 # "sgl" | "nn_lasso"
+    loss: str = "squared"        # smooth data-fit term: "squared"|"logistic"
 
     def __post_init__(self):
         if self.penalty not in PENALTIES:
             raise ValueError(f"unknown penalty {self.penalty!r}; "
                              f"expected one of {PENALTIES}")
+        if self.loss not in LOSSES:
+            raise ValueError(f"unknown loss {self.loss!r}; "
+                             f"expected one of {LOSSES}")
+        if self.penalty == "nn_lasso" and self.loss != "squared":
+            raise ValueError("nn_lasso supports only the squared loss "
+                             "(the DPC dual geometry is squared-only)")
         if self.X.ndim != 2 or self.y.ndim != 1:
             raise ValueError("X must be (N, p) and y (N,)")
         if self.X.shape[0] != self.y.shape[0]:
@@ -96,6 +107,10 @@ class Problem:
                              f"y has {self.y.shape[0]}")
         if self.penalty == "sgl" and self.spec is None:
             raise ValueError("penalty='sgl' requires a GroupSpec")
+        if self.loss == "logistic":
+            y_np = np.asarray(self.y)
+            if not np.all((y_np == 0.0) | (y_np == 1.0)):
+                raise ValueError("loss='logistic' requires labels in {0, 1}")
 
     @classmethod
     def sgl(cls, X, y, groups=None, dtype=None) -> "Problem":
@@ -103,6 +118,15 @@ class Problem:
         y = jnp.asarray(y, X.dtype)
         return cls(X=X, y=y, spec=as_group_spec(groups, X.shape[1]),
                    penalty="sgl")
+
+    @classmethod
+    def sgl_logistic(cls, X, y, groups=None, dtype=None) -> "Problem":
+        """Sparse-group logistic regression: the SGL penalty on the
+        binomial negative log-likelihood.  ``y`` must be 0/1 labels."""
+        X = jnp.asarray(X, dtype)
+        y = jnp.asarray(y, X.dtype)
+        return cls(X=X, y=y, spec=as_group_spec(groups, X.shape[1]),
+                   penalty="sgl", loss="logistic")
 
     @classmethod
     def nn_lasso(cls, X, y, dtype=None) -> "Problem":
@@ -138,6 +162,14 @@ class Plan:
     lambdas: Optional[np.ndarray] = None   # explicit grid, else auto-anchor:
     n_lambdas: int = 100                   # paper protocol — n log-spaced
     min_ratio: float = 0.01                # points from lambda_max down
+    # ---- loss / adaptive weights ------------------------------------------
+    loss: str = "auto"           # "auto" (follow the Problem) | "squared"
+    #                              | "logistic"
+    group_weights: object = None   # (G,) adaptive group weights overriding
+    #                              the spec's sqrt(n_g) defaults, or None
+    feature_weights: object = None  # (p,) adaptive per-feature l1 weights
+    #                              (strictly positive), or None (classical
+    #                              unit l1 — identical compiled graphs)
     # ---- screening / solver ----------------------------------------------
     screen: str = "auto"         # tlfre|gapsafe|none (sgl), dpc|... (nn)
     engine: str = "batched"      # batched | legacy
@@ -197,19 +229,42 @@ class Plan:
         """A copy with the given fields replaced (a Plan is immutable)."""
         return dataclasses.replace(self, **overrides)
 
-    def resolved_screen(self, penalty: str) -> str:
+    def resolved_loss(self, problem_loss: str = "squared") -> str:
+        """The effective loss: the plan's explicit choice, or the
+        problem's (``loss='auto'``, the default)."""
+        loss = problem_loss if self.loss == "auto" else self.loss
+        if loss not in LOSSES:
+            raise ValueError(f"unknown loss {loss!r}; "
+                             f"expected one of {('auto',) + LOSSES}")
+        return loss
+
+    def resolved_screen(self, penalty: str, loss: str = "squared") -> str:
         allowed = _SCREENS[penalty]
+        if loss != "squared":
+            allowed = _SCREENS_NON_SQUARED
         screen = allowed[0] if self.screen == "auto" else self.screen
         if screen not in allowed:
             raise ValueError(f"screen={screen!r} is not valid for "
-                             f"penalty={penalty!r}; expected one of "
-                             f"{('auto',) + allowed}")
+                             f"penalty={penalty!r} with loss={loss!r}; "
+                             f"expected one of {('auto',) + allowed}")
         return screen
 
-    def validate_for_penalty(self, penalty: str) -> None:
+    def validate_for_penalty(self, penalty: str,
+                             loss: str = "squared") -> None:
         """Penalty-level validation (no Problem instance needed — used by
         the serving front-end, which batches jobs by penalty)."""
-        self.resolved_screen(penalty)
+        self.resolved_screen(penalty, loss)
+        if loss != "squared":
+            if self.engine != "batched":
+                raise ValueError(f"loss={loss!r} requires engine='batched' "
+                                 "(the legacy driver is squared-only)")
+            if int(self.feature_shards) > 1:
+                raise ValueError(f"loss={loss!r} does not support "
+                                 "feature_shards (the sharded screens are "
+                                 "squared-only)")
+        if self.feature_weights is not None and int(self.feature_shards) > 1:
+            raise ValueError("adaptive feature_weights do not support "
+                             "feature_shards; drop one or the other")
         if self.engine not in ("batched", "legacy"):
             raise ValueError(f"unknown engine {self.engine!r}")
         if self.schedule not in ("elastic", "lockstep"):
@@ -231,7 +286,15 @@ class Plan:
                              "nonnegativity geometry)")
 
     def validate(self, problem: Problem) -> None:
-        self.validate_for_penalty(problem.penalty)
+        loss = self.resolved_loss(problem.loss)
+        if problem.penalty == "nn_lasso" and loss != "squared":
+            raise ValueError("nn_lasso supports only the squared loss")
+        self.validate_for_penalty(problem.penalty, loss)
+        if problem.penalty == "nn_lasso" and (
+                self.group_weights is not None
+                or self.feature_weights is not None):
+            raise ValueError("adaptive weights are SGL-only (the nn_lasso "
+                             "penalty has no group/feature weights)")
 
     def grid(self, lam_max: float) -> np.ndarray:
         """The lambda grid this plan runs: explicit, or the paper protocol

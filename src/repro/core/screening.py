@@ -59,14 +59,22 @@ def tlfre_screen(X, spec: GroupSpec, alpha, ball: DualBall,
     """
     r = ball.radius * (1.0 + safety)
     c = X.T @ ball.center                       # (p,)  — the screening GEMV
-    shr = shrink(c)
-    c_norm = group_norms(spec, shr)
-    c_inf = group_max_abs(spec, c)
-    s = sup_shrink_norm(c_norm, c_inf, r * group_specnorms)      # (G,)
+    if spec.feature_weights is None:
+        shr = shrink(c)
+        c_norm = group_norms(spec, shr)
+        c_inf = group_max_abs(spec, c)
+        s = sup_shrink_norm(c_norm, c_inf, r * group_specnorms)  # (G,)
+        l2_thresh = 1.0
+    else:
+        # adaptive l1: the exact Theorem-15 sup has no weighted closed form;
+        # S_w is 1-Lipschitz, so ||S_w(c)|| + r is a safe (conservative) sup
+        w = spec.feature_weights.astype(c.dtype)
+        s = group_norms(spec, shrink(c, w)) + r * group_specnorms
+        l2_thresh = w
     group_keep = s >= alpha * spec.weights                       # (L1)
 
     t = jnp.abs(c) + r * col_norms                               # (p,) Thm 16
-    feat_keep = t > 1.0                                          # (L2)
+    feat_keep = t > l2_thresh                                    # (L2)
     feat_keep = feat_keep & broadcast_to_features(spec, group_keep)
     return ScreenResult(group_keep, feat_keep, s, t)
 
@@ -135,14 +143,29 @@ def _grid_group_stats_folds(spec: GroupSpec, C: jnp.ndarray,
 
 def _grid_rules(spec: GroupSpec, alpha, C, radii, col_norms, group_specnorms,
                 use_pallas: bool = False):
-    """Theorems 15/16 evaluated for every (lambda, group/feature) pair."""
-    c_norm, c_inf = _grid_group_stats(spec, C, use_pallas)
+    """Theorems 15/16 evaluated for every (lambda, group/feature) pair.
+
+    With adaptive per-feature weights the exact Theorem-15 sup has no
+    weighted closed form; ``S_w`` is 1-Lipschitz, so ``||S_w(c)|| + r`` is a
+    safe (conservative) sup and the feature threshold becomes ``w_f``.  The
+    unweighted branch is the literal pre-adaptive code (bit-identical
+    graphs; the Pallas stats route only exists there)."""
     r_g = radii[:, None] * group_specnorms[None, :]
-    s = sup_shrink_norm(c_norm, c_inf, r_g)
+    if spec.feature_weights is None:
+        c_norm, c_inf = _grid_group_stats(spec, C, use_pallas)
+        s = sup_shrink_norm(c_norm, c_inf, r_g)
+        group_keep = s >= alpha * spec.weights[None, :]
+
+        t = jnp.abs(C) + radii[:, None] * col_norms[None, :]
+        feat_keep = (t > 1.0) & group_keep[:, spec.group_ids]
+        return group_keep, feat_keep
+    w = spec.feature_weights.astype(C.dtype)
+    c_norm = jax.vmap(lambda row: group_norms(spec, shrink(row, w)))(C)
+    s = c_norm + r_g
     group_keep = s >= alpha * spec.weights[None, :]
 
     t = jnp.abs(C) + radii[:, None] * col_norms[None, :]
-    feat_keep = (t > 1.0) & group_keep[:, spec.group_ids]
+    feat_keep = (t > w[None, :]) & group_keep[:, spec.group_ids]
     return group_keep, feat_keep
 
 
@@ -197,14 +220,25 @@ def _grid_rules_folds(spec: GroupSpec, alpha, C, radii, col_norms_f,
 
     ``C`` (K, L, p), ``radii`` (K, L), per-fold norms (K, p) / (K, G).
     The group statistics go through ``_grid_group_stats_folds`` so the f32
-    path keeps the fused fold-stack kernel."""
-    c_norm, c_inf = _grid_group_stats_folds(spec, C, use_pallas)
+    path keeps the fused fold-stack kernel.  Adaptive weights take the same
+    conservative 1-Lipschitz bound as ``_grid_rules``."""
     r_g = radii[:, :, None] * group_specnorms_f[:, None, :]
-    s = sup_shrink_norm(c_norm, c_inf, r_g)
+    if spec.feature_weights is None:
+        c_norm, c_inf = _grid_group_stats_folds(spec, C, use_pallas)
+        s = sup_shrink_norm(c_norm, c_inf, r_g)
+        group_keep = s >= alpha * spec.weights[None, None, :]
+
+        t = jnp.abs(C) + radii[:, :, None] * col_norms_f[:, None, :]
+        feat_keep = (t > 1.0) & group_keep[:, :, spec.group_ids]
+        return group_keep, feat_keep
+    w = spec.feature_weights.astype(C.dtype)
+    c_norm = jax.vmap(jax.vmap(
+        lambda row: group_norms(spec, shrink(row, w))))(C)
+    s = c_norm + r_g
     group_keep = s >= alpha * spec.weights[None, None, :]
 
     t = jnp.abs(C) + radii[:, :, None] * col_norms_f[:, None, :]
-    feat_keep = (t > 1.0) & group_keep[:, :, spec.group_ids]
+    feat_keep = (t > w[None, None, :]) & group_keep[:, :, spec.group_ids]
     return group_keep, feat_keep
 
 
@@ -251,14 +285,22 @@ def gap_safe_screen_grid_folds(spec: GroupSpec, alpha, c_thetas, radii,
     and broadcast across the grid — L-fold less reduction work than the
     naive per-(fold, lambda) evaluation."""
     K, L = radii.shape
-    c_norm, c_inf = _grid_group_stats_folds(spec, c_thetas[:, None, :],
-                                            use_pallas)       # (K, 1, G)
     r_g = radii[:, :, None] * group_specnorms_f[:, None, :]   # (K, L, G)
-    s = sup_shrink_norm(c_norm, c_inf, r_g)
+    if spec.feature_weights is None:
+        c_norm, c_inf = _grid_group_stats_folds(spec, c_thetas[:, None, :],
+                                                use_pallas)   # (K, 1, G)
+        s = sup_shrink_norm(c_norm, c_inf, r_g)
+        l2_thresh = 1.0
+    else:
+        w = spec.feature_weights.astype(c_thetas.dtype)
+        c_norm = jax.vmap(
+            lambda ct: group_norms(spec, shrink(ct, w)))(c_thetas)
+        s = c_norm[:, None, :] + r_g
+        l2_thresh = w[None, None, :]
     group_keep = s >= alpha * spec.weights[None, None, :]
     t = (jnp.abs(c_thetas)[:, None, :]
          + radii[:, :, None] * col_norms_f[:, None, :])
-    feat_keep = (t > 1.0) & group_keep[:, :, spec.group_ids]
+    feat_keep = (t > l2_thresh) & group_keep[:, :, spec.group_ids]
     return group_keep, feat_keep
 
 
@@ -382,10 +424,31 @@ def gap_safe_screen_grid_folds_feat(ops, specs, alpha, c_thetas_s, radii,
 def gap_safe_grid_radii(y, lambdas, theta, resid, penalty):
     """sqrt(2 * gap_l) / lam_l per grid point, for primal iterate beta with
     residual ``resid = y - X beta`` and penalty ``Omega(beta)`` (so
-    P_l = 0.5||resid||^2 + lam_l * Omega) and feasible dual theta."""
+    P_l = 0.5||resid||^2 + lam_l * Omega) and feasible dual theta.
+
+    Squared loss only — the squared-loss engine keeps this literal graph;
+    other losses go through ``gap_safe_grid_radii_loss``."""
     lambdas = jnp.asarray(lambdas)
     p_half = 0.5 * jnp.vdot(resid, resid)
     d = y[None, :] - lambdas[:, None] * theta[None, :]
     dual = 0.5 * jnp.vdot(y, y) - 0.5 * jnp.sum(d * d, axis=1)
     gap = jnp.maximum(p_half + lambdas * penalty - dual, 0.0)
+    return jnp.sqrt(2.0 * gap) / lambdas
+
+
+def gap_safe_grid_radii_loss(loss, y, lambdas, theta, fit, resid, penalty):
+    """Loss-generic Gap-Safe grid radii: ``sqrt(2 * gamma * gap_l) / lam_l``
+    per grid point (the dual is ``lam^2/gamma``-strongly concave for a loss
+    with smoothness constant ``gamma``).
+
+    ``fit = X beta`` and ``resid = loss.residual(y, fit)`` for the primal
+    iterate; ``theta`` must be dual-feasible (feasibility does not depend on
+    lambda, so one certified dual serves the whole grid).
+    """
+    lambdas = jnp.asarray(lambdas)
+    p_smooth = loss.primal_value(y, fit, resid)
+    dual = jax.vmap(lambda lam: loss.dual_value(y, theta, lam))(lambdas)
+    gap = jnp.maximum(p_smooth + lambdas * penalty - dual, 0.0)
+    if loss.gamma != 1.0:
+        gap = loss.gamma * gap
     return jnp.sqrt(2.0 * gap) / lambdas

@@ -51,7 +51,9 @@ from .cv import (CVResult, EngineStats, FoldState, StabilityResult,
                  nn_fold_paths, per_fold_centering, sgl_fold_paths,
                  subsample_masks)
 from .dpc import dual_scaling_nn, lambda_max_nn
+from .groups import GroupSpec
 from .lambda_max import dual_scaling_sgl, lambda_max_sgl
+from .losses import get_loss
 from .path_engine import (nn_lasso_path_batched, sgl_path_batched)
 from .problem import Plan, Problem
 
@@ -117,6 +119,7 @@ class _CVState:
     y_rows: np.ndarray           # (N,) or (K, N) — responses the folds saw
     mus: Optional[np.ndarray]    # (K, p) per-fold means (center="per-fold")
     y_means: Optional[np.ndarray]
+    spec: Optional[GroupSpec] = None  # effective (possibly reweighted) spec
 
 
 class SGLSession:
@@ -136,8 +139,14 @@ class SGLSession:
         self.default_plan = plan if plan is not None else Plan()
         self.compile_keys: set = set()   # persistent sweep-shape cache
         self.stats = EngineStats()       # aggregate over the session
-        self._lam_max_cache: dict = {}   # alpha -> full-data lambda_max
-        self._xty = problem.X.T @ problem.y
+        self._lam_max_cache: dict = {}   # grid-anchor cache (see lambda_max)
+        if problem.loss == "squared":
+            self._xty = problem.X.T @ problem.y
+        else:
+            # the grid anchor correlates X with the gradient of the loss at
+            # beta = 0 (y for squared; y - 1/2 for logistic)
+            self._xty = problem.X.T @ get_loss(problem.loss).residual_at_zero(
+                problem.y)
         self._last_cv: Optional[_CVState] = None
 
     # ---- plumbing ---------------------------------------------------------
@@ -154,6 +163,35 @@ class SGLSession:
         # session — per-segment bucket tuples would accumulate unboundedly
         self.stats.merge(stats, buckets=False)
 
+    def _effective(self, plan: Plan):
+        """(loss name, effective GroupSpec) for this plan.
+
+        Adaptive ``plan.group_weights`` / ``plan.feature_weights`` overlay
+        the problem's spec; with neither set the problem's spec object is
+        returned unchanged (identity-preserving, so the default path keeps
+        the exact jit cache hits of earlier sessions)."""
+        loss = plan.resolved_loss(self.problem.loss)
+        spec = self.problem.spec
+        if spec is None:
+            return loss, None
+        if plan.group_weights is not None:
+            gw = np.asarray(plan.group_weights, dtype=np.float64)
+            if gw.shape != (spec.num_groups,):
+                raise ValueError(f"group_weights must have shape "
+                                 f"({spec.num_groups},), got {gw.shape}")
+            if not np.all(gw > 0):
+                raise ValueError("group_weights must be strictly positive")
+            spec = dataclasses.replace(spec, weights=jnp.asarray(gw))
+        if plan.feature_weights is not None:
+            fw = np.asarray(plan.feature_weights, dtype=np.float64)
+            if fw.shape != (spec.num_features,):
+                raise ValueError(f"feature_weights must have shape "
+                                 f"({spec.num_features},), got {fw.shape}")
+            if not np.all(fw > 0):
+                raise ValueError("feature_weights must be strictly positive")
+            spec = dataclasses.replace(spec, feature_weights=jnp.asarray(fw))
+        return loss, spec
+
     def lambda_max(self, alpha: float = 1.0) -> float:
         """Full-data grid anchor, cached per alpha on device-resident
         ``X^T y``."""
@@ -168,12 +206,17 @@ class SGLSession:
                 self.problem.spec, self._xty, alpha)[0])
         return self._lam_max_cache[alpha]
 
-    def _grid(self, plan: Plan):
-        """(lambdas, lam_max) under the legacy anchoring convention."""
+    def _grid(self, plan: Plan, spec: Optional[GroupSpec] = None):
+        """(lambdas, lam_max) under the legacy anchoring convention.
+        ``spec`` (default: the problem's) anchors reweighted plans at THEIR
+        lambda_max — the per-alpha cache only serves the unweighted spec."""
         if plan.lambdas is not None:
             lambdas = np.asarray(plan.lambdas, dtype=float)
             return lambdas, float(lambdas.max())
-        lam_max = self.lambda_max(plan.alpha)
+        if spec is None or spec is self.problem.spec:
+            lam_max = self.lambda_max(plan.alpha)
+        else:
+            lam_max = float(lambda_max_sgl(spec, self._xty, plan.alpha)[0])
         if self.problem.penalty == "nn_lasso" and lam_max <= 0:
             raise ValueError("max_i <x_i, y> <= 0: nonnegative Lasso "
                              "solution is identically zero")
@@ -185,12 +228,13 @@ class SGLSession:
         """Solve one lambda path; compiled buckets persist across calls."""
         plan = self._resolve(plan, overrides)
         prob = self.problem
-        screen = plan.resolved_screen(prob.penalty)
+        loss, spec = self._effective(plan)
+        screen = plan.resolved_screen(prob.penalty, loss)
         if plan.engine == "legacy":
             from .path import nn_lasso_path, sgl_path
             if prob.penalty == "sgl":
                 return sgl_path(
-                    prob.X, prob.y, prob.spec, plan.alpha,
+                    prob.X, prob.y, spec, plan.alpha,
                     lambdas=plan.lambdas, n_lambdas=plan.n_lambdas,
                     min_ratio=plan.min_ratio, screen=screen, tol=plan.tol,
                     max_iter=plan.max_iter, safety=plan.safety,
@@ -203,7 +247,7 @@ class SGLSession:
                 safety=plan.safety, check_every=plan.check_every)
         if prob.penalty == "sgl":
             res = sgl_path_batched(
-                prob.X, prob.y, prob.spec, plan.alpha,
+                prob.X, prob.y, spec, plan.alpha,
                 lambdas=plan.lambdas, n_lambdas=plan.n_lambdas,
                 min_ratio=plan.min_ratio, screen=screen, tol=plan.tol,
                 max_iter=plan.max_iter, safety=plan.safety,
@@ -213,7 +257,7 @@ class SGLSession:
                 min_group_bucket=plan.min_group_bucket, margin=plan.margin,
                 chunk_init=plan.chunk_init,
                 feature_shards=plan.feature_shards,
-                compile_keys=self.compile_keys)
+                compile_keys=self.compile_keys, loss=loss)
         else:
             res = nn_lasso_path_batched(
                 prob.X, prob.y, lambdas=plan.lambdas,
@@ -247,12 +291,13 @@ class SGLSession:
         """Fold-batched K-fold CV; records warm state for ``refine``."""
         plan = self._resolve(plan, overrides)
         prob = self.problem
-        screen = plan.resolved_screen(prob.penalty)
-        lambdas, lam_max = self._grid(plan)
+        loss, spec = self._effective(plan)
+        screen = plan.resolved_screen(prob.penalty, loss)
+        lambdas, lam_max = self._grid(plan, spec)
         folds, masks, mus, y_means, y_rows = self._fold_setup(plan)
         if prob.penalty == "sgl":
             betas, kept, iters, stats, times = sgl_fold_paths(
-                prob.X, y_rows, prob.spec, plan.alpha, masks, lambdas,
+                prob.X, y_rows, spec, plan.alpha, masks, lambdas,
                 screen=screen, tol=plan.tol, max_iter=plan.max_iter,
                 safety=plan.safety, specnorm_method=plan.specnorm_method,
                 check_every=plan.check_every, min_bucket=plan.min_bucket,
@@ -260,7 +305,7 @@ class SGLSession:
                 chunk_init=plan.chunk_init, chunk_cap=plan.chunk_cap,
                 schedule=plan.schedule, use_pallas=plan.use_pallas,
                 mesh=plan.mesh, mus=mus, compile_keys=self.compile_keys,
-                feature_shards=plan.feature_shards)
+                feature_shards=plan.feature_shards, loss=loss)
         else:
             betas, kept, iters, stats, times = nn_fold_paths(
                 prob.X, y_rows, masks, lambdas, screen=screen, tol=plan.tol,
@@ -277,7 +322,8 @@ class SGLSession:
                              y_means=y_means)
         self._absorb(stats)
         self._last_cv = _CVState(plan=plan, result=res, masks=masks,
-                                 y_rows=y_rows, mus=mus, y_means=y_means)
+                                 y_rows=y_rows, mus=mus, y_means=y_means,
+                                 spec=spec)
         return res
 
     def _fold_state_at(self, j_ref: int) -> FoldState:
@@ -298,8 +344,9 @@ class SGLSession:
         mus_d = (None if st.mus is None
                  else jnp.asarray(st.mus, prob.dtype))
         if prob.penalty == "sgl":
+            spec = st.spec if st.spec is not None else prob.spec
             theta, c_theta, xty, lam_max_f = _fold_duals_sgl(
-                prob.X, prob.spec, st.plan.alpha, Y, masks_d, betas,
+                prob.X, spec, st.plan.alpha, Y, masks_d, betas,
                 lam_ref, mus_d)
         else:
             theta, c_theta, xty, lam_max_f = _fold_duals_nn(
@@ -347,10 +394,11 @@ class SGLSession:
         # reconstructed duals are feasible for the coarse alpha's dual set,
         # and masks/centering are reused from the coarse run — reject plans
         # that silently change either
-        changed = [f for f in ("alpha", "center", "n_folds", "seed")
+        changed = [f for f in ("alpha", "center", "n_folds", "seed", "loss")
                    if getattr(plan, f) != getattr(st.plan, f)]
-        if plan.folds is not st.plan.folds:
-            changed.append("folds")
+        for f in ("folds", "group_weights", "feature_weights"):
+            if getattr(plan, f) is not getattr(st.plan, f):
+                changed.append(f)
         if changed:
             raise ValueError(
                 f"refine cannot change {changed} (the warm per-fold state "
@@ -377,10 +425,11 @@ class SGLSession:
             init, warm_lam = None, float("nan")
 
         prob = self.problem
-        screen = plan.resolved_screen(prob.penalty)
+        loss, spec = self._effective(plan)
+        screen = plan.resolved_screen(prob.penalty, loss)
         if prob.penalty == "sgl":
             betas, kept, iters, stats, times = sgl_fold_paths(
-                prob.X, st.y_rows, prob.spec, plan.alpha, st.masks, fine,
+                prob.X, st.y_rows, spec, plan.alpha, st.masks, fine,
                 screen=screen, tol=plan.tol, max_iter=plan.max_iter,
                 safety=plan.safety, specnorm_method=plan.specnorm_method,
                 check_every=plan.check_every, min_bucket=plan.min_bucket,
@@ -389,7 +438,7 @@ class SGLSession:
                 schedule=plan.schedule, use_pallas=plan.use_pallas,
                 mesh=plan.mesh, mus=st.mus, init=init,
                 compile_keys=self.compile_keys,
-                feature_shards=plan.feature_shards)
+                feature_shards=plan.feature_shards, loss=loss)
         else:
             betas, kept, iters, stats, times = nn_fold_paths(
                 prob.X, st.y_rows, st.masks, fine, screen=screen,
@@ -408,7 +457,7 @@ class SGLSession:
         # the refined run becomes the new warm state: refine() composes
         self._last_cv = _CVState(plan=plan, result=fine_res, masks=st.masks,
                                  y_rows=st.y_rows, mus=st.mus,
-                                 y_means=st.y_means)
+                                 y_means=st.y_means, spec=spec)
         idx = (fine_res.best_index if plan.selection == "min"
                else fine_res.index_1se)
         return RefineResult(
@@ -426,8 +475,9 @@ class SGLSession:
         if prob.penalty != "sgl":
             raise ValueError("stability selection is implemented for the "
                              "SGL penalty")
-        screen = plan.resolved_screen("sgl")
-        lambdas, _ = self._grid(plan)
+        loss, spec = self._effective(plan)
+        screen = plan.resolved_screen("sgl", loss)
+        lambdas, _ = self._grid(plan, spec)
         N, p = prob.n_samples, prob.n_features
         masks = subsample_masks(N, plan.n_subsamples, plan.subsample_frac,
                                 plan.seed)
@@ -435,7 +485,7 @@ class SGLSession:
         agg = EngineStats()
         for b0 in range(0, plan.n_subsamples, plan.batch_size):
             betas, _, _, stats, _ = sgl_fold_paths(
-                prob.X, prob.y, prob.spec, plan.alpha,
+                prob.X, prob.y, spec, plan.alpha,
                 masks[b0:b0 + plan.batch_size], lambdas, screen=screen,
                 tol=plan.tol, max_iter=plan.max_iter, safety=plan.safety,
                 specnorm_method=plan.specnorm_method,
@@ -444,7 +494,7 @@ class SGLSession:
                 chunk_init=plan.chunk_init, chunk_cap=plan.chunk_cap,
                 schedule=plan.schedule, use_pallas=plan.use_pallas,
                 mesh=plan.mesh, compile_keys=self.compile_keys,
-                feature_shards=plan.feature_shards)
+                feature_shards=plan.feature_shards, loss=loss)
             counts += (np.abs(betas) > plan.active_tol).sum(axis=0)
             agg.merge(stats, buckets=False)
         self._absorb(agg)

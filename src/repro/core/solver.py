@@ -18,9 +18,10 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .fenchel import sgl_primal_objective, sgl_dual_objective
+from .fenchel import sgl_penalty
 from .groups import GroupSpec
 from .lambda_max import dual_scaling_sgl
+from .losses import SQUARED, Loss
 from .prox import nn_lasso_prox, sgl_prox
 from . import dpc as _dpc
 
@@ -36,39 +37,51 @@ class SolveResult(NamedTuple):
 # SGL
 # ---------------------------------------------------------------------------
 
-def _sgl_gap(X, y, spec, lam, alpha, beta):
+def _sgl_gap(X, y, spec, lam, alpha, beta, loss: Loss = SQUARED):
     """(primal, dual, theta_feasible) at beta."""
-    rho = (y - X @ beta) / lam
+    fit = X @ beta
+    resid = loss.residual(y, fit)
+    rho = resid / lam
     s = dual_scaling_sgl(spec, X.T @ rho, alpha)
     theta = s * rho
-    p = sgl_primal_objective(X, y, beta, spec, lam, alpha)
-    d = sgl_dual_objective(y, theta, lam)
+    p = loss.primal_value(y, fit, resid) + lam * sgl_penalty(spec, beta, alpha)
+    d = loss.dual_value(y, theta, lam)
     return p, d, theta
 
 
 def fista_sgl(X, y, spec: GroupSpec, lam, alpha, lipschitz, beta0, *,
               max_iter: int = 20000, check_every: int = 10, tol: float = 1e-9,
-              prox=None) -> SolveResult:
+              prox=None, loss: Loss = SQUARED) -> SolveResult:
     """Un-jitted FISTA core for problem (3); traceable inside scans.
 
     ``lam`` may be a traced scalar, so the batched path engine can sweep a
     whole lambda chunk inside one ``lax.scan`` without retracing.  ``prox``
     optionally overrides the (z, t_l1, t_group) -> z' proximal step — the
-    engine injects the fused Pallas kernel here.
+    engine injects the fused Pallas kernel here.  ``loss`` swaps the smooth
+    data-fit term; ``lipschitz`` stays the design bound ``||X||^2`` — the
+    loss's smoothness factor is applied here (gated so squared-loss traces
+    are unchanged).
     """
     dtype = X.dtype
     beta0 = beta0.astype(dtype)
+    if loss.gamma != 1.0:
+        lipschitz = lipschitz * loss.gamma
+    tol = loss.effective_tol(tol, dtype)
     t_step = 1.0 / lipschitz
-    t_l1 = t_step * lam                       # lam2 = lam
+    if spec.feature_weights is None:
+        t_l1 = t_step * lam                   # lam2 = lam
+    else:
+        # adaptive l1: per-feature thresholds; shrink() broadcasts
+        t_l1 = t_step * lam * spec.feature_weights.astype(dtype)
     # spec.weights is float64 master data; cast once at the boundary so the
     # scan body stays dtype-pure (no silent f64 promotion on f32 problems)
     t_group = t_step * lam * alpha * spec.weights.astype(dtype)
-    gap_scale = jnp.maximum(0.5 * jnp.vdot(y, y), 1e-30)
+    gap_scale = loss.gap_scale(y)
     if prox is None:
         prox = lambda v, a, b: sgl_prox(spec, v, a, b)
 
     def prox_grad(z):
-        g = X.T @ (X @ z - y)
+        g = X.T @ loss.grad(y, X @ z)
         # spec.weights is float64 for exactness; pin the iterate dtype so
         # float32 problems under jax_enable_x64 keep a stable carry
         return prox(z - t_step * g, t_l1, t_group).astype(dtype)
@@ -91,25 +104,28 @@ def fista_sgl(X, y, spec: GroupSpec, lam, alpha, lipschitz, beta0, *,
     def body(state):
         carry, it, _ = state
         carry, _ = jax.lax.scan(inner, carry, None, length=check_every)
-        pval, dval, _ = _sgl_gap(X, y, spec, lam, alpha, carry[0])
+        pval, dval, _ = _sgl_gap(X, y, spec, lam, alpha, carry[0], loss)
         return carry, it + check_every, (pval - dval).astype(dtype)
 
     init = ((beta0, beta0, jnp.asarray(1.0, dtype)), jnp.asarray(0), jnp.asarray(jnp.inf, dtype))
     (beta, _, _), iters, gap = jax.lax.while_loop(cond, body, init)
-    _, _, theta = _sgl_gap(X, y, spec, lam, alpha, beta)
+    _, _, theta = _sgl_gap(X, y, spec, lam, alpha, beta, loss)
     return SolveResult(beta, theta, gap, iters)
 
 
-@functools.partial(jax.jit, static_argnames=("max_iter", "check_every"))
+@functools.partial(jax.jit,
+                   static_argnames=("max_iter", "check_every", "loss"))
 def solve_sgl(X, y, spec: GroupSpec, lam, alpha, lipschitz, beta0=None, *,
               max_iter: int = 20000, check_every: int = 10,
-              tol: float = 1e-9) -> SolveResult:
+              tol: float = 1e-9, loss: Loss = SQUARED) -> SolveResult:
     """FISTA for problem (3).  ``tol`` is a relative duality-gap tolerance
-    (gap <= tol * 0.5||y||^2)."""
+    (gap <= tol * loss.gap_scale(y); 0.5||y||^2 for squared loss).
+    ``lipschitz`` is the design bound ``||X||^2`` for every loss."""
     p = X.shape[1]
     beta0 = jnp.zeros(p, X.dtype) if beta0 is None else beta0
     return fista_sgl(X, y, spec, lam, alpha, lipschitz, beta0,
-                     max_iter=max_iter, check_every=check_every, tol=tol)
+                     max_iter=max_iter, check_every=check_every, tol=tol,
+                     loss=loss)
 
 
 # ---------------------------------------------------------------------------
@@ -130,8 +146,9 @@ def fista_nn_lasso(X, y, lam, lipschitz, beta0, *, max_iter: int = 20000,
     """Un-jitted FISTA core for problem (80); traceable inside scans."""
     dtype = X.dtype
     beta0 = beta0.astype(dtype)
+    tol = SQUARED.effective_tol(tol, dtype)
     t_step = 1.0 / lipschitz
-    gap_scale = jnp.maximum(0.5 * jnp.vdot(y, y), 1e-30)
+    gap_scale = SQUARED.gap_scale(y)
 
     def inner(carry, _):
         beta, z, tk = carry

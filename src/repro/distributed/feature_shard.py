@@ -197,8 +197,10 @@ def plan_feature_shards(requested: int, p: int,
                     int(col_starts[s]), p_shard, spec.max_size, spec.uniform)
         for s in range(S)
     ]
+    # the sharded route is unweighted-only (guarded by the engines), so
+    # the feature_weights child stays a literal None across the stack
     leaves = [jnp.stack([ls.tree_flatten()[0][i] for ls in locals_])
-              for i in range(6)]
+              for i in range(6)] + [None]
     stacked = GroupSpec.tree_unflatten(locals_[0].tree_flatten()[1],
                                        tuple(leaves))
     return FeatureShardPlan(

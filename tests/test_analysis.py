@@ -109,6 +109,40 @@ def test_seeded_transfer_in_scan_is_caught():
     assert "jaxpr/transfer-in-loop" in [f.rule for f in found]
 
 
+def test_seeded_upcast_in_loss_closure_is_caught():
+    """A loss whose methods silently compute in f64 upcasts the f32 hot
+    loop through the Loss indirection — the lint must see through the
+    closure exactly as it sees a bare constant (the loss-generic refactor
+    must not open a purity blind spot)."""
+    import functools
+    from repro.core.groups import GroupSpec
+    from repro.core.losses import LogisticLoss
+    from repro.core.solver import fista_sgl
+
+    class _LeakyLogistic(LogisticLoss):
+        def grad(self, y, u):
+            return (jax.nn.sigmoid(u.astype(jnp.float64))
+                    - y.astype(jnp.float64)).astype(u.dtype)
+
+    rng = np.random.default_rng(0)
+    spec = GroupSpec.from_sizes([3, 2, 5])
+    X = jnp.asarray(rng.standard_normal((8, 10)), jnp.float32)
+    y = jnp.asarray((rng.standard_normal(8) > 0), jnp.float32)
+    fn = functools.partial(fista_sgl, max_iter=40, check_every=10,
+                           tol=1e-6, loss=_LeakyLogistic())
+    found = jaxpr_lint.lint_traceable(
+        fn, X, y, spec, 0.5, 0.9, jnp.asarray(4.0, jnp.float32),
+        jnp.zeros(10, jnp.float32), name="seeded-loss", dtype="float32")
+    assert "jaxpr/upcast-in-loop" in [f.rule for f in found]
+    # the honest singleton is clean on the same trace
+    honest = functools.partial(fista_sgl, max_iter=40, check_every=10,
+                               tol=1e-6, loss=LogisticLoss())
+    clean = jaxpr_lint.lint_traceable(
+        honest, X, y, spec, 0.5, 0.9, jnp.asarray(4.0, jnp.float32),
+        jnp.zeros(10, jnp.float32), name="clean-loss", dtype="float32")
+    assert clean == []
+
+
 def test_clean_scan_has_no_findings():
     def good(x):
         def body(c, xi):

@@ -187,6 +187,66 @@ def test_sharded_nn_path_never_discards_active(seed):
     assert res_s.kept_features[1] < p
 
 
+# ---------------------------------------------------------------------------
+# Loss-generic + adaptive-weight screening stays safe (PR 10)
+# ---------------------------------------------------------------------------
+
+def _logistic_problem(seed, N=50, G=20, n=5):
+    rng = np.random.default_rng(seed)
+    p = G * n
+    X = rng.standard_normal((N, p))
+    beta = np.zeros(p)
+    for g in rng.choice(G, 3, replace=False):
+        idx = np.arange(g * n, (g + 1) * n)
+        beta[rng.choice(idx, 2, replace=False)] = rng.standard_normal(2)
+    y = (X @ beta + 0.5 * rng.standard_normal(N) > 0).astype(float)
+    return X, y, GroupSpec.uniform_groups(G, n)
+
+
+@pytest.mark.parametrize("seed,alpha", rand_cases(
+    6, ("int", 0, 10**6), ("float", 0.4, 1.5), seed=19))
+def test_logistic_gapsafe_screening_is_safe(seed, alpha):
+    """Gap-Safe screening from the logistic dual never discards an active
+    coefficient: the screened path reproduces the unscreened baseline
+    while still rejecting features."""
+    from repro.core.path_engine import sgl_path_batched
+    X, y, spec = _logistic_problem(seed)
+    kw = dict(n_lambdas=10, min_ratio=0.1, tol=1e-10, max_iter=50_000,
+              min_bucket=16, loss="logistic")
+    res_s = sgl_path_batched(X, y, spec, alpha, screen="gapsafe", **kw)
+    res_b = sgl_path_batched(X, y, spec, alpha, screen="none", **kw)
+    # gap_scale = N log 2, so the absolute gap at tol=1e-10 leaves betas
+    # agreeing to ~1e-5 (both sides solve differently-padded subproblems)
+    np.testing.assert_allclose(res_s.betas, res_b.betas, atol=3e-5)
+    # the sequential Gap-Safe radius needs a converged warm gap, so the
+    # first rejection can land later than TLFre's — require rejection
+    # SOMEWHERE on the path, not at a fixed grid index
+    assert np.min(np.asarray(res_s.kept_features)) < spec.num_features
+
+
+@pytest.mark.parametrize("seed,screen", [
+    (s, sc) for s in rand_cases(4, ("int", 0, 10**6), seed=20)
+    for sc in ("tlfre", "gapsafe")])
+def test_weighted_screening_is_safe(seed, screen):
+    """Adaptive per-group/per-feature weights flow through the weighted
+    shrink roots, the two-layer rules, and the prox: the screened path
+    reproduces the unscreened baseline on a weighted spec."""
+    from repro.core.path_engine import sgl_path_batched
+    rng = np.random.default_rng(seed)
+    X, y, _ = _problem(seed, N=50, G=20, n=5)
+    spec = GroupSpec.from_sizes(
+        [5] * 20, weights=rng.uniform(0.5, 2.0, 20),
+        feature_weights=rng.uniform(0.5, 2.0, 100))
+    kw = dict(n_lambdas=12, min_ratio=0.05, tol=1e-11, safety=1e-6,
+              max_iter=50_000, min_bucket=16)
+    res_s = sgl_path_batched(np.asarray(X), np.asarray(y), spec, 1.0,
+                             screen=screen, **kw)
+    res_b = sgl_path_batched(np.asarray(X), np.asarray(y), spec, 1.0,
+                             screen="none", **kw)
+    np.testing.assert_allclose(res_s.betas, res_b.betas, atol=5e-6)
+    assert res_s.kept_features[1] < spec.num_features
+
+
 @pytest.mark.parametrize("seed,requested", rand_cases(
     8, ("int", 0, 10**6), ("int", 2, 9), seed=18))
 def test_feature_partition_is_group_aligned(seed, requested):
